@@ -1,0 +1,30 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64)
+
+
+def print_table(rows: List[Dict], cols=None, title: str = "") -> None:
+    if title:
+        print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or list(rows[0])
+    widths = {c: max(len(str(c)), max(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print("  ".join(str(c).ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == float("inf"):
+            return "OOM"
+        if v != 0 and (abs(v) < 1e-3 or abs(v) >= 1e5):
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,42 @@
+"""Paper Figure 1: per-prompt latency and energy across LLaMA 1B/3B/7B,
+batch sizes 1-64, RTX6000 Ada vs T4 (150 generated tokens per prompt)."""
+import math
+
+from repro.core.energy import (LLAMA_1B, LLAMA_3B, LLAMA_7B, prompt_report)
+from repro.core.hardware import RTX6000ADA, T4
+
+from benchmarks.common import BATCHES, print_table
+
+MODELS = {"1B": LLAMA_1B, "3B": LLAMA_3B, "7B": LLAMA_7B}
+
+
+def run():
+    rows = []
+    for mname, w in MODELS.items():
+        for b in BATCHES:
+            row = {"model": mname, "batch": b}
+            for prof in (RTX6000ADA, T4):
+                rep = prompt_report(prof, w, b)
+                row[f"{prof.name}_latency_s"] = rep.t_total
+                row[f"{prof.name}_energy_j"] = rep.energy_j
+            if all(math.isfinite(row[f"{p.name}_latency_s"])
+                   for p in (RTX6000ADA, T4)):
+                row["t4_slowdown"] = (row["t4_latency_s"] /
+                                      row["rtx6000ada_latency_s"])
+            rows.append(row)
+    return rows
+
+
+def derived() -> float:
+    """T4/Ada batch-1 latency ratio for 7B (paper: 2.2x)."""
+    return (prompt_report(T4, LLAMA_7B, 1).t_total /
+            prompt_report(RTX6000ADA, LLAMA_7B, 1).t_total)
+
+
+def main():
+    print_table(run(), title="Figure 1 — per-prompt latency & energy")
+    print(f"7B batch-1 T4 slowdown: {derived():.2f}x (paper: 2.2x)")
+
+
+if __name__ == "__main__":
+    main()

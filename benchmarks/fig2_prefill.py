@@ -1,0 +1,39 @@
+"""Paper Figure 2: prefill throughput (tokens/s) and per-token energy
+(J/token) vs batch size, 1B LLaMA."""
+from repro.core.energy import LLAMA_1B, prefill_report
+from repro.core.hardware import RTX6000ADA, T4
+
+from benchmarks.common import BATCHES, print_table
+
+
+def run():
+    rows = []
+    for b in BATCHES:
+        row = {"batch": b}
+        for prof in (RTX6000ADA, T4):
+            rep = prefill_report(prof, LLAMA_1B, b)
+            row[f"{prof.name}_tok_s"] = rep.tokens_per_s
+            row[f"{prof.name}_j_tok"] = rep.j_per_token
+        rows.append(row)
+    return rows
+
+
+def derived() -> float:
+    """T4 prefill-throughput peak batch (paper: 8)."""
+    rows = run()
+    return float(max(rows, key=lambda r: r["t4_tok_s"])["batch"])
+
+
+def main():
+    rows = run()
+    print_table(rows, title="Figure 2 — prefill throughput & J/token (1B)")
+    peak_t4 = max(rows, key=lambda r: r["t4_tok_s"])["batch"]
+    peak_ada = max(rows, key=lambda r: r["rtx6000ada_tok_s"])["batch"]
+    e_t4 = min(rows, key=lambda r: r["t4_j_tok"])["batch"]
+    e_ada = min(rows, key=lambda r: r["rtx6000ada_j_tok"])["batch"]
+    print(f"tput peaks: T4@{peak_t4} (paper 8), Ada@{peak_ada} (paper 32); "
+          f"energy best: T4@{e_t4} (paper 8), Ada@{e_ada} (paper 16)")
+
+
+if __name__ == "__main__":
+    main()

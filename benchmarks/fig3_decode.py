@@ -1,0 +1,35 @@
+"""Paper Figure 3: decode throughput and per-token energy vs batch, 1B."""
+from repro.core.energy import LLAMA_1B, decode_report
+from repro.core.hardware import RTX6000ADA, T4
+
+from benchmarks.common import BATCHES, print_table
+
+
+def run():
+    rows = []
+    for b in BATCHES:
+        row = {"batch": b}
+        for prof in (RTX6000ADA, T4):
+            rep = decode_report(prof, LLAMA_1B, b)
+            row[f"{prof.name}_tok_s"] = rep.tokens_per_s
+            row[f"{prof.name}_j_tok"] = rep.j_per_token
+        row["ada_speedup"] = row["rtx6000ada_tok_s"] / row["t4_tok_s"]
+        rows.append(row)
+    return rows
+
+
+def derived() -> float:
+    """T4/Ada J-per-token ratio at batch 1 (paper: 0.729)."""
+    return (decode_report(T4, LLAMA_1B, 1).j_per_token /
+            decode_report(RTX6000ADA, LLAMA_1B, 1).j_per_token)
+
+
+def main():
+    rows = run()
+    print_table(rows, title="Figure 3 — decode throughput & J/token (1B)")
+    print(f"batch-1: T4 J/token ratio {derived():.3f} (paper 0.729); "
+          f"batch-64 Ada speedup {rows[-1]['ada_speedup']:.2f}x (paper 5.4x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figure 4: per-prompt operational + embodied carbon under the QC,
+CISO, and PACE grids (1B LLaMA, both GPUs, batch sweep)."""
+import math
+
+from repro.core import total_carbon
+from repro.core.energy import LLAMA_1B, prompt_report
+from repro.core.hardware import RTX6000ADA, T4
+from repro.core.intensity import REGIONS
+
+from benchmarks.common import BATCHES, print_table
+
+
+def run():
+    rows = []
+    for b in BATCHES:
+        for prof in (RTX6000ADA, T4):
+            rep = prompt_report(prof, LLAMA_1B, b)
+            row = {"device": prof.name, "batch": b}
+            for rname in ("QC", "CISO", "PACE"):
+                if math.isinf(rep.t_total):
+                    row[f"{rname}_op_g"] = float("inf")
+                    row[f"{rname}_em_g"] = float("inf")
+                    continue
+                cb = total_carbon(prof, rep.energy_j, rep.t_total, rname,
+                                  tokens=rep.tokens)
+                row[f"{rname}_op_g"] = cb.operational_g
+                row[f"{rname}_em_g"] = cb.embodied_g
+                row[f"{rname}_em_frac"] = cb.embodied_fraction
+            rows.append(row)
+    return rows
+
+
+def derived() -> float:
+    """Max T4 embodied fraction in QC over the batch sweep (paper: ~19.7%)."""
+    best = 0.0
+    for r in run():
+        if r["device"] == "t4" and math.isfinite(r.get("QC_em_frac", 0)):
+            best = max(best, r["QC_em_frac"])
+    return best
+
+
+def main():
+    print_table(run(), title="Figure 4 — per-prompt carbon by region (1B)")
+    print(f"max T4 embodied share in QC: {derived():.1%} (paper: 19.7%)")
+    # Takeaway 3 check: T4@QC beats Ada in any region at batch 64
+    t4qc = next(r for r in run() if r["device"] == "t4" and r["batch"] == 64)
+    adaciso = next(r for r in run()
+                   if r["device"] == "rtx6000ada" and r["batch"] == 64)
+    tot_t4 = t4qc["QC_op_g"] + t4qc["QC_em_g"]
+    tot_ada = adaciso["CISO_op_g"] + adaciso["CISO_em_g"]
+    print(f"batch-64 total: T4@QC {tot_t4:.4g} g vs Ada@CISO {tot_ada:.4g} g"
+          f" -> {'T4@QC lower (Takeaway 3)' if tot_t4 < tot_ada else 'check'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Figure 7: embodied-carbon share vs T4 lifetime (4-8 years), by
+region, batch 1; §3.4 also notes larger models lower the share."""
+from repro.core import lifetime_sweep
+from repro.core.energy import (LLAMA_1B, LLAMA_3B, LLAMA_7B, prompt_report)
+from repro.core.hardware import T4
+
+from benchmarks.common import print_table
+
+LIFETIMES = (4.0, 5.0, 6.0, 7.0, 8.0)
+
+
+def run():
+    rows = []
+    for wname, w in (("1B", LLAMA_1B), ("3B", LLAMA_3B), ("7B", LLAMA_7B)):
+        rep = prompt_report(T4, w, 1)
+        for region in ("QC", "CISO", "PACE"):
+            row = {"model": wname, "region": region}
+            for lt, frac, _ in lifetime_sweep(T4, rep.energy_j, rep.t_total,
+                                              region, LIFETIMES):
+                row[f"LT{int(lt)}y_em_frac"] = frac
+            rows.append(row)
+    return rows
+
+
+def derived() -> float:
+    """QC 1B embodied share at LT=4y minus at LT=8y (positive = Takeaway 5)."""
+    rep = prompt_report(T4, LLAMA_1B, 1)
+    rows = lifetime_sweep(T4, rep.energy_j, rep.t_total, "QC", LIFETIMES)
+    return rows[0][1] - rows[-1][1]
+
+
+def main():
+    rows = run()
+    print_table(rows, title="Figure 7 — T4 embodied share vs lifetime (b=1)")
+    r1b = [r for r in rows if r["model"] == "1B"]
+    r7b = [r for r in rows if r["model"] == "7B"]
+    print(f"QC share 4y->8y drop: {derived():.1%} (Takeaway 5); "
+          f"7B shares below 1B: "
+          f"{all(a['LT5y_em_frac'] > b['LT5y_em_frac'] for a, b in zip(r1b, r7b))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSONL records (results/dryrun_16x16.jsonl, results/dryrun_2x16x16.jsonl).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--markdown]
+"""
+import argparse
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+V5E_HBM_GIB = 16.0
+
+
+def load(path: str) -> List[Dict]:
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("ok"):
+                out.append(r)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def fmt_gib(b: float) -> str:
+    return f"{b / 2**30:.1f}"
+
+
+def roofline_rows(recs: List[Dict]) -> List[Dict]:
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         SHAPE_ORDER.index(r["shape"]))):
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        peak = mem.get("per_device_peak_bytes", 0.0)
+        t_bound = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": rl["t_compute_s"],
+            "t_memory_s": rl["t_memory_s"],
+            "t_collective_s": rl["t_collective_s"],
+            "dominant": rl["dominant"],
+            "model_flops": rl["model_flops"],
+            "hlo_flops": rl["hlo_flops"],
+            "useful_frac": rl["useful_flops_frac"],
+            "peak_gib": peak / 2**30,
+            "fits_v5e": peak / 2**30 <= V5E_HBM_GIB,
+            "coll_counts": rl.get("coll_counts", {}),
+            "compile_s": r.get("compile_s"),
+            "t_bound": t_bound,
+        })
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | bound | "
+           "useful FLOPs | peak GiB/dev | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['dominant']} | {r['useful_frac']:.2f} | "
+            f"{r['peak_gib']:.1f} | {'yes' if r['fits_v5e'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def summary(rows: List[Dict]) -> Dict:
+    worst_useful = min((r for r in rows if r["useful_frac"] > 0),
+                       key=lambda r: r["useful_frac"], default=None)
+    most_coll = max(rows, key=lambda r: (r["t_collective_s"] /
+                                         max(r["t_bound"], 1e-30)))
+    dominants: Dict[str, int] = {}
+    for r in rows:
+        dominants[r["dominant"]] = dominants.get(r["dominant"], 0) + 1
+    return {"n": len(rows), "dominants": dominants,
+            "worst_useful": (worst_useful["arch"], worst_useful["shape"],
+                             round(worst_useful["useful_frac"], 3))
+            if worst_useful else None,
+            "most_collective_bound": (most_coll["arch"], most_coll["shape"]),
+            "n_fit": sum(r["fits_v5e"] for r in rows)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", choices=["16x16", "2x16x16", "both"],
+                    default="both")
+    ap.add_argument("--optimized", action="store_true",
+                    help="read the *_opt.jsonl (EXPERIMENTS.md SSPerf) records")
+    args = ap.parse_args()
+    suffix = "_opt" if args.optimized else ""
+    for mesh, fname in (("16x16", f"dryrun_16x16{suffix}.jsonl"),
+                        ("2x16x16", f"dryrun_2x16x16{suffix}.jsonl")):
+        if args.mesh not in ("both", mesh):
+            continue
+        recs = load(os.path.join(RESULTS_DIR, fname))
+        if not recs:
+            print(f"({mesh}: no records)")
+            continue
+        rows = roofline_rows(recs)
+        print(f"\n### Roofline — {mesh} mesh ({len(rows)} combos)\n")
+        print(markdown_table(rows))
+        print(f"\nsummary: {summary(rows)}")
+
+
+if __name__ == "__main__":
+    main()

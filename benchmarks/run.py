@@ -1,0 +1,42 @@
+"""Benchmark aggregator — one entry per paper table/figure plus the TPU
+extension. Prints ``name,us_per_call,derived`` CSV (timing the table
+construction; the derived column is each benchmark's headline number).
+"""
+import time
+
+from benchmarks import (fig1_latency_energy, fig2_prefill, fig3_decode,
+                        fig4_region_carbon, fig56_token_carbon, fig7_lifetime,
+                        table1_embodied, tpu_carbon)
+
+BENCHES = [
+    ("table1_embodied", table1_embodied),
+    ("fig1_latency_energy", fig1_latency_energy),
+    ("fig2_prefill", fig2_prefill),
+    ("fig3_decode", fig3_decode),
+    ("fig4_region_carbon", fig4_region_carbon),
+    ("fig56_token_carbon", fig56_token_carbon),
+    ("fig7_lifetime", fig7_lifetime),
+    ("tpu_carbon", tpu_carbon),
+]
+
+
+def time_call(fn, min_time: float = 0.2, max_iters: int = 50) -> float:
+    fn()                                    # warmup
+    n, t0 = 0, time.perf_counter()
+    while time.perf_counter() - t0 < min_time and n < max_iters:
+        fn()
+        n += 1
+    return (time.perf_counter() - t0) / max(n, 1) * 1e6
+
+
+def main() -> None:
+    for name, mod in BENCHES:
+        mod.main()
+    print("\nname,us_per_call,derived")
+    for name, mod in BENCHES:
+        us = time_call(mod.run)
+        print(f"{name},{us:.1f},{mod.derived():.6g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 1: embodied carbon of RTX6000 Ada and T4 (ACT model)."""
+from repro.core import embodied_carbon
+from repro.core.hardware import REGISTRY
+
+from benchmarks.common import print_table
+
+PAPER = {"rtx6000ada": 26.6, "t4": 10.3}
+
+
+def run():
+    rows = []
+    for name, prof in sorted(REGISTRY.items()):
+        br = embodied_carbon(prof)
+        rows.append({
+            "device": name, "year": prof.year,
+            "die_mm2": prof.die_mm2, "node_nm": prof.tech_node_nm,
+            "mem_gb": prof.mem_gb,
+            "die_kg": round(br.die_kg, 2), "mem_kg": round(br.memory_kg, 2),
+            "total_kg": round(br.total_kg, 2),
+            "paper_kg": PAPER.get(name, ""),
+        })
+    return rows
+
+
+def derived() -> float:
+    """Max relative error vs paper Table 1."""
+    err = 0.0
+    for name, want in PAPER.items():
+        got = embodied_carbon(REGISTRY[name]).total_kg
+        err = max(err, abs(got - want) / want)
+    return err
+
+
+def main():
+    print_table(run(), title="Table 1 — embodied carbon (ACT), kg CO2eq")
+    print(f"max rel. error vs paper: {derived():.3%}")
+
+
+if __name__ == "__main__":
+    main()

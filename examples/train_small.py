@@ -1,0 +1,62 @@
+"""Train a small model for a few hundred steps with the WSD schedule and
+training-carbon metering (paper §4 "Sustainable LLM training").
+
+Presets: --preset tiny (default, ~1M params, CPU-friendly) or --preset 100m
+(the ~100M-parameter configuration; same code path, sized for a real
+accelerator).
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+import argparse
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.training import AdamWConfig, TrainConfig, Trainer
+from repro.training.data import lm_batches
+
+PRESETS = {
+    "tiny": dict(n_layers=2, d_model=96, n_heads=4, n_kv_heads=4,
+                 d_ff=256, vocab=512, batch=8, seq=64),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                 d_ff=2048, vocab=32000, batch=32, seq=1024),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(
+        name=f"train-{args.preset}", family="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab=p["vocab"],
+        dtype="float32",
+        block_pattern=repeat_pattern(("dense",), p["n_layers"]),
+        vocab_pad_multiple=8)
+    model = Model(cfg)
+    import jax
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        model.param_shapes()))
+    print(f"{cfg.name}: {n_params / 1e6:.1f}M params, WSD schedule, "
+          f"{args.steps} steps")
+
+    trainer = Trainer(model, TrainConfig(
+        steps=args.steps, log_every=max(args.steps // 10, 1), warmup=10,
+        schedule="wsd", optim=AdamWConfig(lr=args.lr),
+        profile="tpu_v5e", region="CISO"))
+    hist = trainer.fit(lm_batches(0, cfg.vocab, batch=p["batch"],
+                                  seq=p["seq"], branching=4))
+
+    print(f"\nloss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    print("\ntraining-run carbon (attributed to tpu_v5e @ CISO):")
+    print(trainer.meter.report())
+    print("\npaper §4: training has no latency SLO — shifting this run to a "
+          "low-CI window/region scales the operational term directly.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — Sustainable LLM serving/training framework in JAX.
+
+Reproduction + extension of "Towards Sustainable Large Language Model
+Serving" (Nguyen, Zhou, Ding, Liu — HotCarbon'24).
+"""
+__version__ = "0.1.0"

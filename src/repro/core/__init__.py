@@ -1,0 +1,43 @@
+"""Core sustainability library: the paper's contribution as a composable
+JAX-framework component.
+
+* :mod:`repro.core.hardware` — accelerator profiles (paper Table 1 + TPU)
+* :mod:`repro.core.act` — ACT embodied-carbon model (§3.1)
+* :mod:`repro.core.energy` — calibrated perf/power/energy model (§2, Eq. 1)
+* :mod:`repro.core.intensity` — grid carbon intensities (Table 2) + traces
+* :mod:`repro.core.carbon` — operational/embodied/total carbon (Eq. 2-4)
+* :mod:`repro.core.meter` — per-phase/per-token accounting (Figures 2-6)
+* :mod:`repro.core.scheduler` — CI-directed carbon-aware scheduling (§4)
+"""
+from repro.core.act import EmbodiedBreakdown, embodied_carbon
+from repro.core.carbon import (CarbonBreakdown, amortized_embodied_g,
+                               lifetime_sweep, operational_carbon_g,
+                               total_carbon)
+from repro.core.energy import (LLAMA_1B, LLAMA_3B, LLAMA_7B, EnergyReport,
+                               LLMWorkload, StepCounts, decode_counts,
+                               decode_report, prefill_counts, prefill_report,
+                               prompt_report, step_energy, step_time)
+from repro.core.hardware import (REGISTRY, HardwareProfile, get_profile,
+                                 register_profile)
+from repro.core.intensity import REGIONS, Region, ci_at_hour, get_region
+from repro.core.meter import CarbonMeter, PhaseStats
+from repro.core.scheduler import (CIDirectedScheduler, FleetSlice, Placement,
+                                  carbon_optimal_batch, evaluate,
+                                  place_request_class, plan_disaggregated,
+                                  throughput_optimal_batch)
+
+__all__ = [
+    "EmbodiedBreakdown", "embodied_carbon", "CarbonBreakdown",
+    "amortized_embodied_g", "lifetime_sweep", "operational_carbon_g",
+    "total_carbon", "LLAMA_1B", "LLAMA_3B", "LLAMA_7B", "EnergyReport",
+    "LLMWorkload", "StepCounts", "decode_counts", "decode_report",
+    "prefill_counts", "prefill_report", "prompt_report", "step_energy",
+    "step_time", "REGISTRY", "HardwareProfile", "get_profile",
+    "register_profile", "REGIONS", "Region", "ci_at_hour", "get_region",
+    "CarbonMeter", "PhaseStats", "CIDirectedScheduler", "FleetSlice",
+    "Placement", "carbon_optimal_batch", "evaluate", "place_request_class",
+    "plan_disaggregated", "throughput_optimal_batch",
+]
+from repro.core.forecast import CIForecaster, mape  # noqa: E402
+
+__all__ += ["CIForecaster", "mape"]

@@ -1,0 +1,114 @@
+"""CarbonMeter — per-request / per-token / per-phase carbon accounting.
+
+This is the paper's measurement harness recast as a first-class serving
+component: every prefill/decode step the engine executes reports its
+(time, energy, tokens) here; the meter attributes operational carbon via the
+region CI (optionally time-varying) and amortized embodied carbon via the
+device profile — giving the paper's per-token, per-phase breakdowns
+(Figures 2–6) live, per request class, in production.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, Optional, Union
+
+from repro.core.carbon import (CarbonBreakdown, DEFAULT_LIFETIME_YEARS,
+                               total_carbon)
+from repro.core.hardware import HardwareProfile
+from repro.core.intensity import Region, ci_at_hour, get_region
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    steps: int = 0
+    tokens: float = 0.0
+    time_s: float = 0.0
+    energy_j: float = 0.0
+    operational_g: float = 0.0
+    embodied_g: float = 0.0
+
+    @property
+    def total_g(self) -> float:
+        return self.operational_g + self.embodied_g
+
+    @property
+    def j_per_token(self) -> float:
+        return self.energy_j / max(self.tokens, 1e-12)
+
+    @property
+    def g_per_token(self) -> float:
+        return self.total_g / max(self.tokens, 1e-12)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / max(self.time_s, 1e-12)
+
+
+class CarbonMeter:
+    """Accumulates per-phase energy/carbon for one device (group)."""
+
+    def __init__(self, profile: HardwareProfile, region: Union[str, Region],
+                 lifetime_years: float = DEFAULT_LIFETIME_YEARS,
+                 n_devices: int = 1, use_diurnal_ci: bool = False):
+        self.profile = profile
+        self.region = get_region(region) if isinstance(region, str) else region
+        self.lifetime_years = lifetime_years
+        self.n_devices = n_devices
+        self.use_diurnal_ci = use_diurnal_ci
+        self.phases: Dict[str, PhaseStats] = defaultdict(PhaseStats)
+        self.clock_hours = 0.0          # wall clock for diurnal CI
+
+    def record(self, phase: str, tokens: float, time_s: float,
+               energy_j: float) -> CarbonBreakdown:
+        if time_s < 0 or energy_j < 0 or tokens < 0:
+            raise ValueError("meter inputs must be non-negative")
+        region = self.region
+        if self.use_diurnal_ci:
+            ci = ci_at_hour(self.region, self.clock_hours % 24.0)
+            region = dataclasses.replace(self.region, ci_g_per_kwh=ci)
+        cb = total_carbon(self.profile, energy_j, time_s, region,
+                          lifetime_years=self.lifetime_years, tokens=tokens,
+                          n_devices=self.n_devices)
+        st = self.phases[phase]
+        st.steps += 1
+        st.tokens += tokens
+        st.time_s += time_s
+        st.energy_j += energy_j
+        st.operational_g += cb.operational_g
+        st.embodied_g += cb.embodied_g
+        self.clock_hours += time_s / 3600.0
+        return cb
+
+    def phase(self, name: str) -> PhaseStats:
+        return self.phases[name]
+
+    @property
+    def totals(self) -> PhaseStats:
+        t = PhaseStats()
+        for st in self.phases.values():
+            t.steps += st.steps
+            t.tokens += st.tokens
+            t.time_s += st.time_s
+            t.energy_j += st.energy_j
+            t.operational_g += st.operational_g
+            t.embodied_g += st.embodied_g
+        return t
+
+    def report(self) -> str:
+        lines = [
+            f"CarbonMeter[{self.profile.name} x{self.n_devices} @ "
+            f"{self.region.name} (CI={self.region.ci_g_per_kwh:g} g/kWh), "
+            f"LT={self.lifetime_years:g}y]"
+        ]
+        rows = list(self.phases.items()) + [("TOTAL", self.totals)]
+        for name, st in rows:
+            if st.steps == 0 and name != "TOTAL":
+                continue
+            lines.append(
+                f"  {name:<10} steps={st.steps:<6} tokens={st.tokens:<10.0f}"
+                f" t={st.time_s:9.3f}s  E={st.energy_j:10.1f}J"
+                f"  op={st.operational_g:9.4f}g  em={st.embodied_g:9.5f}g"
+                f"  g/tok={st.g_per_token:.3e}  J/tok={st.j_per_token:.3e}"
+            )
+        return "\n".join(lines)

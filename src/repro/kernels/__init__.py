@@ -1,0 +1,10 @@
+"""TPU Pallas kernels (pl.pallas_call + BlockSpec VMEM tiling) for the
+compute hot spots, each with a pure-jnp oracle in ref.py and a jit'd
+dispatching wrapper in ops.py. Validated in interpret mode on CPU.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (decode_attention, flash_attention,
+                               mla_decode_attention, rmsnorm, ssd_scan, wkv6)
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention",
+           "mla_decode_attention", "rmsnorm", "ssd_scan", "wkv6"]

@@ -1,0 +1,109 @@
+"""Flash-decode Pallas TPU kernel: one query token per sequence against a
+(ring-buffer) KV cache, split-KV with running-softmax combine.
+
+Layout: q (B, Hq, hd); k (B, Hkv, W, hd); v (B, Hkv, W, hd_v) — hd_v may
+differ from hd (MLA-absorbed decode: q/k live in the 512+64-dim latent,
+v IS the 512-dim latent; see ``mla_decode_attention`` in ops.py);
+k_pos (B, W) int32 (-1 empty); q_pos (B,) int32 current absolute position.
+Grid (B, Hq, num_kv_blocks): the kv axis is innermost/sequential, the
+running (m, l, acc) state sits in VMEM scratch — i.e. the memory-bound
+decode read of the KV cache happens exactly once, which is the
+roofline-optimal traffic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e9
+DEFAULT_BK = 512
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, window, chunk, n_kv, scale):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (hd,)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    qpos = qpos_ref[0]                                    # scalar
+    kpos = kpos_ref[0]                                    # (bk,)
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # (bk,)
+    ok = (kpos >= 0) & (kpos <= qpos)
+    if window is not None:
+        ok &= kpos > qpos - window
+    if chunk is not None:
+        ok &= (kpos // chunk) == (qpos // chunk)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + p.sum()
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)[None]
+    m_ref[0] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, k_pos: jax.Array,
+                     window: Optional[int] = None,
+                     chunk: Optional[int] = None,
+                     block_k: int = DEFAULT_BK,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,hd); k: (B,Hkv,W,hd); v: (B,Hkv,W,hd_v); q_pos: (B,);
+    k_pos: (B,W). Returns (B,Hq,hd_v)."""
+    B, Hq, hd = q.shape
+    hd_v = v.shape[-1]
+    Hkv, W = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, "kernel requires uniform GQA grouping"
+    group = Hq // Hkv
+    bk = min(block_k, W)
+    nk = -(-W // bk)
+    if W % bk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, nk * bk - W), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, nk * bk - W), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, nk * bk - W)), constant_values=-1)
+
+    kernel = functools.partial(_decode_kernel, window=window, chunk=chunk,
+                               n_kv=nk, scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, ik: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd_v),
+                         lambda b, h, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd_v), lambda b, h, ik: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd_v), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd_v), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, k_pos)
+    return out

@@ -1,0 +1,147 @@
+"""Jit'd public wrappers for the Pallas kernels with platform dispatch.
+
+``impl`` selects the path:
+  * "pallas"            — compiled Pallas TPU kernel (real hardware)
+  * "pallas_interpret"  — Pallas interpret mode (CPU correctness runs)
+  * "ref"               — pure-jnp oracle
+  * None (default)      — "pallas" on TPU, "ref" elsewhere
+
+``ssd_scan`` composes the within-chunk SSD kernel with the (cheap)
+cross-chunk state recurrence + y_cross term in JAX.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd as _ssd
+from repro.kernels import wkv6 as _wkv
+
+
+def _resolve(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, q_pos, k_pos, window=None, chunk=None,
+                    impl: Optional[str] = None, **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.flash_attention(q, k, v, q_pos, k_pos, window, chunk)
+    return _fa.flash_attention(q, k, v, q_pos, k_pos, window, chunk,
+                               interpret=(impl == "pallas_interpret"), **kw)
+
+
+def decode_attention(q, k, v, q_pos, k_pos, window=None, chunk=None,
+                     impl: Optional[str] = None, **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.decode_attention(q, k, v, q_pos, k_pos, window, chunk)
+    return _dec.decode_attention(q, k, v, q_pos, k_pos, window, chunk,
+                                 interpret=(impl == "pallas_interpret"), **kw)
+
+
+def mla_decode_attention(q_lat, q_rope, ckv, k_rope, q_pos, k_pos,
+                         window=None, impl: Optional[str] = None, **kw):
+    """MLA-absorbed decode as MQA flash-decode over the latent cache.
+
+    q_lat: (B,H,kvr) latent queries (q_nope @ w_uk); q_rope: (B,H,r);
+    ckv: (B,W,kvr); k_rope: (B,W,r). Returns o_lat (B,H,kvr) — the latent
+    attention output (caller applies w_uv). Exact: scores = q_lat.ckv +
+    q_rope.k_rope, softmax, value = ckv, i.e. one MQA head of dim kvr+r
+    with a kvr-dim value.
+    """
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)         # (B,H,kvr+r)
+    k = jnp.concatenate([ckv, k_rope], axis=-1)[:, None]  # (B,1,W,kvr+r)
+    v = ckv[:, None]                                      # (B,1,W,kvr)
+    # decode_attention scales by 1/sqrt(kvr+r); MLA wants 1/sqrt(nope+rope).
+    # Pre-scale q to compensate.
+    import math as _math
+    nope_rope = kw.pop("qk_dim", q.shape[-1])
+    q = q * (_math.sqrt(q.shape[-1]) / _math.sqrt(nope_rope))
+    return decode_attention(q, k, v, q_pos, k_pos, window=window,
+                            impl=impl, **kw)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, impl: Optional[str] = None, **kw):
+    impl = _resolve(impl)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if impl == "ref":
+        xf = x2.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = (xf * jax.lax.rsqrt(var + eps)
+               * scale.astype(jnp.float32)).astype(x.dtype)
+    else:
+        out = _rms.rmsnorm(x2, scale, eps=eps,
+                           interpret=(impl == "pallas_interpret"), **kw)
+    return out.reshape(shape)
+
+
+def wkv6(r, k, v, w, u, s0, impl: Optional[str] = None, **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.wkv6(r, k, v, w, u, s0)
+    return _wkv.wkv6(r, k, v, w, u, s0,
+                     interpret=(impl == "pallas_interpret"), **kw)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, h0=None, chunk: int = 256,
+             impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full SSD over a sequence.
+
+    x: (B,T,H,P); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,H,N); h0: (B,H,P,N).
+    Returns y (B,T,H,P) f32 and final state (B,H,P,N) f32.
+    """
+    impl = _resolve(impl)
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    cl = min(chunk, T)
+    pad = (-T) % cl
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // cl
+    # to kernel layout (B,H,nc,cl,*)
+    xk = jnp.moveaxis(x.reshape(B, nc, cl, H, P), 3, 1)
+    dtk = jnp.moveaxis(dt.reshape(B, nc, cl, H), 3, 1)
+    Bk = jnp.moveaxis(Bm.reshape(B, nc, cl, H, N), 3, 1)
+    Ck = jnp.moveaxis(Cm.reshape(B, nc, cl, H, N), 3, 1)
+
+    if impl == "ref":
+        y_intra, h_chunk, dec = _ref.ssd_chunk(xk, dtk, A, Bk, Ck)
+    else:
+        y_intra, h_chunk, dec = _ssd.ssd_chunk(
+            xk, dtk, A, Bk, Ck, interpret=(impl == "pallas_interpret"))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        d, hc = inp
+        h_in = h
+        return d[..., None, None] * h + hc, h_in
+
+    dec_sw = jnp.moveaxis(dec, 2, 0)                      # (nc,B,H)
+    hc_sw = jnp.moveaxis(h_chunk, 2, 0)
+    h_final, h_in = jax.lax.scan(step, h0.astype(jnp.float32), (dec_sw, hc_sw))
+    h_in = jnp.moveaxis(h_in, 0, 2)                       # (B,H,nc,P,N)
+
+    da = dtk.astype(jnp.float32) * A[None, :, None, None]
+    cum = jnp.cumsum(da, axis=-1)
+    y_cross = jnp.einsum("bhctn,bhcpn,bhct->bhctp",
+                         Ck.astype(jnp.float32), h_in, jnp.exp(cum))
+    y = y_intra + y_cross
+    y = jnp.moveaxis(y, 1, 3).reshape(B, Tp, H, P)[:, :T]
+    return y, h_final

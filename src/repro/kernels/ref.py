@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (same layouts, same contracts).
+
+These are the ground truth for the per-kernel allclose sweeps in
+tests/test_kernels.py, and the CPU execution path used by the models.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def _mask(qpos, kpos, window, chunk):
+    ok = (kpos >= 0) & (kpos <= qpos)
+    if window is not None:
+        ok &= kpos > qpos - window
+    if chunk is not None:
+        ok &= (kpos // chunk) == (qpos // chunk)
+    return ok
+
+
+def flash_attention(q, k, v, q_pos, k_pos, window: Optional[int] = None,
+                    chunk: Optional[int] = None):
+    """q: (B,Hq,Sq,hd); k/v: (B,Hkv,Sk,hd); *_pos: (B,S). -> (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    ok = _mask(q_pos[:, None, :, None], k_pos[:, None, None, :], window, chunk)
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(q, k, v, q_pos, k_pos, window: Optional[int] = None,
+                     chunk: Optional[int] = None):
+    """q: (B,Hq,hd); k/v: (B,Hkv,W,hd); q_pos: (B,); k_pos: (B,W)."""
+    out = flash_attention(q[:, :, None, :], k, v, q_pos[:, None], k_pos,
+                          window, chunk)
+    return out[:, :, 0, :]
+
+
+def wkv6(r, k, v, w, u, s0):
+    """r/k/v/w: (B,H,T,hd); u: (H,hd); s0: (B,H,hd,hd) f32."""
+    rs = jnp.moveaxis(r.astype(jnp.float32), 2, 0)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 2, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 2, 0)
+    ws = jnp.moveaxis(w.astype(jnp.float32), 2, 0)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., :, None] * kv)
+        return wt[..., :, None] * S + kv, out
+
+    S, outs = jax.lax.scan(step, s0.astype(jnp.float32), (rs, ks, vs, ws))
+    return jnp.moveaxis(outs, 0, 2), S
+
+
+def ssd_chunk(x, dt, A, Bm, Cm):
+    """x: (B,H,nc,cl,P); dt: (B,H,nc,cl); A: (H,); Bm/Cm: (B,H,nc,cl,N).
+    Returns (y_intra f32, h_chunk f32, decay f32) matching the kernel."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    da = dtf * A[None, :, None, None]
+    cum = jnp.cumsum(da, axis=-1)                        # (B,H,nc,cl)
+    xdt = xf * dtf[..., None]
+    cl = x.shape[3]
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+    W = jnp.where(tri, jnp.exp(cum[..., :, None] - cum[..., None, :]), 0.0)
+    CB = jnp.einsum("bhctn,bhcsn->bhcts", Cf, Bf)
+    y = jnp.einsum("bhcts,bhcsp->bhctp", CB * W, xdt)
+    emit = jnp.exp(cum[..., -1:] - cum)                  # (B,H,nc,cl)
+    h = jnp.einsum("bhcsp,bhcsn,bhcs->bhcpn", xdt, Bf, emit)
+    dec = jnp.exp(cum[..., -1])
+    return y, h, dec

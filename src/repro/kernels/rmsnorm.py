@@ -1,0 +1,45 @@
+"""RMSNorm Pallas TPU kernel: row-tiled, f32 statistics in-register.
+
+Layout: x (R, d) — callers flatten leading dims. Grid (num_row_blocks,);
+each step normalizes a (block_rows, d) tile held in VMEM. d is a multiple
+of 128 in every assigned config (VPU lane aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 256
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5,
+            block_rows: int = DEFAULT_BR, interpret: bool = False) -> jax.Array:
+    """x: (R, d); scale: (d,). Returns (R, d) in x.dtype."""
+    R, d = x.shape
+    br = min(block_rows, R)
+    nr = -(-R // br)
+    pad = nr * br - R
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * br, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)
+    return out[:R]

@@ -1,0 +1,85 @@
+"""Mamba2 SSD within-chunk Pallas TPU kernel.
+
+Computes, per (batch, head, chunk):
+
+    cum[t]     = sum_{r<=t} dt[r] * A                (h-scalar per step)
+    y_intra[t] = sum_{s<=t} exp(cum[t]-cum[s]) (C_t.B_s) dt_s x_s
+    h_chunk    = sum_s exp(cum[-1]-cum[s]) dt_s x_s (x) B_s
+    decay      = exp(cum[-1])
+
+The (cheap, O(L/chunk)) cross-chunk state recurrence and the y_cross term
+stay in JAX (see repro.kernels.ops.ssd_scan) — the quadratic-in-chunk part
+is the compute hot spot and lives here. Chunk length cl and head dim P are
+MXU-friendly (cl in {128, 256}, P = 64, N = 64 in all assigned configs).
+
+Layout: x (B,H,nc,cl,P), dt (B,H,nc,cl), A (H,), Bm/Cm (B,H,nc,cl,N).
+Returns y_intra (B,H,nc,cl,P) f32, h_chunk (B,H,nc,P,N) f32,
+decay (B,H,nc) f32 packed as (B,H,nc,1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, h_ref, dec_ref):
+    x = x_ref[0, 0, 0].astype(jnp.float32)               # (cl, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)             # (cl,)
+    A = a_ref[0].astype(jnp.float32)                     # scalar
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)              # (cl, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)              # (cl, N)
+
+    da = dt * A                                          # (cl,) <= 0
+    cum = jnp.cumsum(da)
+    xdt = x * dt[:, None]
+
+    # decay matrix W[t,s] = exp(cum[t]-cum[s]) for s<=t
+    diff = cum[:, None] - cum[None, :]
+    cl = x.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    W = jnp.where(row >= col, jnp.exp(diff), 0.0)
+
+    CB = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (cl, cl)
+    y_ref[0, 0, 0] = jnp.dot(CB * W, xdt,
+                             preferred_element_type=jnp.float32)
+
+    emit = jnp.exp(cum[-1] - cum)                        # (cl,)
+    h_ref[0, 0, 0] = jnp.dot((xdt * emit[:, None]).T, Bm,
+                             preferred_element_type=jnp.float32)  # (P, N)
+    dec_ref[0, 0, 0, 0] = jnp.exp(cum[-1])
+
+
+def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array,
+              Bm: jax.Array, Cm: jax.Array, interpret: bool = False):
+    """x: (B,H,nc,cl,P); dt: (B,H,nc,cl); A: (H,); Bm/Cm: (B,H,nc,cl,N)."""
+    B, H, nc, cl, P = x.shape
+    N = Bm.shape[-1]
+    y, h, dec = pl.pallas_call(
+        _ssd_kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, cl, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, cl), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, 1, cl, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, cl, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, cl, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, cl, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nc, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nc, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, h, dec[..., 0]

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and derive the roofline
+terms — all on CPU placeholder devices (ShapeDtypeStructs only, no
+allocation). The two lines above MUST run before any jax import: jax locks
+the device count at first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import Model
+from repro.models.costing import model_flops
+from repro.sharding import param_shardings, use_sharding
+from repro.sharding.rules import DEFAULT_RULES, LONG_CONTEXT_RULES
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+# The assigned input shapes.
+INPUT_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def variant_for(shape_name: str) -> str:
+    return "long" if shape_name == "long_500k" else "full"
+
+
+def extras_specs(cfg, batch: int, seq: int, kind: str) -> Dict:
+    """ShapeDtypeStructs for the stub-frontend inputs (DESIGN.md)."""
+    dt = jnp.dtype(cfg.dtype)
+    ex: Dict = {}
+    if kind == "decode":
+        return ex
+    if cfg.family == "vlm":
+        ex["image_embeds"] = sds((batch, cfg.n_image_tokens, cfg.d_model), dt)
+    elif cfg.family == "audio":
+        ex["frames"] = sds((batch, cfg.encoder_seq, cfg.d_model), dt)
+    elif cfg.family == "moe" and cfg.attn_chunk is not None:
+        n_img = 256
+        ex["image_embeds"] = sds((batch, n_img, cfg.d_model), dt)
+        ex["image_positions"] = sds((batch, n_img), I32)
+    return ex
+
+
+def extras_shardings(ex: Dict, ctx) -> Dict:
+    out = {}
+    for k, v in ex.items():
+        axes = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = ctx.sharding(axes)
+    return out
+
+
+# --------------------------------------------------------------------------
+# cache shardings by leaf name
+# --------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "xk": ("batch", None, "kv_heads", None),
+    "xv": ("batch", None, "kv_heads", None),
+    "ckv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "pos_ids": ("batch", "kv_seq"),
+    "length": ("batch",),
+    "t": ("batch",),
+    "conv": ("batch", None, None),
+    "state": ("batch", "heads", None, None),
+    "wkv": ("batch", "heads", None, None),
+    "att_shift": ("batch", None),
+    "ffn_shift": ("batch", None),
+}
+
+
+def cache_shardings(cache_shapes, ctx):
+    def leaf(kp, x):
+        name = ""
+        for k in reversed(kp):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        axes = _CACHE_AXES.get(name)
+        if axes is None:
+            return ctx.sharding([None] * len(x.shape))
+        axes = list(axes)
+        lead = len(x.shape) - len(axes)
+        if lead < 0:                      # scalar-ish leaf
+            axes = axes[-len(x.shape):] if len(x.shape) else []
+        return ctx.sharding([None] * max(lead, 0) + list(axes))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.train_loss(p, batch, remat=True)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg, jnp.asarray(1.0))
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def build_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, tokens, extras):
+        return model.prefill(params, tokens, extras or None, max_len=max_len)
+
+    return prefill_step
+
+
+def build_serve_step(model: Model, vocab: int):
+    def serve_step(params, caches, tokens):
+        logits, caches = model.decode_step(params, caches, tokens)
+        nxt = jnp.argmax(logits[..., :vocab], axis=-1).astype(I32)[:, None]
+        return nxt, caches
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            test_mesh: bool = False, fsdp: bool = True,
+            donate: bool = True, verbose: bool = True,
+            save_hlo_dir: Optional[str] = None,
+            serve_fsdp: str = "on", mla_fused: bool = False,
+            tag: str = "") -> Dict:
+    spec = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch, variant_for(shape_name))
+    cfg = dataclasses.replace(cfg, dtype="bfloat16") \
+        if cfg.dtype != "bfloat16" else cfg
+    if mla_fused and cfg.mla is not None:
+        cfg = dataclasses.replace(cfg, mla_fused_prefill=True)
+    model = Model(cfg)
+    mesh = (make_test_mesh(multi_pod=multi_pod) if test_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    chips = mesh.size
+    pod_size = (mesh.shape["data"] * mesh.shape["model"]
+                if multi_pod else 0)
+    rules = LONG_CONTEXT_RULES if shape_name == "long_500k" else DEFAULT_RULES
+    B, S = spec["batch"], spec["seq"]
+    kind = spec["kind"]
+    if kind != "train" and serve_fsdp != "on":
+        # serving-mode sharding (SSPerf H3): FSDP weight gathers every decode
+        # step are pure overhead when model-axis-sharded weights already fit
+        if serve_fsdp == "off":
+            fsdp = False
+        else:                                      # "auto"
+            pshapes_probe = model.param_shapes()
+            pbytes = sum(
+                float(jnp.prod(jnp.array(x.shape))) * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(pshapes_probe))
+            tp = mesh.shape.get("model", 1)
+            fsdp = (pbytes / tp) > 0.6 * 16 * 2**30
+    rec: Dict = {"arch": arch, "shape": shape_name, "kind": kind,
+                 "mesh": ("2x16x16" if multi_pod else "16x16") if not test_mesh
+                 else str(tuple(mesh.shape.values())),
+                 "chips": chips, "fsdp": fsdp}
+    if tag:
+        rec["tag"] = tag
+    t0 = time.time()
+
+    with mesh, use_sharding(mesh, rules) as ctx:
+        pshapes = model.param_shapes()
+        pshard = param_shardings(pshapes, mesh, fsdp=fsdp)
+        ex = extras_specs(cfg, B, S, kind)
+        ex_shard = extras_shardings(ex, ctx)
+        batch_spec = ctx.sharding(["batch", None])
+
+        if kind == "train":
+            # bf16 moments for >=20B params: f32 moments cannot fit 16GB HBM
+            n_params = sum(float(jnp.prod(jnp.array(x.shape)))
+                           for x in jax.tree_util.tree_leaves(pshapes))
+            opt_cfg = AdamWConfig(
+                moment_dtype="bfloat16" if n_params > 2e10 else "float32")
+            oshapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), pshapes)
+            oshard = {"m": param_shardings(oshapes["m"], mesh, fsdp=fsdp),
+                      "v": param_shardings(oshapes["v"], mesh, fsdp=fsdp),
+                      "step": NamedSharding(mesh, P())}
+            args = (pshapes, oshapes,
+                    {"tokens": sds((B, S), I32), "labels": sds((B, S), I32),
+                     **ex})
+            in_sh = (pshard, oshard,
+                     {"tokens": batch_spec, "labels": batch_spec, **ex_shard})
+            fn = build_train_step(model, opt_cfg)
+            out_sh = (pshard, oshard, None)
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(0, 1) if donate else ())
+            tokens_global = B * S
+            mf = model_flops(cfg, tokens_global / chips, training=True)
+        elif kind == "prefill":
+            args = (pshapes, sds((B, S), I32), ex)
+            in_sh = (pshard, batch_spec, ex_shard)
+            fn = build_prefill_step(model, max_len=S)
+            jfn = jax.jit(fn, in_shardings=in_sh)
+            mf = model_flops(cfg, B * S / chips, training=False)
+        else:  # decode
+            cshapes = model.cache_shapes(B, S)
+            cshard = cache_shardings(cshapes, ctx)
+            args = (pshapes, cshapes, sds((B, 1), I32))
+            in_sh = (pshard, cshard, batch_spec)
+            fn = build_serve_step(model, cfg.vocab)
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=(None, cshard),
+                          donate_argnums=(1,) if donate else ())
+            mf = model_flops(cfg, B / chips, training=False)
+
+        lowered = jfn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = analysis.extract_memory(compiled)
+        rec["memory"] = mem
+        hlo = compiled.as_text()
+        if save_hlo_dir:
+            import gzip
+            os.makedirs(save_hlo_dir, exist_ok=True)
+            tag_s = ("_" + tag) if tag else ""
+            tag = f"{arch}_{shape_name}_{rec['mesh'].replace('x', '-')}{tag_s}"
+            with gzip.open(os.path.join(save_hlo_dir, tag + ".txt.gz"),
+                           "wt") as f:
+                f.write(hlo)
+        rl = analysis.roofline(compiled, chips=chips, pod_size=pod_size,
+                               model_flops=mf, hlo_text=hlo)
+        rec["roofline"] = rl.row()
+        rec["ok"] = True
+
+    if verbose:
+        peak = rec["memory"].get("per_device_peak_bytes", 0) / 2**30
+        r = rec["roofline"]
+        print(f"[OK] {arch} x {shape_name} ({rec['mesh']}): "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s | "
+              f"peak {peak:.2f} GiB/dev | "
+              f"t_c {r['t_compute_s']:.3e} t_m {r['t_memory_s']:.3e} "
+              f"t_x {r['t_collective_s']:.3e} -> {r['dominant']}-bound | "
+              f"useful {r['useful_flops_frac']:.2f}")
+        sys.stdout.flush()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"],
+                    default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--test-mesh", action="store_true",
+                    help="small 8-device mesh (CI)")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--save-hlo", default=None,
+                    help="directory for gzipped compiled HLO (reanalysis)")
+    ap.add_argument("--serve-fsdp", choices=["on", "off", "auto"],
+                    default="on", help="FSDP for serving shapes (H3 lever)")
+    ap.add_argument("--mla-fused", action="store_true",
+                    help="fused MLA latent expansion in prefill (H1 lever)")
+    ap.add_argument("--tag", default="", help="experiment tag in records")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    done = set()
+    if args.out and args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            if (arch, shape, mesh_name) in done:
+                print(f"[skip] {arch} x {shape} ({mesh_name})")
+                continue
+            try:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              test_mesh=args.test_mesh,
+                              fsdp=not args.no_fsdp,
+                              save_hlo_dir=args.save_hlo,
+                              serve_fsdp=args.serve_fsdp,
+                              mla_fused=args.mla_fused, tag=args.tag)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "ok": False,
+                       "mesh": mesh_name, "error": f"{type(e).__name__}: {e}"}
+                failures.append((arch, shape))
+                print(f"[FAIL] {arch} x {shape}: {e}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    print(f"\n{len(failures)} failures" + (f": {failures}" if failures else ""))
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers / scan-over-time model is undercounted by the trip count
+(16-100x here). This module parses the compiled (SPMD, per-device) HLO
+text, builds the computation call graph (while bodies/conditions, fusions,
+calls, conditionals), reads the ``known_trip_count`` backend configs, and
+propagates execution multipliers. On top of that it counts:
+
+  * FLOPs: 2 * prod(output dims) * prod(contracting dims) per dot op
+    (elementwise FLOPs are ignored — matmuls dominate every model here).
+  * bytes: materialized-buffer traffic proxy — every op output in a
+    *control* computation (entry, while bodies, conditional branches, call
+    targets) is one write + one read downstream (2x), plus entry parameters
+    read once. Ops inside fusion/reduce subcomputations never materialize
+    and are excluded (their FLOPs still count).
+  * collectives: per-op wire bytes (all-reduce 2x) with multipliers, split
+    into intra-pod (ICI) vs pod-crossing (DCN) via replica groups.
+
+Validated against cost_analysis() on scan-free modules in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_SINGLE = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_CALLED_LIST = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_computations(rest: str) -> List[str]:
+    out = list(_CALLED_SINGLE.findall(rest))
+    for blob in _CALLED_LIST.findall(rest):
+        out.extend(x.strip().lstrip("%") for x in blob.split(",") if x.strip())
+    return out
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(
+    r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _first_group_ids(rest: str):
+    """Device ids of the first replica group (both HLO syntaxes). Iota
+    groups are uniform, so the first group's pod span is representative."""
+    g = _GROUPS.search(rest)
+    if g and g.group(1).strip():
+        return [int(x) for x in g.group(1).split(",") if x.strip()]
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        import numpy as _np
+        gshape = [int(x) for x in m.group(1).split(",")]
+        dims = [int(x) for x in m.group(2).split(",")]
+        ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(gshape)
+        return ids[tuple([0] * (len(gshape) - 1))].tolist()
+    return None
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "conditional", "call", "after-all", "custom-call",
+    "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_info(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + list of (dtype, dims) for a (possibly tuple) shape."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+        shapes.append((dt, dl))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str           # text after the opening paren (args + attrs)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_wire: Dict[str, float]
+    collective_counts: Dict[str, int]
+    ici_bytes: float
+    dcn_bytes: float
+    dot_flops_uncorrected: float        # multiplier=1 everywhere (sanity)
+
+    @property
+    def collective_bytes(self) -> float:
+        return self.ici_bytes + self.dcn_bytes
+
+
+def parse_computations(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HEADER.match(line)
+            if m and "->" in line:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            comps[current].append(Op(*m.groups()))
+    return comps
+
+
+# opcodes whose called computations are inlined (no materialized buffers)
+_INLINE_CALLERS = {"fusion", "reduce", "reduce-window", "scatter", "map",
+                   "sort", "select-and-scatter", "all-reduce",
+                   "reduce-scatter", "custom-call"}
+
+
+def _multipliers(comps: Dict[str, List[Op]], entry: str
+                 ) -> Tuple[Dict[str, float], set]:
+    """(execution multiplier per computation, set of inlined computations)."""
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    inlined: set = set()
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(50):
+        new = {name: (1.0 if name == entry else 0.0) for name in comps}
+        new_inlined: set = set()
+        for cname, ops in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for op in ops:
+                called = _called_computations(op.rest)
+                if not called:
+                    continue
+                trip = 1.0
+                if op.opcode == "while":
+                    t = _TRIP.search(op.rest)
+                    trip = float(t.group(1)) if t else 1.0
+                inline = (op.opcode in _INLINE_CALLERS
+                          or cname in inlined)
+                for target in called:
+                    if target in new:
+                        # condition runs trip+1 times; close enough
+                        new[target] += m * trip
+                        if inline:
+                            new_inlined.add(target)
+        if new == mult and new_inlined == inlined:
+            break
+        mult = new
+        inlined = new_inlined
+    return mult, inlined
+
+
+def _entry_name(text: str, comps: Dict[str, List[Op]]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps)) if comps else ""
+
+
+def analyze(text: str, pod_size: int = 0) -> HloCost:
+    comps = parse_computations(text)
+    entry = _entry_name(text, comps)
+    mult, inlined = _multipliers(comps, entry)
+
+    # symbol table: op name -> shape string (module-wide unique names)
+    shapes: Dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            shapes[op.name] = op.shape_str
+    # entry parameters
+    entry_param_bytes = 0
+    header = re.search(r"^ENTRY\s+%?[\w\.\-]+\s*\((.*?)\)\s*->", text, re.M | re.S)
+    if header:
+        entry_param_bytes, _ = _shape_info(header.group(1))
+
+    flops = 0.0
+    flops_unc = 0.0
+    traffic = 0.0
+    cw: Dict[str, float] = {}
+    cc: Dict[str, int] = {}
+    ici = dcn = 0.0
+
+    def fusion_effective_bytes(op: Op, full_bytes: int) -> int:
+        """In-place dynamic-update-slice fusions write only the update."""
+        called = _called_computations(op.rest)
+        for tgt in called:
+            for inner in comps.get(tgt, []):
+                if inner.opcode == "dynamic-update-slice":
+                    args = [a.strip().lstrip("%")
+                            for a in inner.rest.split(")")[0].split(",")]
+                    if len(args) >= 2 and args[1] in shapes:
+                        ub, _ = _shape_info(shapes[args[1]])
+                        if 0 < ub < full_bytes:
+                            return ub
+        return full_bytes
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in ops:
+            out_bytes, out_shapes = _shape_info(op.shape_str)
+            opc = op.opcode
+            if opc == "dot":
+                lhs = op.rest.split(",")[0].strip().lstrip("%")
+                lhs_shape = shapes.get(lhs, "")
+                _, lhs_dims = _shape_info(lhs_shape)
+                contract = 1
+                cm = _LHS_CONTRACT.search(op.rest)
+                if cm and lhs_dims:
+                    dims = lhs_dims[0][1]
+                    for idx in cm.group(1).split(","):
+                        if idx.strip() and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+                out_elems = 0
+                for dt, dl in out_shapes:
+                    n = 1
+                    for d in dl:
+                        n *= d
+                    out_elems += n
+                f = 2.0 * out_elems * contract
+                flops += m * f
+                flops_unc += f
+            base = opc.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not opc.endswith("-done"):
+                b = out_bytes * WIRE_FACTOR[base]
+                cw[base] = cw.get(base, 0.0) + m * b
+                cc[base] = cc.get(base, 0) + int(m)
+                crosses = False
+                if pod_size:
+                    ids = _first_group_ids(op.rest)
+                    if ids:
+                        crosses = len({i // pod_size for i in ids}) > 1
+                if crosses:
+                    dcn += m * b
+                else:
+                    ici += m * b
+            if (cname not in inlined and opc not in _SKIP_BYTES_OPS
+                    and not opc.endswith("-done")):
+                eff = out_bytes
+                if opc == "fusion":
+                    eff = fusion_effective_bytes(op, out_bytes)
+                traffic += m * eff
+
+    return HloCost(flops=flops, bytes=2.0 * traffic + entry_param_bytes,
+                   collective_wire=cw, collective_counts=cc,
+                   ici_bytes=ici, dcn_bytes=dcn,
+                   dot_flops_uncorrected=flops_unc)

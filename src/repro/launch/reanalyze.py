@@ -1,0 +1,62 @@
+"""Recompute roofline records from archived compiled-HLO (no recompilation).
+
+The dry-run saves gzipped per-device HLO under results/hlo/; analyzer
+changes (repro.launch.hlo_cost) can then be re-applied in seconds:
+
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        --records results/dryrun_16x16.jsonl --hlo-dir results/hlo
+"""
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch import analysis
+
+
+def hlo_path(hlo_dir: str, rec: dict) -> str:
+    tag_s = ("_" + rec["tag"]) if rec.get("tag") else ""
+    tag = f"{rec['arch']}_{rec['shape']}_{rec['mesh'].replace('x', '-')}{tag_s}"
+    return os.path.join(hlo_dir, tag + ".txt.gz")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", required=True)
+    ap.add_argument("--hlo-dir", required=True)
+    ap.add_argument("--out", default=None, help="default: in-place")
+    args = ap.parse_args()
+
+    out_path = args.out or args.records
+    recs = []
+    with open(args.records) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+
+    n_updated = 0
+    for rec in recs:
+        if not rec.get("ok"):
+            continue
+        path = hlo_path(args.hlo_dir, rec)
+        if not os.path.exists(path):
+            continue
+        with gzip.open(path, "rt") as f:
+            text = f.read()
+        pod_size = 256 if rec["mesh"] == "2x16x16" else 0
+        rl = analysis.roofline(None, chips=rec["chips"], pod_size=pod_size,
+                               model_flops=rec["roofline"]["model_flops"],
+                               hlo_text=text)
+        rec["roofline"] = rl.row()
+        n_updated += 1
+
+    with open(out_path, "w") as f:
+        for rec in recs:
+            f.write(json.dumps(rec) + "\n")
+    print(f"updated {n_updated}/{len(recs)} records -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

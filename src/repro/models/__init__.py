@@ -1,0 +1,6 @@
+from repro.models.config import (MLAConfig, MoEConfig, ModelConfig,
+                                 RWKVConfig, SSMConfig, repeat_pattern)
+from repro.models.model import Model
+
+__all__ = ["MLAConfig", "MoEConfig", "ModelConfig", "RWKVConfig", "SSMConfig",
+           "Model", "repeat_pattern"]

@@ -1,0 +1,624 @@
+"""Attention: GQA/MHA, MLA (DeepSeek), sliding-window/chunked local,
+cross-attention; unified KV-cache pytree for serving.
+
+Design notes
+------------
+* Head padding for sharding: the production mesh has a 16-way ``model``
+  axis; configs whose q/kv head counts don't divide it are padded
+  (``cfg.*_padded``). Padded q heads get zero wq columns + zero wo rows, so
+  outputs are bit-identical to the unpadded model. KV heads are duplicated
+  when the pad factor is integral (balanced cache layout), else zero-padded.
+  A static ``kv_index`` map (q head -> kv head) keeps GQA math exact under
+  any padding combination.
+* KV cache: ``{"k","v": (B, W, Hkv, hd), "pos_ids": (B, W) int32,
+  "length": (B,) int32}``; W = min(max_len, sliding_window). Ring buffer for
+  windowed attention; ``pos_ids`` (-1 = empty) drives masking, so windowed,
+  chunked, and full attention share one decode path.
+* Keys are stored rotated (RoPE applied at write time) — standard practice;
+  ring-buffer eviction then needs no re-rotation.
+* Long-sequence forward uses a two-level flash-style scan (q chunks x kv
+  chunks, running softmax) to keep activation memory O(chunk^2), which is
+  what makes the 32k-prefill dry-runs fit in 16 GB HBM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+NEG_INF = -1e9
+DIRECT_ATTN_MAX_SEQ = 2048     # above this, use the flash-style scan
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+
+def _kv_index_map(n_q: int, n_kv: int, n_q_pad: int, n_kv_pad: int) -> np.ndarray:
+    """Static map q-head -> kv-head honoring the original GQA grouping.
+
+    When only KV heads are padded (consecutive-duplicate layout from
+    attn_init), the map is the uniform divide i // (n_q_pad // n_kv_pad):
+    shard-aligned (q head i and its kv head land on the same model-axis
+    shard) and expressible as a local reshape — see uniform_gqa_group().
+    """
+    group = n_q // n_kv
+    dup = n_kv_pad // n_kv if n_kv_pad % n_kv == 0 else 1
+    if n_q_pad == n_q and dup > 1 and n_q_pad % n_kv_pad == 0:
+        gp = n_q_pad // n_kv_pad
+        idx = (np.arange(n_q_pad) // gp).astype(np.int32)
+        # correctness: padded kv c is a copy of orig kv c // dup
+        assert all((idx[i] // dup) == (i // group) for i in range(n_q))
+        return idx
+    idx = np.zeros((n_q_pad,), dtype=np.int32)
+    for i in range(n_q):
+        orig_kv = i // group
+        idx[i] = orig_kv * dup + (i % dup if dup > 1 else 0)
+    return idx
+
+
+def uniform_gqa_group(cfg) -> Optional[int]:
+    """Group size when the q->kv map is the uniform divide (grouped-einsum
+    attention, no head-expansion gather); None otherwise."""
+    n_q, n_kv = cfg.n_heads, cfg.n_kv_heads
+    n_qp, n_kvp = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    if n_qp % n_kvp:
+        return None
+    idx = _kv_index_map(n_q, n_kv, n_qp, n_kvp)
+    gp = n_qp // n_kvp
+    if np.array_equal(idx, np.arange(n_qp) // gp):
+        return gp
+    return None
+
+
+def attn_init(key, cfg, d_in: Optional[int] = None, qk_norm: bool = False) -> Dict:
+    """Self/cross attention params. ``d_in`` overrides the input width
+    (Zamba2 shared block takes concat(h, emb) = 2*d_model)."""
+    dt = L.dtype_of(cfg)
+    d = d_in if d_in is not None else cfg.d_model
+    hd = cfg.head_dim_
+    n_q, n_kv = cfg.n_heads, cfg.n_kv_heads
+    n_qp, n_kvp = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    ks = jax.random.split(key, 6)
+    wq = L.dense_init(ks[0], d, n_qp * hd, dt)
+    wk = L.dense_init(ks[1], d, n_kv * hd, dt)
+    wv = L.dense_init(ks[2], d, n_kv * hd, dt)
+    wo = L.dense_init(ks[3], n_qp * hd, cfg.d_model, dt)
+    # zero the padded q heads (columns of wq, rows of wo)
+    if n_qp > n_q:
+        wq = wq.at[:, n_q * hd:].set(0)
+        wo = wo.at[n_q * hd:, :].set(0)
+    if n_kvp > n_kv:
+        if n_kvp % n_kv == 0:
+            dup = n_kvp // n_kv
+            wk = jnp.repeat(wk.reshape(d, n_kv, hd), dup, axis=1).reshape(d, -1)
+            wv = jnp.repeat(wv.reshape(d, n_kv, hd), dup, axis=1).reshape(d, -1)
+        else:
+            pad = (n_kvp - n_kv) * hd
+            wk = jnp.pad(wk, ((0, 0), (0, pad)))
+            wv = jnp.pad(wv, ((0, 0), (0, pad)))
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    if qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd, dt)
+        p["k_norm"] = L.rmsnorm_init(hd, dt)
+    return p
+
+
+def mla_init(key, cfg) -> Dict:
+    m = cfg.mla
+    dt = L.dtype_of(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads_padded
+    ks = jax.random.split(key, 7)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {
+        "w_dq": L.dense_init(ks[0], d, m.q_lora_rank, dt),
+        "q_norm": L.rmsnorm_init(m.q_lora_rank, dt),
+        "w_uq": L.dense_init(ks[1], m.q_lora_rank, H * qk_head, dt),
+        "w_dkv": L.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dt),
+        "w_uk": L.dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dt),
+        "w_uv": L.dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dt),
+        "wo": L.dense_init(ks[5], H * m.v_head_dim, d, dt),
+    }
+    nH = cfg.n_heads
+    if H > nH:
+        p["w_uq"] = p["w_uq"].at[:, nH * qk_head:].set(0)
+        p["w_uk"] = p["w_uk"].at[:, nH * m.qk_nope_head_dim:].set(0)
+        p["w_uv"] = p["w_uv"].at[:, nH * m.v_head_dim:].set(0)
+        p["wo"] = p["wo"].at[nH * m.v_head_dim:, :].set(0)
+    return p
+
+
+# --------------------------------------------------------------------------
+# masking
+# --------------------------------------------------------------------------
+
+
+def self_attn_bias(q_pos: jax.Array, k_pos: jax.Array,
+                   window: Optional[int], chunk: Optional[int]) -> jax.Array:
+    """(..., Sq, Sk) additive bias. k_pos == -1 marks empty cache slots."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = k_pos[..., None, :].astype(jnp.int32)
+    ok = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        ok &= kp > qp - window
+    if chunk is not None:
+        ok &= (kp // chunk) == (qp // chunk)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# core attention math (reference path; Pallas kernels in repro.kernels)
+# --------------------------------------------------------------------------
+
+
+def _direct_attention(q, k, v, bias):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd), bias: (B,1|H,Sq,Sk) -> (B,Sq,H,hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = scores + bias
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _flash_attention(q, k, v, q_pos, k_pos, window, chunk):
+    """Two-level running-softmax scan; O(Q_CHUNK*KV_CHUNK) score memory.
+
+    hd (q/k dim) may differ from hd_v (MLA: 192 vs 128).
+    """
+    B, Sq, H, hd = q.shape
+    hd_v = v.shape[-1]
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nq = -(-Sq // Q_CHUNK)
+    nk = -(-Sk // KV_CHUNK)
+    Sq_p, Sk_p = nq * Q_CHUNK, nk * KV_CHUNK
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, Sq_p - Sq)), constant_values=0)
+    kpos = jnp.pad(k_pos, ((0, 0), (0, Sk_p - Sk)), constant_values=-1)
+
+    def blkshard(x):
+        # keep batch/head shardings pinned through the chunk loops — GSPMD
+        # propagation through lax.map/scan otherwise degrades to replicated
+        # (EXPERIMENTS.md SSPerf H1 iter 3: a replicated-batch all-reduce)
+        return shard(x, None, "batch", None, "heads", None)
+
+    q_blocks = blkshard(jnp.moveaxis(qp.reshape(B, nq, Q_CHUNK, H, hd), 1, 0))
+    qpos_blocks = jnp.moveaxis(qpos.reshape(B, nq, Q_CHUNK), 1, 0)
+    k_blocks = blkshard(jnp.moveaxis(kp_.reshape(B, nk, KV_CHUNK, H, hd), 1, 0))
+    v_blocks = blkshard(jnp.moveaxis(vp.reshape(B, nk, KV_CHUNK, H, hd_v), 1, 0))
+    kpos_blocks = jnp.moveaxis(kpos.reshape(B, nk, KV_CHUNK), 1, 0)
+
+    def per_q_block(qb, qposb):
+        # qb: (B, Qc, H, hd)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kposb = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32) * scale
+            s = shard(s, "batch", "heads", None, None)
+            s = s + self_attn_bias(qposb, kposb, window, chunk)[:, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qb.dtype), vb).astype(jnp.float32)
+            acc_new = shard(acc_new, "batch", "heads", None, None)
+            return (m_new, l_new, acc_new), None
+
+        m0 = shard(jnp.full((B, H, Q_CHUNK), -jnp.inf, jnp.float32),
+                   "batch", "heads", None)
+        l0 = shard(jnp.zeros((B, H, Q_CHUNK), jnp.float32),
+                   "batch", "heads", None)
+        a0 = shard(jnp.zeros((B, H, Q_CHUNK, hd_v), jnp.float32),
+                   "batch", "heads", None, None)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (k_blocks, v_blocks, kpos_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B, Qc, H, hd)
+
+    out_blocks = jax.lax.map(lambda args: per_q_block(*args),
+                             (q_blocks, qpos_blocks))
+    out = jnp.moveaxis(out_blocks, 0, 1).reshape(B, Sq_p, H, hd_v)
+    return shard(out[:, :Sq], "batch", "seq", "heads", None)
+
+
+def attention_core(q, k, v, q_pos, k_pos, window=None, chunk=None):
+    """Dispatch between direct and flash-scan attention (same math)."""
+    Sk = k.shape[1]
+    if Sk <= DIRECT_ATTN_MAX_SEQ:
+        bias = self_attn_bias(q_pos, k_pos, window, chunk)[:, None]
+        return _direct_attention(q, k, v, bias)
+    return _flash_attention(q, k, v, q_pos, k_pos, window, chunk)
+
+
+# --------------------------------------------------------------------------
+# KV cache
+# --------------------------------------------------------------------------
+
+
+def cache_width(cfg, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=None) -> Dict:
+    dt = dtype or L.dtype_of(cfg)
+    W = cache_width(cfg, max_len)
+    H, hd = cfg.n_kv_heads_padded, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, W, H, hd), dt),
+        "v": jnp.zeros((batch, W, H, hd), dt),
+        "pos_ids": jnp.full((batch, W), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _ring_slots(length: jax.Array, W: int) -> jax.Array:
+    return jnp.mod(length, W)
+
+
+def prefill_write_cache(cache: Dict, k: jax.Array, v: jax.Array,
+                        pos_ids: jax.Array) -> Dict:
+    """Write a full prompt (possibly longer than the ring) into the cache.
+
+    For token j the ring slot is j % W; when S > W only the last W tokens
+    survive. Computed as a deterministic gather (no duplicate-scatter
+    ambiguity).
+    """
+    B, S = k.shape[0], k.shape[1]
+    W = cache["k"].shape[1]
+    if S <= W:
+        newk = cache["k"].at[:, :S].set(k)
+        newv = cache["v"].at[:, :S].set(v)
+        newpos = cache["pos_ids"].at[:, :S].set(pos_ids)
+    else:
+        s = jnp.arange(W)
+        j = s + W * ((S - 1 - s) // W)          # latest token landing in slot s
+        newk = jnp.take(k, j, axis=1)
+        newv = jnp.take(v, j, axis=1)
+        newpos = jnp.take(pos_ids, j, axis=1)
+    length = jnp.max(pos_ids, axis=1) + 1
+    return {"k": newk, "v": newv, "pos_ids": newpos, "length": length}
+
+
+def decode_write_cache(cache: Dict, k1: jax.Array, v1: jax.Array) -> Dict:
+    """Append one token per sequence. k1/v1: (B, 1, Hkv, hd)."""
+    B = k1.shape[0]
+    W = cache["k"].shape[1]
+    slot = _ring_slots(cache["length"], W)
+    bidx = jnp.arange(B)
+    return {
+        "k": cache["k"].at[bidx, slot].set(k1[:, 0]),
+        "v": cache["v"].at[bidx, slot].set(v1[:, 0]),
+        "pos_ids": cache["pos_ids"].at[bidx, slot].set(cache["length"]),
+        "length": cache["length"] + 1,
+    }
+
+
+# --------------------------------------------------------------------------
+# GQA self-attention block
+# --------------------------------------------------------------------------
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _qkv(p, cfg, x, positions, qk_norm=False):
+    hd = cfg.head_dim_
+    n_qp, n_kvp = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    q = _split_heads(jnp.einsum("...d,dh->...h", x, p["wq"]), n_qp, hd)
+    k = _split_heads(jnp.einsum("...d,dh->...h", x, p["wk"]), n_kvp, hd)
+    v = _split_heads(jnp.einsum("...d,dh->...h", x, p["wv"]), n_kvp, hd)
+    if qk_norm and "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rotary_pct, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rotary_pct, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _expand_kv(cfg, k):
+    idx = jnp.asarray(_kv_index_map(cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.n_heads_padded, cfg.n_kv_heads_padded))
+    return jnp.take(k, idx, axis=2)
+
+
+def self_attention(p: Dict, cfg, x: jax.Array, positions: jax.Array,
+                   layer_window: Optional[int], layer_chunk: Optional[int],
+                   cache: Optional[Dict] = None, mode: str = "train",
+                   ) -> Tuple[jax.Array, Optional[Dict]]:
+    """mode: 'train' (no cache) | 'prefill' (build cache) | 'decode' (1 tok)."""
+    q, k, v = _qkv(p, cfg, x, positions, qk_norm="q_norm" in p)
+    use_kernel = cfg.attn_impl != "ref" and uniform_gqa_group(cfg) is not None
+    if mode == "decode":
+        assert cache is not None
+        cache = decode_write_cache(cache, k, v)
+        gp = uniform_gqa_group(cfg)
+        bias = self_attn_bias(positions, cache["pos_ids"],
+                              layer_window, layer_chunk)[:, None]
+        if use_kernel:
+            from repro.kernels import ops as KOPS
+            out = KOPS.decode_attention(
+                q[:, 0],                            # (B, Hq, hd)
+                jnp.moveaxis(cache["k"], 1, 2),     # (B, Hkv, W, hd)
+                jnp.moveaxis(cache["v"], 1, 2),
+                positions[:, 0], cache["pos_ids"],
+                window=layer_window, chunk=layer_chunk,
+                impl=cfg.attn_impl)[:, None]        # (B, 1, Hq, hd)
+        elif gp is not None:
+            # grouped attention: contract against the shard-local kv head
+            # directly — no head-expansion gather of the cache (perf: the
+            # take-based expansion all-gathers the cache over the model
+            # axis; EXPERIMENTS.md SSPerf H3)
+            kk = shard(cache["k"], "batch", "kv_seq", "kv_heads", None)
+            vv = shard(cache["v"], "batch", "kv_seq", "kv_heads", None)
+            B_, Sq_ = q.shape[0], q.shape[1]
+            hd = q.shape[-1]
+            qg = q.reshape(B_, Sq_, kk.shape[2], gp, hd)
+            scale = 1.0 / math.sqrt(hd)
+            # bf16 x bf16 -> f32 accumulation in the dot itself (MXU-native;
+            # avoids materializing an f32 copy of the 32k cache — H3 iter 3)
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, kk,
+                            preferred_element_type=jnp.float32) * scale
+            sc = sc + bias[:, :, None]
+            w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+            out = jnp.einsum("bkgqs,bskd->bqkgd", w, vv)
+            out = out.reshape(B_, Sq_, -1, hd)
+        else:
+            kk = _expand_kv(cfg, cache["k"])
+            vv = _expand_kv(cfg, cache["v"])
+            kk = shard(kk, "batch", "kv_seq", "heads", None)
+            vv = shard(vv, "batch", "kv_seq", "heads", None)
+            out = _direct_attention(q, kk, vv, bias)
+    else:
+        if mode == "prefill":
+            cache = prefill_write_cache(cache, k, v, positions)
+        if use_kernel:
+            from repro.kernels import ops as KOPS
+            out = jnp.moveaxis(
+                KOPS.flash_attention(
+                    jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                    jnp.moveaxis(v, 1, 2), positions, positions,
+                    window=layer_window, chunk=layer_chunk,
+                    impl=cfg.attn_impl), 1, 2)
+        else:
+            kk = _expand_kv(cfg, k)
+            vv = _expand_kv(cfg, v)
+            out = attention_core(q, kk, vv, positions, positions,
+                                 layer_window, layer_chunk)
+    out = shard(out, "batch", "seq", "heads", None)
+    flat = out.reshape(out.shape[:-2] + (-1,))
+    y = jnp.einsum("...h,hd->...d", flat, p["wo"])
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# --------------------------------------------------------------------------
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=None) -> Dict:
+    dt = dtype or L.dtype_of(cfg)
+    m = cfg.mla
+    W = cache_width(cfg, max_len)
+    return {
+        "ckv": jnp.zeros((batch, W, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, W, m.qk_rope_head_dim), dt),
+        "pos_ids": jnp.full((batch, W), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _mla_qkv_latent(p, cfg, x, positions):
+    """Returns per-head q (nope+rope) and the shared latent k parts."""
+    m = cfg.mla
+    H = cfg.n_heads_padded
+    cq = L.rmsnorm(p["q_norm"], jnp.einsum("...d,dr->...r", x, p["w_dq"]),
+                   cfg.norm_eps)
+    q = jnp.einsum("...r,rh->...h", cq, p["w_uq"])
+    q = q.reshape(q.shape[:-1] + (H, m.qk_nope_head_dim + m.qk_rope_head_dim))
+    q = shard(q, "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = L.apply_rope(q_rope, positions, 1.0, cfg.rope_theta)
+
+    dkv = jnp.einsum("...d,dr->...r", x, p["w_dkv"])
+    ckv = L.rmsnorm(p["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:]
+    # shared-rope key (one per token, broadcast over heads)
+    k_rope = L.apply_rope(k_rope[..., None, :], positions, 1.0,
+                          cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_flash_fused(q_nope, q_rope, ckv, k_rope, w_uk, w_uv,
+                     q_pos, k_pos, window, scale):
+    """Flash scan over kv chunks with the latent->per-head expansion fused
+    into each chunk step (never materializes (B, S, H, nope+rope) keys).
+
+    q_nope: (B,Sq,H,n); q_rope: (B,Sq,H,r); ckv: (B,Sk,kvr);
+    k_rope: (B,Sk,r); w_uk: (kvr,H,n); w_uv: (kvr,H,v).
+    """
+    B, Sq, H, n = q_nope.shape
+    r = q_rope.shape[-1]
+    kvr = ckv.shape[-1]
+    v_dim = w_uv.shape[-1]
+    Sk = ckv.shape[1]
+    nq = -(-Sq // Q_CHUNK)
+    nk = -(-Sk // KV_CHUNK)
+    Sq_p, Sk_p = nq * Q_CHUNK, nk * KV_CHUNK
+    qn = jnp.pad(q_nope, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    qr = jnp.pad(q_rope, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    ck = jnp.pad(ckv, ((0, 0), (0, Sk_p - Sk), (0, 0)))
+    kr = jnp.pad(k_rope, ((0, 0), (0, Sk_p - Sk), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, Sq_p - Sq)), constant_values=0)
+    kpos = jnp.pad(k_pos, ((0, 0), (0, Sk_p - Sk)), constant_values=-1)
+
+    qn_b = jnp.moveaxis(qn.reshape(B, nq, Q_CHUNK, H, n), 1, 0)
+    qr_b = jnp.moveaxis(qr.reshape(B, nq, Q_CHUNK, H, r), 1, 0)
+    qpos_b = jnp.moveaxis(qpos.reshape(B, nq, Q_CHUNK), 1, 0)
+    ck_b = jnp.moveaxis(ck.reshape(B, nk, KV_CHUNK, kvr), 1, 0)
+    kr_b = jnp.moveaxis(kr.reshape(B, nk, KV_CHUNK, r), 1, 0)
+    kpos_b = jnp.moveaxis(kpos.reshape(B, nk, KV_CHUNK), 1, 0)
+
+    def per_q_block(qnb, qrb, qposb):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ckb, krb, kposb = inp
+            # fused expansion: per-chunk K/V only (KV_CHUNK x H x n)
+            k_nope = shard(jnp.einsum("bkr,rhn->bkhn", ckb, w_uk),
+                           "batch", "seq", "heads", None)
+            vv = shard(jnp.einsum("bkr,rhv->bkhv", ckb, w_uv),
+                       "batch", "seq", "heads", None)
+            s = (jnp.einsum("bqhn,bkhn->bhqk", qnb, k_nope)
+                 + jnp.einsum("bqhr,bkr->bhqk", qrb, krb)
+                 ).astype(jnp.float32) * scale
+            s = s + self_attn_bias(qposb, kposb, window, None)[:, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            pw = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + pw.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhv->bhqv", pw.astype(vv.dtype), vv).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, Q_CHUNK), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, Q_CHUNK), jnp.float32)
+        a0 = jnp.zeros((B, H, Q_CHUNK, v_dim), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ck_b, kr_b, kpos_b))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q_nope.dtype)
+
+    out_blocks = jax.lax.map(lambda a: per_q_block(*a), (qn_b, qr_b, qpos_b))
+    out = jnp.moveaxis(out_blocks, 0, 1).reshape(B, Sq_p, H, v_dim)
+    return out[:, :Sq]
+
+
+def mla_attention(p: Dict, cfg, x: jax.Array, positions: jax.Array,
+                  layer_window: Optional[int],
+                  cache: Optional[Dict] = None, mode: str = "train",
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Naive (expanded) path for train/prefill; absorbed path for decode.
+
+    The absorbed decode computes scores in the 512-dim latent space
+    directly against the cached ``ckv`` — this is what makes the MLA cache
+    (576 B/token/layer in bf16) pay off at 500k context.
+    """
+    m = cfg.mla
+    H = cfg.n_heads_padded
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, cfg, x, positions)
+
+    if mode == "decode":
+        assert cache is not None
+        B = x.shape[0]
+        W = cache["ckv"].shape[1]
+        slot = _ring_slots(cache["length"], W)
+        bidx = jnp.arange(B)
+        cache = {
+            "ckv": cache["ckv"].at[bidx, slot].set(ckv[:, 0]),
+            "k_rope": cache["k_rope"].at[bidx, slot].set(k_rope[:, 0]),
+            "pos_ids": cache["pos_ids"].at[bidx, slot].set(cache["length"]),
+            "length": cache["length"] + 1,
+        }
+        ckv_all = shard(cache["ckv"], "batch", "kv_seq", None)
+        krope_all = shard(cache["k_rope"], "batch", "kv_seq", None)
+        # absorb: q_lat[h] = q_nope[h] @ w_uk[h]^T  (B,1,H,kvr)
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+        s = (jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_all)
+             + jnp.einsum("bqhn,bkn->bhqk", q_rope, krope_all)
+             ).astype(jnp.float32) * scale
+        # NOTE: no score-tensor constraint here — the MLA latent cache is
+        # head-free, so forcing a head sharding on scores only adds
+        # resharding traffic (EXPERIMENTS.md SSPerf, deepseek-decode
+        # regression follow-up)
+        s = s + self_attn_bias(positions, cache["pos_ids"],
+                               layer_window, None)[:, None]
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv_all)
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)
+    else:
+        if mode == "prefill":
+            cache = prefill_write_cache(
+                {"k": cache["ckv"][..., None, :], "v": cache["k_rope"][..., None, :],
+                 "pos_ids": cache["pos_ids"], "length": cache["length"]},
+                ckv[..., None, :], k_rope[..., None, :], positions)
+            cache = {"ckv": cache["k"][..., 0, :], "k_rope": cache["v"][..., 0, :],
+                     "pos_ids": cache["pos_ids"], "length": cache["length"]}
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+        if cfg.mla_fused_prefill and x.shape[1] > DIRECT_ATTN_MAX_SEQ:
+            out = _mla_flash_fused(q_nope, q_rope, ckv, k_rope, w_uk, w_uv,
+                                   positions, positions, layer_window, scale)
+        else:
+            k_nope = shard(jnp.einsum("bkr,rhn->bkhn", ckv, w_uk),
+                           "batch", "seq", "heads", None)
+            vv = shard(jnp.einsum("bkr,rhv->bkhv", ckv, w_uv),
+                       "batch", "seq", "heads", None)
+            kk = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(
+                    k_rope[:, :, None, :],
+                    k_nope.shape[:3] + (m.qk_rope_head_dim,))], axis=-1)
+            kk = shard(kk, "batch", "seq", "heads", None)
+            qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+            qq = shard(qq, "batch", "seq", "heads", None)
+            out = attention_core(qq, kk, vv, positions, positions,
+                                 layer_window, None)
+    flat = out.reshape(out.shape[:-2] + (-1,))
+    return jnp.einsum("...h,hd->...d", flat, p["wo"]), cache
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (VLM image layers; enc-dec decoder)
+# --------------------------------------------------------------------------
+
+
+def cross_attn_init(key, cfg, gated: bool = False) -> Dict:
+    p = attn_init(key, cfg)
+    if gated:
+        p["gate"] = jnp.zeros((), L.dtype_of(cfg))
+    return p
+
+
+def build_cross_cache(p: Dict, cfg, memory: jax.Array) -> Dict:
+    """Precompute K/V from encoder/image embeddings (static during decode)."""
+    hd = cfg.head_dim_
+    n_kvp = cfg.n_kv_heads_padded
+    k = _split_heads(jnp.einsum("...d,dh->...h", memory, p["wk"]), n_kvp, hd)
+    v = _split_heads(jnp.einsum("...d,dh->...h", memory, p["wv"]), n_kvp, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attention(p: Dict, cfg, x: jax.Array,
+                    cross_cache: Dict) -> jax.Array:
+    hd = cfg.head_dim_
+    q = _split_heads(jnp.einsum("...d,dh->...h", x, p["wq"]),
+                     cfg.n_heads_padded, hd)
+    kk = _expand_kv(cfg, cross_cache["k"])
+    vv = _expand_kv(cfg, cross_cache["v"])
+    Sk = kk.shape[1]
+    bias = jnp.zeros((x.shape[0], 1, x.shape[1], Sk), jnp.float32)
+    out = _direct_attention(q, kk, vv, bias)
+    flat = out.reshape(out.shape[:-2] + (-1,))
+    y = jnp.einsum("...h,hd->...d", flat, p["wo"])
+    if "gate" in p:
+        y = y * jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype)
+    return y

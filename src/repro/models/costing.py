@@ -1,0 +1,71 @@
+"""Analytic parameter/FLOP accounting per ModelConfig.
+
+Feeds two consumers: the roofline's MODEL_FLOPS = 6*N_active*D (training)
+or 2*N_active*D (inference) sanity term, and the carbon model's LLMWorkload
+(per-token energy on GPU/TPU profiles).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.energy import LLMWorkload
+from repro.models.model import Model
+
+
+def param_counts(cfg) -> Tuple[float, float]:
+    """(total, active-per-token) parameter counts from the real init shapes."""
+    shapes = Model(cfg).param_shapes()
+    total = 0.0
+    expert_total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for kp, leaf in flat:
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        total += n
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in kp]
+        if any(str(nm).startswith("experts_") for nm in names):
+            expert_total += n
+    active = total
+    if cfg.moe is not None and expert_total:
+        frac = min(1.0, cfg.moe.top_k / cfg.moe.n_experts)
+        active = total - expert_total * (1.0 - frac)
+    return total, active
+
+
+def model_flops(cfg, tokens: float, training: bool) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference) + attention term."""
+    _, active = param_counts(cfg)
+    mult = 6.0 if training else 2.0
+    return mult * active * tokens
+
+
+def workload_of(cfg, dtype_bytes: int = 2) -> LLMWorkload:
+    """LLMWorkload view of a ModelConfig for the energy/carbon model."""
+    total, active = param_counts(cfg)
+    hd = cfg.head_dim_
+    kv_per_tok = 0.0
+    state_bytes = 0.0
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind in ("dense", "parallel", "moe", "enc", "dec", "shared"):
+            if cfg.layer_uses_chunked_attn(i):
+                continue               # ring cache, O(1) amortized growth
+            kv_per_tok += 2 * cfg.n_kv_heads_padded * hd * dtype_bytes
+        elif kind in ("mla", "mla_moe"):
+            m = cfg.mla
+            kv_per_tok += (m.kv_lora_rank + m.qk_rope_head_dim) * dtype_bytes
+        elif kind == "mamba2":
+            s = cfg.ssm
+            state_bytes += (s.n_heads(cfg.d_model) * s.head_dim * s.state_dim
+                            * 4 + (s.d_conv - 1) * s.conv_dim(cfg.d_model) * 4)
+        elif kind == "rwkv6":
+            H = cfg.d_model // cfg.rwkv.head_dim
+            state_bytes += H * cfg.rwkv.head_dim ** 2 * 4 + 2 * cfg.d_model * dtype_bytes
+    return LLMWorkload(
+        name=cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
+        n_heads=cfg.n_heads_padded, n_kv_heads=cfg.n_kv_heads_padded,
+        head_dim=hd, d_ff=cfg.d_ff, vocab=cfg.padded_vocab,
+        params_total=total, params_active=active, dtype_bytes=dtype_bytes,
+        kv_bytes_per_token=kv_per_tok, state_bytes=state_bytes,
+        sliding_window=cfg.sliding_window)

@@ -1,0 +1,37 @@
+"""STUB modality frontends (the one allowed stub, per the task spec).
+
+The [vlm]/[audio] architectures specify the transformer backbone only; the
+vision encoder (ViT/SigLIP + projector) and audio codec (mel-spectrogram +
+conv feature extractor) are stubbed: these functions emit precomputed
+frame/patch *embeddings* of the right shape — deterministic pseudo-features
+derived from a seed so tests are reproducible — and ``input_specs`` in
+repro.launch.dryrun emits matching ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_embeddings(key, batch: int, n_tokens: int, d_model: int,
+                      dtype=jnp.bfloat16) -> jax.Array:
+    """Stub ViT output: (batch, n_tokens, d_model) patch embeddings."""
+    return (jax.random.normal(key, (batch, n_tokens, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def audio_frames(key, batch: int, n_frames: int, d_model: int,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    """Stub speech-encoder frontend output: (batch, frames, d_model)."""
+    return (jax.random.normal(key, (batch, n_frames, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def image_positions(batch: int, n_tokens: int, seq_len: int) -> jax.Array:
+    """Early-fusion slots: first n_tokens positions of the sequence."""
+    pos = jnp.arange(min(n_tokens, seq_len), dtype=jnp.int32)
+    if n_tokens > seq_len:
+        pos = jnp.pad(pos, (0, 0))
+    return jnp.broadcast_to(pos[None], (batch, pos.shape[0]))

@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Reference path runs the WKV6 recurrence as a ``lax.scan`` over time with an
+f32 (B, H, hd, hd) state — numerically safe for arbitrary sequence length
+(the chunked q*exp(-cumsum log w) factorization overflows for long chunks).
+The TPU hot path is the Pallas kernel in ``repro.kernels.wkv6`` which keeps
+the per-(batch, head) state in VMEM across an in-kernel time loop.
+
+State pytree: {"att_shift": (B, d), "ffn_shift": (B, d),
+"wkv": (B, H, hd, hd) f32, "length": (B,)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def rwkv_init(key, cfg) -> Dict:
+    r = cfg.rwkv
+    dt = L.dtype_of(cfg)
+    d = cfg.d_model
+    H = d // r.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix
+        "mix_x": jnp.full((d,), 0.5, jnp.float32),
+        "mix_base": jnp.full((5, d), 0.5, jnp.float32),
+        "mix_lora_A": L.normal(ks[0], (d, 5 * r.mix_lora), 0.01, jnp.float32),
+        "mix_lora_B": L.normal(ks[1], (5, r.mix_lora, d), 0.01, jnp.float32),
+        "w0": jnp.full((d,), -6.0, jnp.float32),     # slow decay default
+        "w_lora_A": L.normal(ks[2], (d, r.decay_lora), 0.01, jnp.float32),
+        "w_lora_B": L.normal(ks[3], (r.decay_lora, d), 0.01, jnp.float32),
+        "wr": L.dense_init(ks[4], d, d, dt),
+        "wk": L.dense_init(ks[5], d, d, dt),
+        "wv": L.dense_init(ks[6], d, d, dt),
+        "wg": L.dense_init(ks[7], d, d, dt),
+        "u": L.normal(ks[8], (H, r.head_dim), 0.5, jnp.float32),
+        "ln_x": L.layernorm_init(d, dt),             # per-head group norm
+        "wo": L.dense_init(ks[9], d, d, dt),
+        # channel-mix
+        "cmix_k": jnp.full((d,), 0.5, jnp.float32),
+        "cmix_r": jnp.full((d,), 0.5, jnp.float32),
+        "cwk": L.dense_init(ks[10], d, cfg.d_ff, dt),
+        "cwv": L.dense_init(ks[11], cfg.d_ff, d, dt),
+        "cwr": L.dense_init(jax.random.fold_in(key, 99), d, d, dt),
+    }
+    return p
+
+
+def init_rwkv_state(cfg, batch: int, dtype=None) -> Dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    dt_ = dtype or L.dtype_of(cfg)
+    return {
+        "att_shift": jnp.zeros((batch, d), dt_),
+        "ffn_shift": jnp.zeros((batch, d), dt_),
+        "wkv": jnp.zeros((batch, H, r.head_dim, r.head_dim), jnp.float32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """xprev[t] = x[t-1] (first step uses carried state)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xprev):
+    """Data-dependent token-shift interpolation (5 targets r,k,v,w,g)."""
+    dxp = (xprev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    base = xf + dxp * p["mix_x"]
+    lo = jnp.tanh(jnp.einsum("btd,dk->btk", base, p["mix_lora_A"]))
+    lo = lo.reshape(lo.shape[:2] + (5, -1))
+    delta = jnp.einsum("btim,imd->btid", lo, p["mix_lora_B"])
+    mixed = xf[:, :, None, :] + dxp[:, :, None, :] * (p["mix_base"] + delta)
+    return [mixed[:, :, i].astype(x.dtype) for i in range(5)]
+
+
+def wkv6_scan(r, k, v, w, u, state0):
+    """Reference WKV6 recurrence.
+
+    r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1); u: (H,hd);
+    state0: (B,H,hd,hd) f32. Returns out (B,T,H,hd) f32, final state.
+    """
+    rs = jnp.moveaxis(r.astype(jnp.float32), 1, 0)
+    ks_ = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    ws = jnp.moveaxis(w.astype(jnp.float32), 1, 0)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hd,hd)
+        s_eff = S + u[..., :, None] * kv
+        out = jnp.einsum("bhi,bhij->bhj", rt, s_eff)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    S, outs = jax.lax.scan(step, state0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(outs, 0, 1), S
+
+
+def time_mix(p: Dict, cfg, x: jax.Array, state: Optional[Dict],
+             mode: str) -> Tuple[jax.Array, Optional[jax.Array],
+                                 Optional[jax.Array]]:
+    r_cfg = cfg.rwkv
+    d = cfg.d_model
+    H, hd = d // r_cfg.head_dim, r_cfg.head_dim
+    B, T, _ = x.shape
+    prev = state["att_shift"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xprev)
+
+    def heads(y):
+        return y.reshape(B, T, H, hd)
+
+    r = heads(jnp.einsum("btd,dk->btk", xr, p["wr"]))
+    k = heads(jnp.einsum("btd,dk->btk", xk, p["wk"]))
+    v = heads(jnp.einsum("btd,dk->btk", xv, p["wv"]))
+    g = jnp.einsum("btd,dk->btk", xg, p["wg"])
+    # data-dependent decay (the Finch contribution)
+    wlog = p["w0"] + jnp.einsum(
+        "btd,dk->btk", jnp.tanh(jnp.einsum("btd,dr->btr",
+                                           xw.astype(jnp.float32),
+                                           p["w_lora_A"])), p["w_lora_B"])
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, T, H, hd)
+
+    r = shard(r, "batch", "seq", "heads", None)
+    state0 = (state["wkv"] if state is not None
+              else jnp.zeros((B, H, hd, hd), jnp.float32))
+    out, S = wkv6_scan(r, k, v, w, p["u"], state0)
+
+    out = L.layernorm(p["ln_x"], out.reshape(B, T, d).astype(x.dtype),
+                      cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("btd,dk->btk", out, p["wo"])
+    new_shift = x[:, -1] if mode in ("prefill", "decode") else None
+    new_S = S if mode in ("prefill", "decode") else None
+    return y, new_shift, new_S
+
+
+def channel_mix(p: Dict, cfg, x: jax.Array, state: Optional[Dict],
+                mode: str) -> Tuple[jax.Array, Optional[jax.Array]]:
+    prev = state["ffn_shift"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    xf, xpf = x.astype(jnp.float32), xprev.astype(jnp.float32)
+    xk = (xf + (xpf - xf) * p["cmix_k"]).astype(x.dtype)
+    xr = (xf + (xpf - xf) * p["cmix_r"]).astype(x.dtype)
+    kk = jnp.einsum("btd,df->btf", xk, p["cwk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    kk = shard(kk, "batch", "seq", "d_ff")
+    vv = jnp.einsum("btf,fd->btd", kk, p["cwv"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,dk->btk", xr,
+                                   p["cwr"]).astype(jnp.float32))
+    y = (rr * vv.astype(jnp.float32)).astype(x.dtype)
+    new_shift = x[:, -1] if mode in ("prefill", "decode") else None
+    return y, new_shift
+
+
+def rwkv_block(p: Dict, cfg, x: jax.Array, state: Optional[Dict] = None,
+               mode: str = "train") -> Tuple[jax.Array, Optional[Dict]]:
+    """Full RWKV6 layer: x + time_mix(ln1(x)); x + channel_mix(ln2(x))."""
+    h = L.layernorm(p["ln1"], x, cfg.norm_eps)
+    att, att_shift, wkv_s = time_mix(p["tmix"], cfg, h, state, mode)
+    x = x + shard(att, "batch", "seq", "embed")
+    h2 = L.layernorm(p["ln2"], x, cfg.norm_eps)
+    ffn, ffn_shift = channel_mix(p["tmix"], cfg, h2, state, mode)
+    x = x + shard(ffn, "batch", "seq", "embed")
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {
+            "att_shift": att_shift,
+            "ffn_shift": ffn_shift,
+            "wkv": wkv_s,
+            "length": (state["length"] + x.shape[1] if state is not None
+                       else jnp.full((x.shape[0],), x.shape[1], jnp.int32)),
+        }
+    return x, new_state
+
+
+def rwkv_layer_init(key, cfg) -> Dict:
+    k1, _ = jax.random.split(key)
+    dt = L.dtype_of(cfg)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, dt),
+        "ln2": L.layernorm_init(cfg.d_model, dt),
+        "tmix": rwkv_init(k1, cfg),
+    }

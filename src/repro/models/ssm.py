@@ -1,0 +1,204 @@
+"""Mamba2 (state-space dual) block — chunked SSD for train/prefill,
+O(1)-state recurrence for decode.
+
+Memory note: the naive associative-scan materializes (L, H, P, N) states —
+1.7 TB at 32k context for Zamba2-7B — so prefill uses the chunked SSD
+algorithm: quadratic attention-like compute within chunks (cfg.ssm.chunk)
+plus a sequential scan over per-chunk states ((L/chunk, H, P, N) only).
+The within-chunk part is the Pallas kernel target (repro.kernels.ssd).
+
+State pytree: {"conv": (B, d_conv-1, conv_dim), "state": (B, H, P, N),
+"length": (B,)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard
+
+
+def ssm_init(key, cfg) -> Dict:
+    s = cfg.ssm
+    dt = L.dtype_of(cfg)
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    cd = s.conv_dim(d)
+    ks = jax.random.split(key, 4)
+    # in_proj -> [z (di), xBC (cd), dt (H)]
+    p = {
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * s.n_groups * s.state_dim + H, dt),
+        "conv_w": L.normal(ks[1], (s.d_conv, cd), 1.0 / (s.d_conv ** 0.5),
+                           jnp.float32),
+        "conv_b": jnp.zeros((cd,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "gate_norm": L.rmsnorm_init(di, dt),
+        "out_proj": L.dense_init(ks[2], di, d, dt),
+    }
+    return p
+
+
+def init_ssm_state(cfg, batch: int, dtype=None) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    H, P, N = s.n_heads(d), s.head_dim, s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, s.conv_dim(d)), jnp.float32),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _causal_conv(s, xbc: jax.Array, conv_w, conv_b,
+                 conv_state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. xbc: (B, T, cd) f32."""
+    dc = s.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], dc - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(dc)) + conv_b
+    new_state = xp[:, -(dc - 1):] if dc > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _split_proj(s, cfg, zxbcdt):
+    d = cfg.d_model
+    di = s.d_inner(d)
+    gn = s.n_groups * s.state_dim
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _split_xbc(s, cfg, xbc):
+    d = cfg.d_model
+    di = s.d_inner(d)
+    gn = s.n_groups * s.state_dim
+    x = xbc[..., :di]
+    Bm = xbc[..., di:di + gn]
+    Cm = xbc[..., di + gn:]
+    return x, Bm, Cm
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (B,T,H,P) f32; dt: (B,T,H) f32 (>0); A: (H,) f32 (<0);
+    Bm/Cm: (B,T,G,N) f32 broadcast over heads; h0: (B,H,P,N) or None.
+    Returns y: (B,T,H,P), h_final: (B,H,P,N).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))     # dt=0: no-op tokens
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    xs = x.reshape(Bsz, nc, chunk, H, P)
+    dts = dt.reshape(Bsz, nc, chunk, H)
+    Bs = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+    Cs = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+
+    da = dts * A                                          # (B,nc,cl,H) <= 0
+    cum = jnp.cumsum(da, axis=2)
+    seg_total = cum[:, :, -1]                             # (B,nc,H)
+    xdt = xs * dts[..., None]
+
+    # intra-chunk: W[t,s] = exp(cum[t]-cum[s]) * (C_t . B_s), s <= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Wd = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bzthn,bzshn->bztsh", Cs, Bs)
+    y_intra = jnp.einsum("bztsh,bzshp->bzthp", CB * Wd, xdt)
+
+    # per-chunk emitted state: sum_s exp(total - cum[s]) * dt_s x_s (x) B_s
+    emit_w = jnp.exp(seg_total[:, :, None] - cum)          # (B,nc,cl,H)
+    h_chunk = jnp.einsum("bzshp,bzshn,bzsh->bzhpn", xdt, Bs, emit_w)
+
+    # inter-chunk sequential scan over nc
+    def step(h, inp):
+        seg, hc = inp
+        h_out = h                                          # state entering chunk
+        h = h * jnp.exp(seg)[:, :, None, None] + hc
+        return h, h_out
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    seg_sw = jnp.moveaxis(seg_total, 1, 0)                 # (nc,B,H)
+    hc_sw = jnp.moveaxis(h_chunk, 1, 0)
+    h_final, h_in = jax.lax.scan(step, h0, (seg_sw, hc_sw))
+    h_in = jnp.moveaxis(h_in, 0, 1)                        # (B,nc,H,P,N)
+
+    y_cross = jnp.einsum("bzthn,bzhpn,bzth->bzthp", Cs, h_in, jnp.exp(cum))
+    y = (y_intra + y_cross).reshape(Bsz, Tp, H, P)[:, :T]
+    return y, h_final
+
+
+def mamba2_block(p: Dict, cfg, x: jax.Array,
+                 state: Optional[Dict] = None, mode: str = "train",
+                 mask: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, T, d_model). mask: (B, T) 1=real token (padding freezes state)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, H, P, N = s.d_inner(d), s.n_heads(d), s.head_dim, s.state_dim
+    zxbcdt = jnp.einsum("btd,dk->btk", x, p["in_proj"]).astype(jnp.float32)
+    z, xbc, dt_raw = _split_proj(s, cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        assert state is not None
+        xbc_a, new_conv = _causal_conv(s, xbc, p["conv_w"], p["conv_b"],
+                                       state["conv"])
+        xx, Bm, Cm = _split_xbc(s, cfg, xbc_a)
+        dt = jax.nn.softplus(dt_raw + p["dt_bias"])        # (B,1,H)
+        xh = xx.reshape(-1, 1, H, P)[:, 0]
+        Bh = jnp.repeat(Bm.reshape(-1, 1, s.n_groups, N)[:, 0], H // s.n_groups, 1)
+        Ch = jnp.repeat(Cm.reshape(-1, 1, s.n_groups, N)[:, 0], H // s.n_groups, 1)
+        dt0 = dt[:, 0]
+        decay = jnp.exp(dt0 * A)                           # (B,H)
+        h = state["state"] * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xh, Bh, dt0)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + p["D"][:, None] * xh
+        y = y.reshape(-1, 1, di)
+        new_state = {"conv": new_conv, "state": h,
+                     "length": state["length"] + 1}
+    else:
+        if mask is not None:
+            dt_raw = jnp.where(mask[..., None] > 0, dt_raw, -1e9)  # softplus->0
+        prev_conv = state["conv"] if (state is not None and mode == "prefill_resume") else None
+        xbc_a, new_conv = _causal_conv(s, xbc, p["conv_w"], p["conv_b"], prev_conv)
+        xx, Bm, Cm = _split_xbc(s, cfg, xbc_a)
+        dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+        T = x.shape[1]
+        xh = xx.reshape(-1, T, H, P)
+        Bg = Bm.reshape(-1, T, s.n_groups, N)
+        Cg = Cm.reshape(-1, T, s.n_groups, N)
+        xh = shard(xh, "batch", "seq", "heads", None)
+        y, h_final = ssd_chunked(xh, dt, A, Bg, Cg, s.chunk)
+        y = y + p["D"][:, None] * xh
+        y = y.reshape(-1, T, di)
+        new_state = None
+        if mode == "prefill":
+            length = (mask.sum(axis=1).astype(jnp.int32) if mask is not None
+                      else jnp.full((x.shape[0],), T, jnp.int32))
+            new_state = {"conv": new_conv, "state": h_final, "length": length}
+
+    # gated RMSNorm then out-projection
+    y = L.rmsnorm(p["gate_norm"], (y * jax.nn.silu(z)).astype(x.dtype),
+                  cfg.norm_eps)
+    out = jnp.einsum("btd,dk->btk", y, p["out_proj"])
+    return out, new_state

@@ -1,0 +1,4 @@
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Request, Response
+
+__all__ = ["EngineConfig", "ServingEngine", "Request", "Response"]

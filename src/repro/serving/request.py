@@ -1,0 +1,30 @@
+"""Serving request/response types."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]                  # token ids
+    max_new_tokens: int = 150          # paper §2.1 times 150 generated tokens
+    arrival_s: float = 0.0
+    slo_s: Optional[float] = None
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    tokens: List[int]
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    energy_j: float = 0.0
+    carbon_g: float = 0.0
+    finished: bool = False
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)

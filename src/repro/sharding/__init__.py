@@ -1,0 +1,8 @@
+from repro.sharding.api import (ShardingContext, current_context, shard,
+                                use_sharding)
+from repro.sharding.rules import (DEFAULT_RULES, FSDP_RULES, expert_axes,
+                                  param_shardings, spec_for_param)
+
+__all__ = ["ShardingContext", "current_context", "shard", "use_sharding",
+           "DEFAULT_RULES", "FSDP_RULES", "expert_axes", "param_shardings",
+           "spec_for_param"]

@@ -1,0 +1,74 @@
+"""Logical-axis sharding constraints.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", "heads", None)``). When a ``ShardingContext``
+is active, the names map to mesh axes and become
+``with_sharding_constraint``; without one (CPU unit tests) the calls are
+no-ops, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    mesh: Mesh
+    rules: Dict[str, AxisVal]          # logical name -> mesh axis (or tuple)
+
+    def resolve(self, logical: Optional[str]) -> AxisVal:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        resolved = []
+        used: set = set()
+        for a in axes:
+            r = self.resolve(a)
+            # a mesh axis may appear at most once in a PartitionSpec
+            if r is not None:
+                rs = (r,) if isinstance(r, str) else tuple(r)
+                rs = tuple(x for x in rs
+                           if x not in used and x in self.mesh.shape)
+                used.update(rs)
+                r = rs if len(rs) > 1 else (rs[0] if rs else None)
+            resolved.append(r)
+        return P(*resolved)
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Dict[str, AxisVal]):
+    prev = current_context()
+    _STATE.ctx = ShardingContext(mesh=mesh, rules=rules)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o context)."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"shard(): array rank {x.ndim} != {len(axes)} axes")
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(axes))

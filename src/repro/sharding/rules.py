@@ -1,0 +1,172 @@
+"""Parameter/activation sharding rules for the production meshes.
+
+Activation rules map logical axis names used by model code to mesh axes.
+Parameter shardings are derived per-leaf: a name-based override table for
+the cases where intent matters (expert-parallel MoE weights), otherwise a
+shape-driven default — shard the largest dim divisible by the tensor axis
+over ``model``, and optionally (FSDP) the largest remaining divisible dim
+over the data axes (ZeRO-3-style, required to fit the >=90B-param training
+combos in 16 GB HBM/chip).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import AxisVal, ShardingContext
+
+# --- activation rules ------------------------------------------------------
+
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "experts": ("data", "model"),
+    "expert_flat": ("data", "model"),  # (E*C, d) dispatch buffers / sorted ids
+    "tokens": ("pod", "data"),         # flattened (B*S, d) token tables
+    "vocab": "model",
+    "embed": None,
+    "state": None,
+    "frames": None,
+}
+
+# long-context decode (global_batch=1): batch cannot shard; shard the KV/seq
+# dimension over the data axes instead (context parallelism).
+LONG_CONTEXT_RULES: Dict[str, AxisVal] = dict(
+    DEFAULT_RULES,
+    batch=None,
+    kv_seq=("pod", "data"),
+    seq=("pod", "data"),
+)
+
+# --- parameter rules -------------------------------------------------------
+
+# leaf-name overrides: dims where the shape heuristic would pick wrong.
+# Value: tuple of logical roles per (trailing) dim; "tensor" -> model axis,
+# "fsdp" -> data axes when FSDP is on, "expert" -> the combined
+# (data, model) axes = full expert parallelism (each chip owns whole
+# experts; no weight gather, tokens move via all-to-all), None -> replicated.
+PARAM_OVERRIDES: Dict[str, Tuple[Optional[str], ...]] = {
+    # MoE expert weights: expert-parallel (ea) x ffn-sharded (fa); see
+    # expert_axes() and repro.models.moe_sharded
+    "experts_gate": ("expert", None, "expert_ffn"),
+    "experts_up": ("expert", None, "expert_ffn"),
+    "experts_down": ("expert", "expert_ffn", None),
+    "router": (None, None),            # (d, E): replicate (small, latency)
+    # mamba/rwkv small tensors: replicate
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "conv_w": (None, None), "conv_b": (None,),
+    "u": (None, None), "w0": (None,),
+    "mix_base": (None, None), "mix_x": (None,),
+}
+
+
+def expert_axes(E: int, mesh: Mesh):
+    """(ea, fa): expert-dim axes and ffn-dim axes for expert-parallel MoE.
+
+    Largest (data, model) subset whose size divides E shards the expert dim;
+    the remaining axes shard d_ff. Pure 256-way EP for E=256; 16x16
+    expert x ffn hybrid for E=128.
+    """
+    have = [a for a in ("data", "model") if a in mesh.shape]
+    best = ((), tuple(have))
+    best_size = 1
+    for mask in range(1, 2 ** len(have)):
+        ea = tuple(a for i, a in enumerate(have) if mask >> i & 1)
+        size = 1
+        for a in ea:
+            size *= mesh.shape[a]
+        if E % size == 0 and size > best_size:
+            best_size = size
+            best = (ea, tuple(a for a in have if a not in ea))
+    return best
+
+
+def _axes_size(mesh: Mesh, axes: AxisVal) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                   fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf."""
+    names = [p for p in path.split("/") if p]
+    leaf = names[-1] if names else ""
+    tensor_axis = "model" if "model" in mesh.shape else None
+    fsdp_axes: AxisVal = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not fsdp_axes:
+        fsdp = False
+
+    if leaf in PARAM_OVERRIDES:
+        roles = PARAM_OVERRIDES[leaf]
+        spec: list = [None] * len(shape)
+        # roles align to trailing dims (stacked-scan leading dim replicated)
+        off = len(shape) - len(roles)
+        if off < 0:
+            return P()
+        for i, role in enumerate(roles):
+            dim = off + i
+            if role == "tensor" and tensor_axis and shape[dim] % mesh.shape[tensor_axis] == 0:
+                spec[dim] = tensor_axis
+            elif role == "fsdp" and fsdp and shape[dim] % _axes_size(mesh, fsdp_axes) == 0:
+                spec[dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            elif role in ("expert", "expert_ffn"):
+                E = shape[off]          # expert count is the first role dim
+                ea, fa = expert_axes(E, mesh)
+                axes = ea if role == "expert" else fa
+                if axes:
+                    spec[dim] = axes if len(axes) > 1 else axes[0]
+        return P(*spec)
+
+    if len(shape) < 2 or tensor_axis is None:
+        return P()
+    # shape heuristic: biggest divisible dim -> model; next -> fsdp
+    spec = [None] * len(shape)
+    tsize = mesh.shape[tensor_axis]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    tdim = next((i for i in order if shape[i] % tsize == 0 and shape[i] >= tsize), None)
+    if tdim is not None:
+        spec[tdim] = tensor_axis
+    if fsdp:
+        fsize = _axes_size(mesh, fsdp_axes)
+        fdim = next((i for i in order
+                     if i != tdim and shape[i] % fsize == 0 and shape[i] >= fsize),
+                    None)
+        if fdim is not None:
+            spec[fdim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*spec)
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = False):
+    """Pytree of NamedShardings matching ``params`` (arrays or ShapeDtypeStructs)."""
+    def leaf_sharding(kp, x):
+        return NamedSharding(mesh, spec_for_param(_path_str(kp), tuple(x.shape),
+                                                  mesh, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(leaf_sharding, params)
+
+
+FSDP_RULES = DEFAULT_RULES  # activations are unchanged under FSDP

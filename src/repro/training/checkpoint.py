@@ -1,0 +1,79 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape manifests.
+
+Simple, dependency-light (msgpack ships in the container), host-gathered —
+adequate for the CPU-scale training runs here; the layout (one file per
+step, manifest + raw little-endian buffers) is the same shape a sharded
+writer would produce per host.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(path: str, tree, step: Optional[int] = None) -> None:
+    flat, _ = _flatten(tree)
+    payload = {
+        "step": step,
+        "leaves": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like) -> Tuple[Any, Optional[int]]:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = payload["leaves"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = leaves[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
+            rec["shape"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key!r}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), payload.get("step")
+
+
+def latest(ckpt_dir: str, prefix: str = "ckpt_") -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith(prefix) and f.endswith(".msgpack"):
+            try:
+                steps.append((int(f[len(prefix):-len(".msgpack")]), f))
+            except ValueError:
+                pass
+    if not steps:
+        return None
+    return os.path.join(ckpt_dir, max(steps)[1])

@@ -1,0 +1,113 @@
+"""Optimizers + LR schedules (pure JAX, no optax in this container).
+
+AdamW with decoupled weight decay and global-norm clipping; optional
+low-precision moments (bf16) for the >=90B-parameter dry-run combos where
+f32 moments alone exceed 16 GB HBM/chip (the memory/quality trade-off is
+recorded in DESIGN.md). WSD (warmup-stable-decay) schedule per MiniCPM
+[arXiv:2404.06395] plus cosine for the baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak LR (schedules scale it)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"    # "bfloat16" for the giant dry-runs
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/scales/biases/1D params."""
+    names = {getattr(k, "key", getattr(k, "idx", "")) for k in path}
+    return not names & {"scale", "bias", "ln1", "ln2", "ln_x", "q_norm",
+                        "k_norm", "kv_norm", "gate_norm"}
+
+
+def adamw_update(params, grads, state: Dict, cfg: AdamWConfig,
+                 lr_scale: jax.Array) -> Tuple[Any, Dict, Dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    lr = cfg.lr * lr_scale
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(kp, p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(kp):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(mdt), v_new.astype(mdt)
+
+    paths_and_params, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    m_leaves = jax.tree_util.tree_leaves(state["m"])
+    v_leaves = jax.tree_util.tree_leaves(state["v"])
+    results = [upd(kp, p, g, m, v)
+               for (kp, p), g, m, v in zip(paths_and_params, g_leaves,
+                                           m_leaves, v_leaves)]
+    new_params = treedef.unflatten([r[0] for r in results])
+    new_m = treedef.unflatten([r[1] for r in results])
+    new_v = treedef.unflatten([r[2] for r in results])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm,
+                                   "lr": lr, "clip": clip}
+
+
+# --- schedules --------------------------------------------------------------
+
+
+def wsd_schedule(warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    """MiniCPM warmup-stable-decay: linear warmup -> flat -> exp decay."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        dec_t = (s - warmup - stable) / jnp.maximum(decay, 1)
+        dec = jnp.exp(jnp.log(final_frac) * jnp.clip(dec_t, 0.0, 1.0))
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, 1.0, dec))
+    return f
+
+
+def cosine_schedule(warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return f

@@ -1,0 +1,120 @@
+"""Training loop with energy/carbon metering (paper §4 "sustainable LLM
+training": training lacks strict deadlines, so its carbon is schedulable —
+the loop reports energy/carbon per step against any hardware profile +
+region, and the WSD schedule reproduces MiniCPM's recipe).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import StepCounts, step_energy
+from repro.core.hardware import get_profile
+from repro.core.meter import CarbonMeter
+from repro.models import Model
+from repro.models.costing import model_flops, workload_of
+from repro.training import checkpoint as ckpt
+from repro.training.optim import (AdamWConfig, adamw_init, adamw_update,
+                                  cosine_schedule, wsd_schedule)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0                  # 0 = no checkpoints
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    schedule: str = "wsd"                # "wsd" | "cosine"
+    warmup: int = 10
+    decay_frac: float = 0.2              # WSD decay tail fraction
+    optim: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    remat: bool = False
+    # carbon metering target
+    profile: str = "tpu_v5e"
+    region: str = "CISO"
+    n_devices: int = 1
+
+
+def make_schedule(cfg: TrainConfig):
+    if cfg.schedule == "wsd":
+        decay = max(1, int(cfg.steps * cfg.decay_frac))
+        stable = max(0, cfg.steps - cfg.warmup - decay)
+        return wsd_schedule(cfg.warmup, stable, decay)
+    return cosine_schedule(cfg.warmup, cfg.steps)
+
+
+class Trainer:
+    def __init__(self, model: Model, tcfg: TrainConfig,
+                 key: Optional[jax.Array] = None):
+        self.model = model
+        self.tcfg = tcfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = model.init(key)
+        self.opt_state = adamw_init(self.params, tcfg.optim)
+        self.schedule = make_schedule(tcfg)
+        self.step = 0
+        self.meter = CarbonMeter(get_profile(tcfg.profile), tcfg.region,
+                                 n_devices=tcfg.n_devices)
+        self.workload = workload_of(model.cfg)
+        self.history: list = []
+
+        def train_step(params, opt_state, batch, step):
+            def loss_fn(p):
+                return model.train_loss(p, batch, remat=tcfg.remat)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            lr_scale = self.schedule(step)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 tcfg.optim, lr_scale)
+            return params, opt_state, {**metrics, **om}
+
+        self._jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def _meter_step(self, batch_tokens: int):
+        """Attribute the step's energy on the target profile (analytic)."""
+        flops = model_flops(self.model.cfg, batch_tokens, training=True)
+        w = self.workload
+        bytes_ = w.params_bytes * 4.0 + batch_tokens * w.d_model * 24.0
+        counts = StepCounts(flops=flops, hbm_bytes=bytes_,
+                            working_set_bytes=w.params_bytes * 8,
+                            tokens=float(batch_tokens),
+                            compute_tokens=float(batch_tokens))
+        rep = step_energy(self.meter.profile, counts)
+        self.meter.record("train", rep.tokens, rep.t_total, rep.energy_j)
+
+    def fit(self, batches: Iterator[Dict[str, np.ndarray]],
+            verbose: bool = True) -> list:
+        t0 = time.time()
+        maybe = ckpt.latest(self.tcfg.ckpt_dir) if self.tcfg.ckpt_every else None
+        if maybe:
+            state, step = ckpt.restore(maybe, (self.params, self.opt_state))
+            self.params, self.opt_state = state
+            self.step = step or 0
+        while self.step < self.tcfg.steps:
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch,
+                jnp.asarray(self.step, jnp.int32))
+            self._meter_step(int(batch["tokens"].size))
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == 1:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = self.step
+                row["wall_s"] = time.time() - t0
+                self.history.append(row)
+                if verbose:
+                    print(f"step {self.step:>5} loss {row['loss']:.4f} "
+                          f"lr {row['lr']:.2e} gnorm {row['grad_norm']:.3f}")
+            if (self.tcfg.ckpt_every
+                    and self.step % self.tcfg.ckpt_every == 0):
+                import os
+                os.makedirs(self.tcfg.ckpt_dir, exist_ok=True)
+                ckpt.save(f"{self.tcfg.ckpt_dir}/ckpt_{self.step}.msgpack",
+                          (self.params, self.opt_state), step=self.step)
+        return self.history

@@ -1,0 +1,35 @@
+import os
+
+# Keep unit tests single-device (the 512-device override belongs ONLY to
+# launch/dryrun.py, which sets XLA_FLAGS before importing jax itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_extras(cfg, batch, seq, key=None, dtype=jnp.float32):
+    """Modality extras required by a config's family (stub frontends)."""
+    from repro.models import frontend
+    key = key if key is not None else jax.random.PRNGKey(42)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = frontend.vision_embeddings(
+            key, batch, cfg.n_image_tokens, cfg.d_model, dtype)
+    elif cfg.family == "audio":
+        extras["frames"] = frontend.audio_frames(
+            key, batch, cfg.encoder_seq, cfg.d_model, dtype)
+    elif cfg.family == "moe" and cfg.attn_chunk is not None:
+        # llama4 early fusion
+        n_img = min(8, seq)
+        extras["image_embeds"] = frontend.vision_embeddings(
+            key, batch, n_img, cfg.d_model, dtype)
+        extras["image_positions"] = frontend.image_positions(batch, n_img, seq)
+    return extras

@@ -1,0 +1,119 @@
+"""Attention building-block unit tests: masks, RoPE, caches, kv-index map."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def test_kv_index_map_plain_gqa():
+    idx = A._kv_index_map(8, 2, 8, 2)
+    np.testing.assert_array_equal(idx, [0, 0, 0, 0, 1, 1, 1, 1])
+
+
+def test_kv_index_map_duplicated():
+    # 32 q / 8 kv duplicated to 16: q i -> orig kv i//4, copies interleaved
+    idx = A._kv_index_map(32, 8, 32, 16)
+    orig = idx // 2
+    np.testing.assert_array_equal(orig, np.arange(32) // 4)
+
+
+def test_kv_index_map_llama4_case():
+    # 40 q / 8 kv -> padded 48 q / 16 kv: originals must be preserved
+    idx = A._kv_index_map(40, 8, 48, 16)
+    orig = idx[:40] // 2
+    np.testing.assert_array_equal(orig, np.arange(40) // 5)
+
+
+@given(q=st.integers(0, 30), k=st.integers(-1, 30))
+@settings(max_examples=40, deadline=None)
+def test_bias_semantics(q, k):
+    b = A.self_attn_bias(jnp.asarray([[q]]), jnp.asarray([[k]]), None, None)
+    visible = (0 <= k <= q)
+    assert (float(b[0, 0, 0]) == 0.0) == visible
+
+
+def test_bias_window_and_chunk():
+    qpos = jnp.asarray([[10]])
+    kpos = jnp.asarray([[jnp.arange(12)]])[0]
+    b_win = A.self_attn_bias(qpos, kpos, 4, None)[0, 0]
+    vis = [i for i in range(12) if float(b_win[i]) == 0.0]
+    assert vis == [7, 8, 9, 10]                      # (q-4, q]
+    b_chunk = A.self_attn_bias(qpos, kpos, None, 4)[0, 0]
+    vis = [i for i in range(12) if float(b_chunk[i]) == 0.0]
+    assert vis == [8, 9, 10]                         # same chunk [8, 12)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE: scores depend only on relative positions."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def score(qpos, kpos):
+        qr = L.apply_rope(q, jnp.asarray([[qpos]]), 1.0, 10000.0)
+        kr = L.apply_rope(k, jnp.asarray([[kpos]]), 1.0, 10000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_partial_rotary_preserves_tail():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 1, 16))
+    y = L.apply_rope(x, jnp.asarray([[3, 4]]), 0.5, 10000.0)
+    np.testing.assert_allclose(np.asarray(y[..., 8:]), np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_ring_buffer_prefill_keeps_last_window():
+    class Cfg:
+        sliding_window = 4
+        n_kv_heads_padded = 1
+        head_dim_ = 2
+        dtype = "float32"
+
+    cache = A.init_kv_cache(Cfg(), 1, 10)
+    assert cache["k"].shape == (1, 4, 1, 2)
+    S = 7
+    k = jnp.arange(S, dtype=jnp.float32)[None, :, None, None] * jnp.ones((1, S, 1, 2))
+    pos = jnp.arange(S)[None]
+    c = A.prefill_write_cache(cache, k, k, pos)
+    stored = sorted(np.asarray(c["pos_ids"][0]).tolist())
+    assert stored == [3, 4, 5, 6]                     # last window survives
+    assert int(c["length"][0]) == 7
+    # slot of token j is j % W
+    for slot, p in enumerate(np.asarray(c["pos_ids"][0])):
+        assert p % 4 == slot
+        assert float(c["k"][0, slot, 0, 0]) == float(p)
+
+
+def test_decode_write_advances_ring():
+    class Cfg:
+        sliding_window = None
+        n_kv_heads_padded = 1
+        head_dim_ = 2
+        dtype = "float32"
+
+    cache = A.init_kv_cache(Cfg(), 2, 4)
+    k1 = jnp.ones((2, 1, 1, 2))
+    c = A.decode_write_cache(cache, k1, k1)
+    assert np.asarray(c["length"]).tolist() == [1, 1]
+    assert np.asarray(c["pos_ids"][:, 0]).tolist() == [0, 0]
+
+
+def test_flash_vs_direct_mixed_value_dim():
+    B, H, S, hdk, hdv = 1, 2, 8, 12, 6
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hdk))
+    k = jax.random.normal(ks[1], (B, S, H, hdk))
+    v = jax.random.normal(ks[2], (B, S, H, hdv))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    bias = A.self_attn_bias(pos, pos, None, None)[:, None]
+    a = A._direct_attention(q, k, v, bias)
+    b = A._flash_attention(q, k, v, pos, pos, None, None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

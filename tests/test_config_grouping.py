@@ -1,0 +1,74 @@
+"""ModelConfig pattern-factorization and padding invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ModelConfig, SSMConfig
+from repro.models.config import repeat_pattern
+
+
+def mk(pattern, **kw):
+    args = dict(name="g", family="dense", n_layers=len(pattern), d_model=64,
+                n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+                block_pattern=tuple(pattern), vocab_pad_multiple=8)
+    if "mamba2" in pattern or "shared" in pattern:
+        args["ssm"] = SSMConfig(state_dim=16, head_dim=16)
+        args["family"] = "hybrid"
+    args.update(kw)
+    return ModelConfig(**args)
+
+
+def test_grouping_uniform():
+    p, u, r = mk(["dense"] * 12).grouping()
+    assert p == () and u == ("dense",) and r == 12
+
+
+def test_grouping_prefix():
+    p, u, r = mk(["parallel"] * 2 + ["dense"] * 10).grouping()
+    assert len(p) + len(u) * r == 12
+    assert r >= 10
+
+
+def test_grouping_zamba_rotation():
+    """(5 mamba + shared) x13 + 3 mamba factors into prefix + 6-unit x13."""
+    pattern = repeat_pattern(("mamba2",) * 5 + ("shared",), 13,
+                             suffix=("mamba2",) * 3)
+    cfg = mk(list(pattern))
+    p, u, r = cfg.grouping()
+    assert tuple(p) + tuple(u) * r == pattern
+    assert r == 13 and len(u) == 6
+
+
+def test_grouping_respects_global_attn_period():
+    cfg = mk(["dense"] * 8, attn_chunk=4, global_attn_every=4)
+    p, u, r = cfg.grouping()
+    assert len(u) % 4 == 0
+    assert tuple(p) + tuple(u) * r == cfg.block_pattern
+
+
+@given(n=st.integers(1, 30))
+@settings(max_examples=20, deadline=None)
+def test_grouping_reconstructs(n):
+    cfg = mk(["dense"] * n)
+    p, u, r = cfg.grouping()
+    assert tuple(p) + tuple(u) * r == cfg.block_pattern
+
+
+def test_padded_vocab_and_heads():
+    cfg = mk(["dense"] * 2, vocab=250, vocab_pad_multiple=64,
+             pad_heads_to_multiple=16, n_heads=6, n_kv_heads=3, d_model=96,
+             head_dim=16)
+    assert cfg.padded_vocab == 256
+    assert cfg.n_heads_padded == 16 and cfg.n_kv_heads_padded == 16
+
+
+def test_bad_pattern_rejected():
+    with pytest.raises(ValueError):
+        mk(["dense", "bogus"])
+    with pytest.raises(ValueError):
+        mk(["moe", "moe"])           # moe without cfg.moe
+
+
+def test_chunked_layer_predicate():
+    cfg = mk(["dense"] * 8, attn_chunk=4, global_attn_every=4)
+    chunked = [cfg.layer_uses_chunked_attn(i) for i in range(8)]
+    assert chunked == [True, True, True, False] * 2

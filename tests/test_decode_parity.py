@@ -1,0 +1,141 @@
+"""Decode parity across every architecture family: full-forward logits ==
+prefill + step-by-step decode logits (the core serving invariant)."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (MLAConfig, Model, ModelConfig, MoEConfig,
+                          RWKVConfig, SSMConfig)
+from repro.models.config import repeat_pattern
+
+
+def parity_check(cfg, extras=None, S=12, P=8, B=2, rtol=3e-3):
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    extras = extras or {}
+    full, _, _ = m.forward(params, tokens, extras, mode="train")
+    last, caches = m.prefill(params, tokens[:, :P], extras, max_len=S)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, P - 1]),
+                               rtol=rtol, atol=rtol)
+    for i in range(S - P - 1):
+        last, caches = m.decode_step(params, caches, tokens[:, P + i:P + i + 1])
+        np.testing.assert_allclose(np.asarray(last),
+                                   np.asarray(full[:, P + i]),
+                                   rtol=rtol, atol=rtol)
+
+
+def test_dense_gqa():
+    parity_check(ModelConfig(
+        name="p", family="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 3), vocab_pad_multiple=8))
+
+
+def test_sliding_window():
+    parity_check(ModelConfig(
+        name="p", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=128, dtype="float32", sliding_window=6,
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8))
+
+
+def test_chunked_attention_ring_cache():
+    parity_check(ModelConfig(
+        name="p", family="dense", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+        attn_chunk=4, global_attn_every=2,
+        block_pattern=repeat_pattern(("dense",), 4), vocab_pad_multiple=8),
+        S=14)
+
+
+def test_padded_heads_parity():
+    """Head padding must be output-invariant (zeroed pad q heads)."""
+    base = dict(name="p", family="dense", n_layers=2, d_model=60, n_heads=6,
+                n_kv_heads=3, d_ff=128, vocab=128, dtype="float32",
+                head_dim=10, rotary_pct=0.4,
+                block_pattern=repeat_pattern(("parallel",), 2),
+                vocab_pad_multiple=8)
+    parity_check(ModelConfig(**base, pad_heads_to_multiple=4))
+
+
+def test_mla_absorbed_decode():
+    parity_check(ModelConfig(
+        name="p", family="moe", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=("mla",) + repeat_pattern(("mla_moe",), 2),
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                      capacity_factor=2.0),
+        mtp=True, vocab_pad_multiple=8))
+
+
+def test_mamba2_recurrent_decode():
+    parity_check(ModelConfig(
+        name="p", family="ssm", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("mamba2",), 3),
+        ssm=SSMConfig(state_dim=16, head_dim=16, chunk=4),
+        vocab_pad_multiple=8), rtol=1e-2)
+
+
+def test_rwkv6_state_decode():
+    parity_check(ModelConfig(
+        name="p", family="ssm", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("rwkv6",), 3),
+        rwkv=RWKVConfig(head_dim=16, decay_lora=8, mix_lora=8),
+        vocab_pad_multiple=8), rtol=1e-2)
+
+
+def test_zamba_shared_block():
+    parity_check(ModelConfig(
+        name="p", family="hybrid", n_layers=9, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("mamba2", "mamba2", "shared"), 3),
+        ssm=SSMConfig(state_dim=16, head_dim=16, chunk=4),
+        vocab_pad_multiple=8), rtol=1e-2)
+
+
+def test_vlm_cross_attention():
+    from repro.models import frontend
+    cfg = ModelConfig(
+        name="p", family="vlm", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("dense", "cross"), 2),
+        n_image_tokens=8, vocab_pad_multiple=8)
+    extras = {"image_embeds": frontend.vision_embeddings(
+        jax.random.PRNGKey(7), 2, 8, 64, jnp.float32)}
+    parity_check(cfg, extras)
+
+
+def test_encdec_decoder():
+    from repro.models import frontend
+    cfg = ModelConfig(
+        name="p", family="audio", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("dec",), 3), n_encoder_layers=2,
+        encoder_seq=10, vocab_pad_multiple=8)
+    extras = {"frames": frontend.audio_frames(
+        jax.random.PRNGKey(8), 2, 10, 64, jnp.float32)}
+    parity_check(cfg, extras)
+
+
+def test_long_prefill_flash_path():
+    """Prefill longer than DIRECT_ATTN_MAX_SEQ exercises the flash scan."""
+    import repro.models.attention as A
+    old = A.DIRECT_ATTN_MAX_SEQ
+    A.DIRECT_ATTN_MAX_SEQ = 8           # force flash path
+    try:
+        parity_check(ModelConfig(
+            name="p", family="dense", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+            block_pattern=repeat_pattern(("dense",), 2),
+            vocab_pad_multiple=8), S=20, P=16)
+    finally:
+        A.DIRECT_ATTN_MAX_SEQ = old

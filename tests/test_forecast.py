@@ -1,0 +1,47 @@
+"""CI forecaster tests (paper §4: predictive CI-directed scheduling)."""
+import numpy as np
+import pytest
+
+from repro.core.forecast import CIForecaster, mape
+from repro.core.intensity import CISO, QC, ci_at_hour
+
+
+def synth_trace(region, days=7, noise=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    hours = np.arange(days * 24, dtype=float)
+    ci = np.array([ci_at_hour(region, h % 24) for h in hours])
+    ci = ci * (1 + rng.normal(0, noise, ci.shape))
+    return hours, ci
+
+
+def test_forecast_accuracy_on_diurnal_trace():
+    hours, ci = synth_trace(CISO, days=7)
+    f = CIForecaster().fit(hours[:-24], ci[:-24])
+    pred = f.predict(hours[-24:])
+    assert mape(pred, ci[-24:]) < 0.10      # within 10% on held-out day
+
+
+def test_forecast_flat_region():
+    hours, ci = synth_trace(QC, days=5, noise=0.02)
+    f = CIForecaster().fit(hours[:-24], ci[:-24])
+    pred = f.predict(hours[-24:])
+    assert mape(pred, ci[-24:]) < 0.06
+
+
+def test_greenest_window_hits_solar_dip():
+    """CISO's CI minimum is mid-day (solar); the forecaster should schedule
+    a deferrable job there (paper §4: training lacks deadlines)."""
+    hours, ci = synth_trace(CISO, days=7, noise=0.03)
+    f = CIForecaster().fit(hours, ci)
+    start, mean_ci = f.greenest_window(start_hour=hours[-1] + 1,
+                                       horizon_h=24, duration_h=3)
+    assert 10 <= (start % 24) <= 16          # around the 13:00 dip
+    assert mean_ci < CISO.ci_g_per_kwh       # below the daily average
+
+
+def test_window_duration_monotone():
+    hours, ci = synth_trace(CISO, days=7)
+    f = CIForecaster().fit(hours, ci)
+    _, ci1 = f.greenest_window(hours[-1] + 1, 24, 1)
+    _, ci6 = f.greenest_window(hours[-1] + 1, 24, 6)
+    assert ci1 <= ci6 + 1e-9                 # longer windows can't be greener

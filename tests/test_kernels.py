@@ -1,0 +1,193 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in repro.kernels.ref, across shapes/dtypes/masking modes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == jnp.float32 else \
+        dict(rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,hd,bq,bk", [
+    (1, 2, 2, 16, 16, 8, 16, 16),      # MHA, exact blocks
+    (2, 4, 2, 37, 37, 16, 16, 16),     # GQA 2x, ragged blocks
+    (1, 8, 2, 33, 65, 32, 8, 32),      # GQA 4x, Sq != Sk
+    (2, 4, 1, 7, 130, 64, 4, 64),      # MQA, tiny q block
+])
+@pytest.mark.parametrize("window,chunk", [(None, None), (8, None), (None, 8)])
+def test_flash_attention_sweep(dtype, B, Hq, Hkv, Sq, Sk, hd, bq, bk,
+                               window, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + Sk + hd), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, hd), jnp.float32).astype(dtype)
+    qpos = jnp.broadcast_to(jnp.arange(Sk - Sq, Sk)[None], (B, Sq))
+    kpos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    got = ops.flash_attention(q, k, v, qpos, kpos, window, chunk,
+                              impl="pallas_interpret", block_q=bq, block_k=bk)
+    want = ref.flash_attention(q, k, v, qpos, kpos, window, chunk)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,W,hd,bk", [
+    (1, 2, 2, 16, 8, 8),
+    (2, 4, 2, 29, 16, 8),
+    (1, 8, 1, 130, 64, 64),
+])
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("fill", [0.6, 1.0])
+def test_decode_attention_sweep(dtype, B, Hq, Hkv, W, hd, bk, window, fill):
+    ks = jax.random.split(jax.random.PRNGKey(W * hd), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, W, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, W, hd), jnp.float32).astype(dtype)
+    n_valid = max(1, int(W * fill))
+    kpos = jnp.broadcast_to(jnp.arange(W)[None], (B, W))
+    kpos = jnp.where(kpos < n_valid, kpos, -1)
+    qpos = jnp.full((B,), n_valid - 1)
+    got = ops.decode_attention(q, k, v, qpos, kpos, window,
+                               impl="pallas_interpret", block_k=bk)
+    want = ref.decode_attention(q, k, v, qpos, kpos, window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,hd,bt", [
+    (1, 2, 8, 8, 8),
+    (2, 3, 23, 16, 8),     # ragged time blocks
+    (1, 4, 64, 32, 16),
+])
+def test_wkv6_sweep(dtype, B, H, T, hd, bt):
+    ks = jax.random.split(jax.random.PRNGKey(T * hd), 6)
+    r = jax.random.normal(ks[0], (B, H, T, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, H, T, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, H, T, hd), jnp.float32).astype(dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, T, hd))).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, hd)) * 0.5).astype(dtype)
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+    got_o, got_s = ops.wkv6(r, k, v, w, u, s0, impl="pallas_interpret",
+                            block_t=bt)
+    want_o, want_s = ref.wkv6(r, k, v, w, u, s0)
+    t = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), **t)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), **t)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,P,N,cl", [
+    (1, 2, 16, 8, 4, 8),
+    (2, 3, 21, 8, 4, 8),    # ragged chunks
+    (1, 2, 64, 16, 16, 16),
+])
+def test_ssd_sweep(dtype, B, H, T, P, N, cl):
+    ks = jax.random.split(jax.random.PRNGKey(T * P + N), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, T, H, N), jnp.float32).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, T, H, N), jnp.float32).astype(dtype)
+    h0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+    got_y, got_h = ops.ssd_scan(x, dt, A, Bm, Cm, h0, chunk=cl,
+                                impl="pallas_interpret")
+    want_y, want_h = ops.ssd_scan(x, dt, A, Bm, Cm, h0, chunk=cl, impl="ref")
+    t = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y), **t)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h), **t)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """ops.ssd_scan (chunked) against the direct per-step recurrence."""
+    B, T, H, P, N = 2, 21, 3, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, T, H, N))
+    Cm = jax.random.normal(ks[4], (B, T, H, N))
+    h0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        h = h * jnp.exp(dtt * A)[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt)
+        return h, jnp.einsum("bhn,bhpn->bhp", ct, h)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (x, dt, Bm, Cm))
+    h_want, y_want = jax.lax.scan(step, h0, xs)
+    y_want = jnp.moveaxis(y_want, 0, 1)
+    y_got, h_got = ops.ssd_scan(x, dt, A, Bm, Cm, h0, chunk=8, impl="ref")
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_decode_consistency():
+    """decode_attention(q1) == flash_attention at the last position."""
+    B, Hq, Hkv, S, hd = 2, 4, 2, 24, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = ref.flash_attention(q, k, v, pos, pos)
+    dec = ref.decode_attention(q[:, :, -1], k, v, pos[:, -1], pos)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("R,d,br", [(8, 128, 8), (37, 256, 16), (5, 512, 8)])
+def test_rmsnorm_kernel_sweep(dtype, R, d, br):
+    x = jax.random.normal(jax.random.PRNGKey(R + d), (R, d),
+                          jnp.float32).astype(dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(1), (d,)) * 0.1 + 1.0
+    got = ops.rmsnorm(x, scale.astype(dtype), impl="pallas_interpret",
+                      block_rows=br)
+    want = ops.rmsnorm(x, scale.astype(dtype), impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_mla_decode_attention_matches_naive(impl):
+    """MQA-over-latent kernel == naive expanded MLA decode attention."""
+    B, H, W, kvr, rope, nope, vdim = 2, 4, 24, 16, 8, 12, 10
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    q_nope = jax.random.normal(ks[0], (B, H, nope))
+    q_rope = jax.random.normal(ks[1], (B, H, rope))
+    ckv = jax.random.normal(ks[2], (B, W, kvr))
+    k_rope = jax.random.normal(ks[3], (B, W, rope))
+    w_uk = jax.random.normal(ks[4], (kvr, H, nope)) * 0.3
+    n_valid = 17
+    k_pos = jnp.where(jnp.arange(W) < n_valid, jnp.arange(W), -1)[None]
+    k_pos = jnp.broadcast_to(k_pos, (B, W))
+    q_pos = jnp.full((B,), n_valid - 1)
+
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    got = ops.mla_decode_attention(q_lat, q_rope, ckv, k_rope, q_pos, k_pos,
+                                   impl=impl, qk_dim=nope + rope,
+                                   block_k=8)
+
+    # naive: expand keys per head, softmax over valid positions
+    import math
+    k_nope = jnp.einsum("bwr,rhn->bwhn", ckv, w_uk)
+    s = (jnp.einsum("bhn,bwhn->bhw", q_nope, k_nope)
+         + jnp.einsum("bhr,bwr->bhw", q_rope, k_rope)) / math.sqrt(nope + rope)
+    s = jnp.where((k_pos >= 0)[:, None, :], s, -1e9)
+    w = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhw,bwr->bhr", w, ckv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,91 @@
+"""Validation of the calibrated model against the paper's quantitative
+claims (§2.2, §2.3). Calibration anchors (repro.core.calibrate) get tight
+tolerances; structural/directional claims are asserted exactly.
+EXPERIMENTS.md §Paper-validation reports the residuals.
+"""
+import math
+
+import pytest
+
+from repro.core.calibrate import BATCHES, _peak_batch, score
+from repro.core.energy import (LLAMA_1B, LLAMA_3B, LLAMA_7B, decode_report,
+                               prefill_report, prompt_report)
+from repro.core.hardware import RTX6000ADA, T4
+
+
+def ratio(fn, *args):
+    return fn(T4, *args) / fn(RTX6000ADA, *args)
+
+
+def test_t4_always_slower():                                  # Takeaway 1
+    for w in (LLAMA_1B, LLAMA_3B, LLAMA_7B):
+        for b in (1, 2, 4):
+            rt, ra = prompt_report(T4, w, b), prompt_report(RTX6000ADA, w, b)
+            if math.isinf(rt.t_total):
+                continue
+            assert rt.t_total > ra.t_total
+
+
+@pytest.mark.parametrize("w,target,tol", [
+    (LLAMA_1B, 1.1, 0.15), (LLAMA_3B, 1.4, 0.20), (LLAMA_7B, 2.2, 0.25)])
+def test_batch1_latency_ratios(w, target, tol):               # Fig. 1a
+    got = prompt_report(T4, w, 1).t_total / prompt_report(RTX6000ADA, w, 1).t_total
+    assert got == pytest.approx(target, rel=tol)
+
+
+def test_7b_batch4_severe_slowdown():                         # Fig. 1a, 11.4x
+    got = (prompt_report(T4, LLAMA_7B, 4).t_total /
+           prompt_report(RTX6000ADA, LLAMA_7B, 4).t_total)
+    assert got == pytest.approx(11.4, rel=0.25)
+
+
+def test_t4_energy_advantage_batch1_1b():                     # Fig. 1b, -28%
+    got = (prompt_report(T4, LLAMA_1B, 1).energy_j /
+           prompt_report(RTX6000ADA, LLAMA_1B, 1).energy_j)
+    assert got == pytest.approx(0.72, rel=0.15)
+    # and the advantage disappears at large batch (T4 more energy)
+    b16 = (prompt_report(T4, LLAMA_1B, 16).energy_j /
+           prompt_report(RTX6000ADA, LLAMA_1B, 16).energy_j)
+    assert b16 > 1.0
+
+
+def test_prefill_peaks():                                     # Fig. 2
+    assert _peak_batch(T4, LLAMA_1B, "tput") == 8
+    assert _peak_batch(RTX6000ADA, LLAMA_1B, "tput") == 32
+    assert _peak_batch(T4, LLAMA_1B, "energy") == 8
+    assert _peak_batch(RTX6000ADA, LLAMA_1B, "energy") == 16
+
+
+def test_tput_peak_not_energy_peak_ada():                     # Takeaway 2
+    assert (_peak_batch(RTX6000ADA, LLAMA_1B, "tput")
+            != _peak_batch(RTX6000ADA, LLAMA_1B, "energy"))
+
+
+def test_decode_batch1_tradeoffs():                           # Fig. 3, §2.3
+    rt = decode_report(T4, LLAMA_1B, 1)
+    ra = decode_report(RTX6000ADA, LLAMA_1B, 1)
+    tput_ratio = rt.tokens_per_s / ra.tokens_per_s
+    e_ratio = rt.j_per_token / ra.j_per_token
+    assert tput_ratio == pytest.approx(0.905, rel=0.10)       # 9.5% lower
+    assert e_ratio == pytest.approx(0.729, rel=0.15)          # 27.1% less
+
+
+def test_decode_large_batch_ada_wins():                       # Fig. 3
+    r64 = (decode_report(RTX6000ADA, LLAMA_1B, 64).tokens_per_s /
+           decode_report(T4, LLAMA_1B, 64).tokens_per_s)
+    assert r64 == pytest.approx(5.4, rel=0.20)
+    e16 = (decode_report(RTX6000ADA, LLAMA_1B, 16).j_per_token /
+           decode_report(T4, LLAMA_1B, 16).j_per_token)
+    assert e16 == pytest.approx(0.425, rel=0.20)              # 57.5% lower
+
+
+def test_decode_tput_improves_with_batch():                   # §2.3
+    for prof in (T4, RTX6000ADA):
+        tputs = [decode_report(prof, LLAMA_1B, b).tokens_per_s
+                 for b in (1, 4, 16, 64)]
+        assert all(a < b for a, b in zip(tputs, tputs[1:]))
+
+
+def test_overall_calibration_score():
+    s, _ = score(T4, RTX6000ADA)
+    assert s < 0.2, f"calibration drifted: score {s}"

@@ -1,0 +1,82 @@
+"""CI-directed carbon-aware scheduler tests (paper §4, Takeaways 2-5)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CIDirectedScheduler, FleetSlice, carbon_optimal_batch,
+                        evaluate, get_profile, get_region,
+                        place_request_class, plan_disaggregated,
+                        throughput_optimal_batch)
+from repro.core.energy import LLAMA_1B, LLAMA_7B
+
+
+def fleet():
+    return [
+        FleetSlice(get_profile("t4"), get_region("QC")),
+        FleetSlice(get_profile("t4"), get_region("PACE")),
+        FleetSlice(get_profile("rtx6000ada"), get_region("QC")),
+        FleetSlice(get_profile("rtx6000ada"), get_region("CISO")),
+        FleetSlice(get_profile("rtx6000ada"), get_region("PACE")),
+    ]
+
+
+def test_low_ci_regions_win():
+    """T4@QC beats Ada@PACE on carbon even when slower (Takeaway 3)."""
+    t4qc = evaluate(fleet()[0], LLAMA_1B, "prompt", 8)
+    adapace = evaluate(fleet()[4], LLAMA_1B, "prompt", 8)
+    assert t4qc.g_per_token < adapace.g_per_token
+    assert t4qc.latency_s > adapace.latency_s
+
+
+def test_winner_is_in_lowest_ci_region():
+    win, table = place_request_class(fleet(), LLAMA_1B, "prompt")
+    assert win is not None and win.slice_key.endswith("@QC")
+
+
+def test_slo_changes_placement():
+    """A tight SLO can force the faster (higher-carbon) device."""
+    win_loose, _ = place_request_class(fleet(), LLAMA_7B, "prompt",
+                                       slo_s=None, batches=(1,))
+    t4_lat = evaluate(fleet()[0], LLAMA_7B, "prompt", 1).latency_s
+    win_tight, _ = place_request_class(fleet(), LLAMA_7B, "prompt",
+                                       slo_s=t4_lat * 0.6, batches=(1,))
+    assert win_tight is not None
+    assert win_tight.slice_key.startswith("rtx6000ada")
+    assert win_loose.slice_key.startswith("t4")
+
+
+def test_carbon_vs_throughput_batch_differ_somewhere():       # Takeaway 4
+    sl = FleetSlice(get_profile("rtx6000ada"), get_region("QC"))
+    cb = carbon_optimal_batch(sl, LLAMA_1B, "prefill")
+    tb = throughput_optimal_batch(sl, LLAMA_1B, "prefill")
+    assert cb is not None and tb is not None
+    assert cb.batch != tb.batch
+
+
+def test_disaggregation_prefill_decode_can_split():           # Takeaway 2
+    plan = plan_disaggregated(fleet(), LLAMA_1B)
+    assert plan["prefill"] is not None and plan["decode"] is not None
+    # prefill (compute-bound) prefers the newer GPU at its best batch
+    assert plan["prefill"].g_per_token > 0
+    assert plan["decode"].g_per_token > 0
+
+
+def test_ci_directed_routing_beats_pinning():
+    sched = CIDirectedScheduler(fleet(), LLAMA_1B, batch=8)
+    day = sched.simulate_day()
+    for pinned_total in day["pinned_g"].values():
+        assert day["total_g"] <= pinned_total * (1 + 1e-9)
+
+
+def test_router_respects_infeasible_slices():
+    small_fleet = [FleetSlice(get_profile("t4"), get_region("QC"))]
+    sched = CIDirectedScheduler(small_fleet, LLAMA_7B, batch=64)  # OOM on T4
+    with pytest.raises(RuntimeError):
+        sched.route(0.0)
+
+
+@given(b=st.sampled_from([1, 2, 4, 8, 16]), hour=st.floats(0, 24))
+@settings(max_examples=25, deadline=None)
+def test_route_always_feasible_with_ada_present(b, hour):
+    sched = CIDirectedScheduler(fleet(), LLAMA_1B, batch=b)
+    sl, p = sched.route(hour)
+    assert p.feasible and p.carbon_g > 0

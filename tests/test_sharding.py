@@ -1,0 +1,95 @@
+"""Sharding rules unit tests + small-mesh dry-run integration (subprocess
+with 8 host devices — the production 512-device pass is run via
+`python -m repro.launch.dryrun`, results in results/ and EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_spec_rules_single_device():
+    """Rule logic is pure; exercise with a fake mesh via jax.make_mesh on 1
+    device is impossible for 16-way axes, so test the spec function with a
+    mocked mesh shape."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import spec_for_param
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    # llama-style wq: output heads dim -> model, input dim -> fsdp
+    s = spec_for_param("prefix/0/attn/wq", (2048, 4096), m, fsdp=True)
+    assert s == P("data", "model") or s == P(None, "model") or "model" in str(s)
+    # expert weights: expert dim over (data, model)
+    s = spec_for_param("unit/0/moe/experts_gate", (58, 256, 7168, 2048), m)
+    assert str(s).count("data") == 1 and str(s).count("model") == 1
+    # router replicated
+    assert spec_for_param("unit/0/moe/router", (7168, 256), m) == P(None, None)
+    # norm scales replicated
+    assert spec_for_param("final_norm/scale", (7168,), m) == P()
+
+
+def test_expert_axes():
+    from repro.sharding.rules import expert_axes
+
+    class M256:
+        shape = {"data": 16, "model": 16}
+
+    class M8:
+        shape = {"data": 2, "model": 4}
+
+    ea, fa = expert_axes(256, M256())
+    assert set(ea) == {"data", "model"} and fa == ()
+    ea, fa = expert_axes(128, M256())           # llama4: 16-way EP + 16 FFN
+    assert len(ea) == 1 and len(fa) == 1
+    ea, fa = expert_axes(4, M8())
+    assert ea == ("model",) and fa == ("data",)
+
+
+def test_shard_noop_without_context():
+    import jax.numpy as jnp
+    from repro.sharding import shard
+    x = jnp.ones((2, 3))
+    assert shard(x, "batch", None) is x
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("llama3.2-1b", "train_4k"),
+    ("zamba2-7b", "decode_32k"),
+    ("deepseek-v3-671b", "long_500k"),
+])
+def test_dryrun_small_mesh(arch, shape, tmp_path):
+    """lower+compile on an 8-device test mesh in a subprocess (XLA device
+    count must be set before jax init)."""
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--test-mesh", "--out", str(out)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["ok"]
+    assert rec["roofline"]["hlo_flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_multipod(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "llama3.2-1b",
+         "--shape", "decode_32k", "--test-mesh", "--multi-pod",
+         "--out", str(out)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["ok"]

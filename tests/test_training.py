@@ -1,0 +1,129 @@
+"""Training substrate tests: optimizer, schedules, data, checkpointing,
+end-to-end loss descent."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.training import (AdamWConfig, TrainConfig, Trainer, adamw_init,
+                            adamw_update, cosine_schedule, wsd_schedule)
+from repro.training import checkpoint as ckpt
+from repro.training.data import (MarkovLM, alpaca_like_prompts, lm_batches,
+                                 padded_prompt_batch)
+
+
+def tiny_cfg(**kw):
+    args = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+                block_pattern=repeat_pattern(("dense",), 2),
+                vocab_pad_multiple=8)
+    args.update(kw)
+    return ModelConfig(**args)
+
+
+# --- optimizer ---------------------------------------------------------------
+
+def test_adamw_moves_params_and_decays():
+    params = {"w": jnp.ones((4, 4)), "ln1": {"scale": jnp.ones((4,))}}
+    grads = {"w": jnp.ones((4, 4)), "ln1": {"scale": jnp.zeros((4,))}}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.1)
+    st = adamw_init(params, cfg)
+    p2, st2, m = adamw_update(params, grads, st, cfg, jnp.asarray(1.0))
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) > 0
+    # zero grad + no decay on norm scales -> unchanged
+    np.testing.assert_allclose(np.asarray(p2["ln1"]["scale"]),
+                               np.asarray(params["ln1"]["scale"]))
+    assert int(st2["step"]) == 1 and float(m["grad_norm"]) > 0
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((2,))}
+    grads = {"w": jnp.full((2,), 100.0)}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    st = adamw_init(params, cfg)
+    _, _, m = adamw_update(params, grads, st, cfg, jnp.asarray(1.0))
+    assert float(m["clip"]) < 0.05
+
+
+# --- schedules ---------------------------------------------------------------
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(warmup=10, stable=80, decay=10, final_frac=0.1)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(50))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(warmup=10, total=110, final_frac=0.1)
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-3)
+
+
+# --- data --------------------------------------------------------------------
+
+def test_alpaca_prompts_stats():
+    ps = alpaca_like_prompts(0, 500, vocab=1000)
+    lens = np.array([len(p) for p in ps])
+    assert 30 < np.median(lens) < 65
+    assert lens.max() > np.median(lens) * 3        # long tail
+    assert all(p.min() >= 2 and p.max() < 1000 for p in ps)
+
+
+def test_markov_lm_deterministic():
+    a = MarkovLM(64, seed=3).sample(np.random.default_rng(0), 32)
+    b = MarkovLM(64, seed=3).sample(np.random.default_rng(0), 32)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_padded_prompt_batch():
+    out = padded_prompt_batch([np.array([1, 2, 3]), np.array([4])])
+    assert out["tokens"].shape == (2, 3)
+    np.testing.assert_array_equal(out["mask"].sum(axis=1), [3, 1])
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    m = Model(tiny_cfg())
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt_5.msgpack")
+    ckpt.save(path, params, step=5)
+    restored, step = ckpt.restore(path, jax.eval_shape(lambda: params))
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest(tmp_path):
+    for s in (3, 10, 7):
+        ckpt.save(str(tmp_path / f"ckpt_{s}.msgpack"), {"x": jnp.ones(1)}, s)
+    assert ckpt.latest(str(tmp_path)).endswith("ckpt_10.msgpack")
+
+
+# --- end-to-end --------------------------------------------------------------
+
+def test_loss_decreases():
+    m = Model(tiny_cfg())
+    tr = Trainer(m, TrainConfig(steps=80, log_every=20, warmup=5,
+                                optim=AdamWConfig(lr=5e-3)))
+    hist = tr.fit(lm_batches(0, 128, batch=16, seq=64, branching=4),
+                  verbose=False)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.8
+    # training carbon was metered
+    assert tr.meter.totals.energy_j > 0
+
+
+def test_wsd_used_by_minicpm_config():
+    from repro.configs import get_config
+    cfg = get_config("minicpm-2b", "smoke")
+    m = Model(cfg)
+    tr = Trainer(m, TrainConfig(steps=6, warmup=2, schedule="wsd"))
+    hist = tr.fit(lm_batches(1, cfg.vocab, batch=2, seq=16), verbose=False)
+    assert np.isfinite(hist[-1]["loss"])
