@@ -1,0 +1,18 @@
+PY := python
+export PYTHONPATH := src:.
+
+.PHONY: test kernels verify bench-engine bench
+
+test:               ## tier-1 suite
+	$(PY) -m pytest -x -q
+
+kernels:            ## interpret-mode Pallas kernel sweeps + fused-step tests
+	$(PY) -m pytest -q tests/test_kernels.py tests/test_engine_fused.py
+
+verify: test kernels ## tier-1 plus interpret-mode kernel tests
+
+bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
+	$(PY) benchmarks/engine_bench.py
+
+bench:              ## all paper-figure benchmarks + engine bench
+	$(PY) -m benchmarks.run

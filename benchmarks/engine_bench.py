@@ -1,0 +1,251 @@
+"""Engine hot-path benchmark: fused on-device serving step vs the seed
+per-token Python loop (requests/s, decode steps/s, host syncs per 100
+generated tokens). Writes ``BENCH_engine.json``.
+
+The baseline below is a faithful copy of the seed ``ServingEngine`` hot
+path: one jitted decode dispatch per token, sampling + EOS/budget checks in
+Python, one ``np.mean(caches["t"])`` device sync per step plus one scalar
+readback per active slot, per-request prefill, and per-request whole-tree
+cache inserts. The fused engine (repro.serving.engine) runs ``sync_every``
+full engine micro-steps per device call and admits in bucketed batches.
+
+    PYTHONPATH=src:. python benchmarks/engine_bench.py [--variant smoke|full]
+
+``--variant full`` runs the actual paper 1B geometry (slow on CPU; the
+default smoke variant keeps the same code path at CI-friendly size).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import llama_paper
+from repro.core.energy import decode_counts, prefill_counts, step_energy
+from repro.core.hardware import get_profile
+from repro.core.meter import CarbonMeter
+from repro.models import Model
+from repro.models.costing import workload_of
+from repro.serving import EngineConfig, Request, ServingEngine
+
+BATCH = 8
+N_REQUESTS = 16
+MAX_NEW = 65          # 1 prefill token + 64 decode steps = 8 full chunks
+
+
+# ---------------------------------------------------------------- baseline
+
+
+def _insert_cache(dst, src, slot: int):
+    def leaf(kp, d, s):
+        bdim = 1 if getattr(kp[0], "key", None) == "unit" else 0
+        idx = [slice(None)] * d.ndim
+        idx[bdim] = slot
+        return d.at[tuple(idx)].set(jnp.take(s, 0, axis=bdim))
+    return jax.tree_util.tree_map_with_path(leaf, dst, src)
+
+
+class SeedEngine:
+    """The seed serving loop, preserved verbatim as the benchmark baseline."""
+
+    def __init__(self, model: Model, params, max_batch: int, max_len: int):
+        self.model, self.params = model, params
+        self.max_len = max_len
+        self.profile = get_profile("t4")
+        self.meter = CarbonMeter(self.profile, "QC")
+        self.workload = workload_of(model.cfg)
+        self.queue: List[Request] = []
+        self.responses: Dict[int, object] = {}
+        B = max_batch
+        self.caches = model.init_cache(B, max_len)
+        self.slot_rid = [-1] * B
+        self.slot_budget = [0] * B
+        self.cur_tokens = jnp.zeros((B, 1), jnp.int32)
+        self._jit_decode = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+        self.steps = 0
+        self.host_syncs = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.responses[req.rid] = []
+
+    @property
+    def active(self):
+        return sum(1 for r in self.slot_rid if r >= 0)
+
+    def _admit(self):
+        for slot in [i for i, r in enumerate(self.slot_rid) if r < 0]:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            last, pcache = self.model.prefill(self.params, prompt,
+                                              max_len=self.max_len)
+            counts = prefill_counts(self.workload, 1, len(req.prompt))
+            rep = step_energy(self.profile, counts)
+            self.meter.record("prefill", rep.tokens, rep.t_total, rep.energy_j)
+            self.caches = _insert_cache(self.caches, pcache, slot)
+            nxt = jnp.argmax(last[:, :self.model.cfg.vocab], -1).astype(jnp.int32)
+            self.cur_tokens = self.cur_tokens.at[slot, 0].set(nxt[0])
+            self.responses[req.rid].append(int(nxt[0]))
+            self.host_syncs += 1
+            self.slot_rid[slot] = req.rid
+            self.slot_budget[slot] = req.max_new_tokens - 1
+
+    def _decode_once(self):
+        logits, self.caches = self._jit_decode(self.params, self.caches,
+                                               self.cur_tokens)
+        ctx = float(np.mean(np.asarray(self.caches["t"])))    # sync per step
+        self.host_syncs += 1
+        counts = decode_counts(self.workload, self.active, max(ctx, 1.0))
+        rep = step_energy(self.profile, counts)
+        self.meter.record("decode", rep.tokens, rep.t_total, rep.energy_j)
+        nxt = jnp.argmax(logits[:, :self.model.cfg.vocab], -1).astype(jnp.int32)
+        self.cur_tokens = nxt[:, None]
+        for slot, rid in enumerate(self.slot_rid):
+            if rid < 0:
+                continue
+            self.responses[rid].append(int(nxt[slot]))        # scalar sync
+            self.host_syncs += 1
+            self.slot_budget[slot] -= 1
+            if self.slot_budget[slot] <= 0:
+                self.slot_rid[slot] = -1
+        self.steps += 1
+
+    def run(self):
+        while self.queue or self.active:
+            self._admit()
+            if self.active:
+                self._decode_once()
+        return self.responses
+
+
+# ------------------------------------------------------------------ bench
+
+
+def _workload(n_requests: int, max_new: int) -> List[Request]:
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=list(rng.integers(1, 400, int(rng.integers(6, 30)))),
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+
+
+def _time_fused(model, params, reqs, max_len: int) -> Dict:
+    eng = ServingEngine(model, params, EngineConfig(
+        max_batch=BATCH, max_len=max_len, sync_every=8))
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    st = eng.stats()
+    decode_tokens = sum(len(r.tokens) - 1 for r in eng.responses.values())
+    return {
+        "wall_s": dt,
+        "requests_per_s": len(reqs) / dt,
+        "decode_steps": st["steps"],
+        "decode_steps_per_s": st["steps"] / dt,
+        "host_syncs": st["host_syncs"],
+        "decode_chunks": st["decode_chunks"],
+        "syncs_per_100_decode_tokens":
+            100.0 * st["host_syncs"] / max(decode_tokens, 1),
+        "decode_steps_per_sync": st["steps"] / max(st["decode_chunks"], 1),
+    }
+
+
+def _time_seed(model, params, reqs, max_len: int) -> Dict:
+    eng = SeedEngine(model, params, max_batch=BATCH, max_len=max_len)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    decode_tokens = sum(len(t) - 1 for t in eng.responses.values())
+    return {
+        "wall_s": dt,
+        "requests_per_s": len(reqs) / dt,
+        "decode_steps": eng.steps,
+        "decode_steps_per_s": eng.steps / dt,
+        "host_syncs": eng.host_syncs,
+        "syncs_per_100_decode_tokens":
+            100.0 * eng.host_syncs / max(decode_tokens, 1),
+    }
+
+
+def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
+          max_new: int = MAX_NEW) -> Dict:
+    cfg = llama_paper.make(variant, "llama-paper-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = 128 if variant == "smoke" else 512
+    # warmup both paths (compile), then timed runs on fresh engines
+    warm = _workload(2, 8)
+    _time_fused(model, params, warm, max_len)
+    _time_seed(model, params, warm, max_len)
+    reqs = _workload(n_requests, max_new)
+    fused = _time_fused(model, params, reqs, max_len)
+    seed = _time_seed(model, params, reqs, max_len)
+    speedup = fused["decode_steps_per_s"] / seed["decode_steps_per_s"]
+    return {
+        "config": cfg.name, "variant": variant, "batch": BATCH,
+        "requests": n_requests, "max_new_tokens": max_new,
+        "seed": seed, "fused": fused,
+        "decode_steps_per_s_speedup": speedup,
+        "criteria": {
+            "fused_ge_2x_decode_steps_per_s": speedup >= 2.0,
+            # no chunk synced early: the engine never takes more than the
+            # optimal ceil(steps / sync_every) host syncs
+            "at_most_1_sync_per_8_decode_steps":
+                fused["decode_chunks"] <= -(-fused["decode_steps"] // 8),
+        },
+    }
+
+
+_LAST: Dict = {}
+
+
+def run():
+    """Small workload for the aggregator's timing loop."""
+    global _LAST
+    _LAST = bench(n_requests=6, max_new=16)
+    return _LAST
+
+
+def derived() -> float:
+    """Fused/seed decode-steps/s speedup."""
+    if not _LAST:
+        run()
+    return _LAST["decode_steps_per_s_speedup"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--requests", type=int, default=N_REQUESTS)
+    ap.add_argument("--max-new-tokens", type=int, default=MAX_NEW)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    res = bench(args.variant, args.requests, args.max_new_tokens)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    s, fu = res["seed"], res["fused"]
+    print(f"\n== engine bench ({res['config']}, batch {BATCH}, "
+          f"{res['requests']} reqs x {res['max_new_tokens']} tokens) ==")
+    print(f"{'':>24}  {'seed loop':>12}  {'fused step':>12}")
+    for key in ("requests_per_s", "decode_steps_per_s",
+                "syncs_per_100_decode_tokens"):
+        print(f"{key:>24}  {s[key]:12.2f}  {fu[key]:12.2f}")
+    print(f"decode steps/s speedup: {res['decode_steps_per_s_speedup']:.2f}x"
+          f"   decode steps per host sync: {fu['decode_steps_per_sync']:.1f}")
+    print(f"criteria: {res['criteria']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,9 @@ construction; the derived column is each benchmark's headline number).
 """
 import time
 
-from benchmarks import (fig1_latency_energy, fig2_prefill, fig3_decode,
-                        fig4_region_carbon, fig56_token_carbon, fig7_lifetime,
-                        table1_embodied, tpu_carbon)
+from benchmarks import (engine_bench, fig1_latency_energy, fig2_prefill,
+                        fig3_decode, fig4_region_carbon, fig56_token_carbon,
+                        fig7_lifetime, table1_embodied, tpu_carbon)
 
 BENCHES = [
     ("table1_embodied", table1_embodied),
@@ -17,6 +17,7 @@ BENCHES = [
     ("fig56_token_carbon", fig56_token_carbon),
     ("fig7_lifetime", fig7_lifetime),
     ("tpu_carbon", tpu_carbon),
+    ("engine", engine_bench),
 ]
 
 

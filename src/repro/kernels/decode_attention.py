@@ -5,16 +5,22 @@ Layout: q (B, Hq, hd); k (B, Hkv, W, hd); v (B, Hkv, W, hd_v) — hd_v may
 differ from hd (MLA-absorbed decode: q/k live in the 512+64-dim latent,
 v IS the 512-dim latent; see ``mla_decode_attention`` in ops.py);
 k_pos (B, W) int32 (-1 empty); q_pos (B,) int32 current absolute position.
-Grid (B, Hq, num_kv_blocks): the kv axis is innermost/sequential, the
-running (m, l, acc) state sits in VMEM scratch — i.e. the memory-bound
-decode read of the KV cache happens exactly once, which is the
-roofline-optimal traffic.
+
+Grid (B, Hkv, num_kv_blocks): one program per KV head, with the whole
+(group, hd) GQA query block resident in VMEM — every query head of the
+group scores against the KV block the program just pulled from HBM. The kv
+axis is innermost/sequential and the running (m, l, acc) state sits in VMEM
+scratch, so the memory-bound decode read of the KV cache happens exactly
+ONCE PER GROUP, not once per query head — the roofline-optimal traffic
+(decode HBM bytes ~ B * Hkv * W * (hd + hd_v), independent of Hq).
+``decode_grid_spec`` exposes the grid/BlockSpec shapes so tests can assert
+this property without re-deriving kernel internals.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +29,33 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e9
 DEFAULT_BK = 512
+
+
+def decode_grid_spec(B: int, Hq: int, Hkv: int, W: int, hd: int, hd_v: int,
+                     block_k: int = DEFAULT_BK) -> Dict:
+    """Grid + block shapes for the GQA-grouped decode kernel.
+
+    The contract asserted by tests/test_engine_fused.py: the head grid axis is
+    Hkv (not Hq), the k/v blocks carry a single KV head, and the q/o blocks
+    carry the full GQA group — so the number of HBM reads of each KV block
+    equals the number of grid points touching it, i.e. exactly one per
+    (batch, kv head, kv block).
+    """
+    assert Hq % Hkv == 0, "kernel requires uniform GQA grouping"
+    group = Hq // Hkv
+    bk = min(block_k, W)
+    nk = -(-W // bk)
+    return {
+        "grid": (B, Hkv, nk),
+        "q_block": (1, group, hd),
+        "k_block": (1, 1, bk, hd),
+        "v_block": (1, 1, bk, hd_v),
+        "o_block": (1, group, hd_v),
+        "group": group,
+        "block_k": bk,
+        "num_kv_blocks": nk,
+        "kv_block_hbm_reads_per_group": 1,
+    }
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
@@ -35,33 +68,35 @@ def _decode_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (hd,)
-    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
-    v = v_ref[0, 0].astype(jnp.float32)
+    q = q_ref[0].astype(jnp.float32)                      # (group, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                   # (bk, hd_v)
     qpos = qpos_ref[0]                                    # scalar
     kpos = kpos_ref[0]                                    # (bk,)
 
-    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # (bk,)
+    # (group, bk) scores: contract hd without materializing k^T
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
     ok = (kpos >= 0) & (kpos <= qpos)
     if window is not None:
         ok &= kpos > qpos - window
     if chunk is not None:
         ok &= (kpos // chunk) == (qpos // chunk)
-    s = jnp.where(ok, s, NEG_INF)
+    s = jnp.where(ok[None, :], s, NEG_INF)
 
-    m_prev = m_ref[0]
-    m_new = jnp.maximum(m_prev, s.max())
-    p = jnp.exp(s - m_new)
+    m_prev = m_ref[...]                                   # (group,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
     corr = jnp.exp(m_prev - m_new)
-    l_ref[0] = l_ref[0] * corr + p.sum()
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)[None]
-    m_ref[0] = m_new
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
 
     @pl.when(ik == n_kv - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)
-                       ).astype(o_ref.dtype)
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -75,10 +110,8 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     B, Hq, hd = q.shape
     hd_v = v.shape[-1]
     Hkv, W = k.shape[1], k.shape[2]
-    assert Hq % Hkv == 0, "kernel requires uniform GQA grouping"
-    group = Hq // Hkv
-    bk = min(block_k, W)
-    nk = -(-W // bk)
+    spec = decode_grid_spec(B, Hq, Hkv, W, hd, hd_v, block_k)
+    group, bk, nk = spec["group"], spec["block_k"], spec["num_kv_blocks"]
     if W % bk:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, nk * bk - W), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, nk * bk - W), (0, 0)))
@@ -88,21 +121,22 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                n_kv=nk, scale=1.0 / math.sqrt(hd))
     out = pl.pallas_call(
         kernel,
-        grid=(B, Hq, nk),
+        grid=spec["grid"],
         in_specs=[
-            pl.BlockSpec((1, 1, hd), lambda b, h, ik: (b, h, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, bk, hd_v),
-                         lambda b, h, ik: (b, h // group, ik, 0)),
+            # q/o blocks cover the whole GQA group of kv head h
+            pl.BlockSpec(spec["q_block"], lambda b, h, ik: (b, h, 0)),
+            # k/v blocks carry ONE kv head: read once per (b, h, ik)
+            pl.BlockSpec(spec["k_block"], lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec(spec["v_block"], lambda b, h, ik: (b, h, ik, 0)),
             pl.BlockSpec((1,), lambda b, h, ik: (b,)),
             pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
         ],
-        out_specs=pl.BlockSpec((1, 1, hd_v), lambda b, h, ik: (b, h, 0)),
+        out_specs=pl.BlockSpec(spec["o_block"], lambda b, h, ik: (b, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hq, hd_v), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, hd_v), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, hd_v), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v, q_pos, k_pos)

@@ -40,8 +40,21 @@ def flash_attention(q, k, v, q_pos, k_pos, window=None, chunk=None,
                                interpret=(impl == "pallas_interpret"), **kw)
 
 
+# GQA-grouped decode grid introspection (tests assert the one-HBM-read-per-
+# group contract through this without reaching into kernel internals)
+decode_grid_spec = _dec.decode_grid_spec
+
+
 def decode_attention(q, k, v, q_pos, k_pos, window=None, chunk=None,
                      impl: Optional[str] = None, **kw):
+    """Single-token decode attention over a (B, Hkv, W, *) KV cache.
+
+    The Pallas path runs the (B, Hkv, nk) GQA-grouped grid: the whole
+    (group, hd) query block of each KV head rides one program, so each KV
+    cache block is read from HBM once per group rather than once per query
+    head. The model decode path (models/attention.py) feeds the cache in
+    exactly this layout via two moveaxis views — no copy.
+    """
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.decode_attention(q, k, v, q_pos, k_pos, window, chunk)

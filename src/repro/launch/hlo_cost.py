@@ -49,6 +49,37 @@ def _called_computations(rest: str) -> List[str]:
         out.extend(x.strip().lstrip("%") for x in blob.split(",") if x.strip())
     return out
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+_TYPED_OPERAND = re.compile(r"^\s*\(?\s*([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand names from the argument list (text up to the closing paren).
+
+    Handles both HLO printings: untyped ``op(%a, %b)`` and typed
+    ``op(f32[2,3]{1,0} %a, ...)`` — comma-splitting breaks on typed
+    operands because shapes contain commas, so prefer %-prefixed names.
+    """
+    args = rest.split(")")[0]
+    names = _OPERAND_NAME.findall(args)
+    if names:
+        return names
+    return [a.strip() for a in args.split(",") if a.strip()]
+
+
+def _dot_lhs_dims(rest: str, shapes: Dict[str, str]) -> List[int]:
+    """Dims of a dot's lhs operand: inline type if printed, else symbol
+    table lookup."""
+    args = rest.split(")")[0]
+    m = _TYPED_OPERAND.match(args)
+    if m and m.group(1) in DTYPE_BYTES:
+        return [int(d) for d in m.group(2).split(",") if d]
+    names = _operand_names(rest)
+    if names:
+        _, dl = _shape_info(shapes.get(names[0], ""))
+        if dl:
+            return dl[0][1]
+    return []
 _GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 _GROUPS_IOTA = re.compile(
     r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
@@ -223,8 +254,7 @@ def analyze(text: str, pod_size: int = 0) -> HloCost:
         for tgt in called:
             for inner in comps.get(tgt, []):
                 if inner.opcode == "dynamic-update-slice":
-                    args = [a.strip().lstrip("%")
-                            for a in inner.rest.split(")")[0].split(",")]
+                    args = _operand_names(inner.rest)
                     if len(args) >= 2 and args[1] in shapes:
                         ub, _ = _shape_info(shapes[args[1]])
                         if 0 < ub < full_bytes:
@@ -239,13 +269,10 @@ def analyze(text: str, pod_size: int = 0) -> HloCost:
             out_bytes, out_shapes = _shape_info(op.shape_str)
             opc = op.opcode
             if opc == "dot":
-                lhs = op.rest.split(",")[0].strip().lstrip("%")
-                lhs_shape = shapes.get(lhs, "")
-                _, lhs_dims = _shape_info(lhs_shape)
+                dims = _dot_lhs_dims(op.rest, shapes)
                 contract = 1
                 cm = _LHS_CONTRACT.search(op.rest)
-                if cm and lhs_dims:
-                    dims = lhs_dims[0][1]
+                if cm and dims:
                     for idx in cm.group(1).split(","):
                         if idx.strip() and int(idx) < len(dims):
                             contract *= dims[int(idx)]

@@ -353,6 +353,8 @@ def self_attention(p: Dict, cfg, x: jax.Array, positions: jax.Array,
         bias = self_attn_bias(positions, cache["pos_ids"],
                               layer_window, layer_chunk)[:, None]
         if use_kernel:
+            # (B, Hkv, W, hd) is the grouped-decode kernel's native layout:
+            # its (B, Hkv, nk) grid reads each KV block once per GQA group
             from repro.kernels import ops as KOPS
             out = KOPS.decode_attention(
                 q[:, 0],                            # (B, Hq, hd)

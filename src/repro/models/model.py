@@ -25,6 +25,13 @@ from repro.sharding import shard
 
 AUX_WEIGHT_KEYS = {"moe_aux": "router_aux_weight", "moe_z": "router_z_weight"}
 
+# Block kinds safe under right-padded batched prefill: attention kinds mask
+# pad keys via pos_ids == -1; mamba2 freezes its state on masked tokens.
+# rwkv6 (no mask plumbing) and memory-conditioned kinds (cross/dec/enc) are
+# excluded — the serving engine falls back to exact-length batching there.
+PADDED_PREFILL_KINDS = {"dense", "parallel", "moe", "mla", "mla_moe",
+                        "shared", "mamba2"}
+
 
 def _stack_trees(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
@@ -37,6 +44,13 @@ class Model:
         self.cfg = cfg
         self.prefix, self.unit, self.repeats = cfg.grouping()
         self.prefix_len = len(self.prefix)
+
+    @property
+    def supports_padded_prefill(self) -> bool:
+        """True when right-padded batched prefill is exact for this model."""
+        kinds = set(self.prefix) | set(self.unit)
+        return (not self.cfg.is_encdec
+                and kinds <= PADDED_PREFILL_KINDS)
 
     # ------------------------------------------------------------------ init
     def init(self, key) -> Dict:
@@ -213,6 +227,11 @@ class Model:
             positions = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
         mask = extras.get("mask")
+        if mode == "prefill" and mask is not None:
+            # right-padded batched prefill: pad slots get position -1, so
+            # their cache entries are masked (pos_ids == -1 = empty) and no
+            # real token ever attends to them
+            positions = jnp.where(mask > 0, positions, -1)
 
         x = L.embed(params["embed"], cfg, tokens)
         if "image_embeds" in extras and cfg.n_image_tokens == 0:

@@ -9,16 +9,31 @@ DESIGN.md hardware-adaptation table). Both phases are metered separately,
 reproducing the paper's §2.3 decomposition, and the CarbonMeter carries the
 region CI + embodied amortization (Eq. 2-4).
 
+Hot path (this module's whole point — decode is the memory-bound phase
+that dominates serving energy, so its per-token host overhead must be ~0):
+
+  * one jitted, fixed-shape **fused step** does decode -> sampling -> EOS/
+    budget masking -> per-slot done flags entirely on device;
+    ``sync_every`` such micro-steps run inside a single ``lax.scan`` chunk,
+    so the host syncs once per chunk (on the stacked token matrix) instead
+    of once per token;
+  * admissions are **batched**: all waiting requests that fit free slots
+    prefill together through a jitted, power-of-two length-bucketed prefill
+    (right padding + attention masking — prompt-length variation retraces
+    at most log2(max_len) shapes), and the new caches enter the pool in a
+    single scatter pass per leaf (``sampling.insert_prefill``) rather than
+    per-request whole-tree copies.
+
 Continuous batching: a fixed pool of decode slots; arriving requests are
-prefilled (phase 1) and their caches inserted into free slots; one
-``decode_step`` advances every active slot (phase 2); finished slots are
-freed immediately. This is the standard in-flight batching loop (Orca/vLLM
+prefilled (phase 1) and their caches inserted into free slots; each fused
+chunk advances every active slot (phase 2); finished slots are freed at
+chunk boundaries. This is the standard in-flight batching loop (Orca/vLLM
 style) in pure JAX with a static batch shape.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import functools
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -31,20 +46,8 @@ from repro.core.hardware import HardwareProfile, get_profile
 from repro.core.meter import CarbonMeter
 from repro.models import Model
 from repro.models.costing import workload_of
+from repro.serving import sampling
 from repro.serving.request import Request, Response
-
-
-def _insert_cache(dst, src, slot: int):
-    """Insert a batch-1 cache into slot ``slot`` of a batch-B cache pool."""
-    def leaf(kp, d, s):
-        top = kp[0]
-        key = getattr(top, "key", None)
-        bdim = 1 if key == "unit" else 0
-        idx = [slice(None)] * d.ndim
-        idx[bdim] = slot
-        return d.at[tuple(idx)].set(jnp.take(s, 0, axis=bdim))
-
-    return jax.tree_util.tree_map_with_path(leaf, dst, src)
 
 
 @dataclasses.dataclass
@@ -56,6 +59,8 @@ class EngineConfig:
     lifetime_years: float = 5.0
     n_devices: int = 1
     temperature: float = 0.0           # 0 = greedy
+    sync_every: int = 8                # decode steps per host sync (chunk)
+    prefill_min_bucket: int = 8        # smallest padded-prefill bucket
     # carbon-budget admission (paper SS4): defer new prefills while the
     # run's cumulative carbon rate exceeds the budget (g CO2eq per 1000
     # generated tokens). None = unlimited.
@@ -76,16 +81,35 @@ class ServingEngine:
         self.responses: Dict[int, Response] = {}
         B = cfg.max_batch
         self.caches = model.init_cache(B, cfg.max_len)
-        self.slot_rid = [-1] * B                        # -1 = free
+        self.cur_tokens = jnp.zeros((B, 1), jnp.int32)
+        self.state = sampling.init_slot_state(B)     # device-side slot state
+        # host mirrors (bookkeeping only; the device state drives the chunk)
+        self.slot_rid = [-1] * B                     # -1 = free
         self.slot_budget = [0] * B
-        self.slot_eos = [None] * B
+        self.slot_eos: List[Optional[int]] = [None] * B
+        self._slot_ctx = [0.0] * B                   # context length mirror
         self._slo = [None] * B
         self._req_slo: Dict[int, Optional[float]] = {}
-        self.cur_tokens = jnp.zeros((B, 1), jnp.int32)
         self._key = jax.random.PRNGKey(0)
-        self._jit_decode = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t))
         self._steps = 0
+        self.decode_chunks = 0                       # device->host syncs
+        self.prefill_batches = 0
+
+        vocab = model.cfg.vocab
+        temp = cfg.temperature
+
+        def _prefill(params, tokens, mask, key):
+            last, pcache = model.prefill(params, tokens,
+                                         extras={"mask": mask},
+                                         max_len=cfg.max_len)
+            first = sampling.sample(last[:, :vocab], key, temp)
+            return first, pcache
+
+        self._jit_prefill = jax.jit(_prefill)
+        self._jit_insert = jax.jit(sampling.insert_prefill)
+        self._jit_steps = jax.jit(
+            functools.partial(sampling.fused_decode_steps, model),
+            static_argnames=("n_steps", "temperature"))
 
     # ------------------------------------------------------------- metering
     def _meter_prefill(self, batch: int, seq: int):
@@ -122,77 +146,144 @@ class ServingEngine:
             return False
         return (t.total_g / t.tokens * 1000.0) > b
 
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------ admission
     def _admit(self) -> None:
-        """Prefill waiting requests into free slots (phase 1)."""
+        """Batch-prefill waiting requests into free slots (phase 1)."""
         if self._over_budget() and self.active > 0:
             return                     # defer admissions; drain active work
-        for slot in self.free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            last, pcache = self.model.prefill(self.params, prompt,
-                                              max_len=self.cfg.max_len)
+        free = self.free_slots()
+        take: List[Request] = []
+        while len(take) < len(free) and self.queue:
+            take.append(self.queue.popleft())
+        if not take:
+            return
+        # bucket prompts: padded power-of-two buckets when the model masks
+        # pad tokens exactly; exact-length groups otherwise (rwkv/enc-dec).
+        # Buckets are clamped to max_len — past that the cache ring must
+        # keep the LAST W real tokens, so padding would evict real tokens
+        # in favor of pads; those prompts prefill at exact length.
+        padded = self.model.supports_padded_prefill
+        groups: Dict[int, List[Request]] = {}
+        for req in take:
+            L = len(req.prompt)
+            if padded and L <= self.cfg.max_len:
+                b = min(sampling.prefill_bucket(L, self.cfg.prefill_min_bucket),
+                        self.cfg.max_len)
+            else:
+                b = L
+            groups.setdefault(b, []).append(req)
+        slot_iter = iter(free)
+        for bucket, reqs in groups.items():
+            slots = [next(slot_iter) for _ in reqs]
+            self._prefill_group(bucket, reqs, slots)
+
+    def _prefill_group(self, bucket: int, reqs: List[Request],
+                       slots: List[int]) -> None:
+        n = len(reqs)
+        n_pad = 1                      # pow2 batch dim: prefill trace count
+        while n_pad < n:               # is O(log2(max_batch) * log2(max_len))
+            n_pad *= 2
+        tokens = np.zeros((n_pad, bucket), np.int32)
+        mask = np.zeros((n_pad, bucket), np.int32)
+        for i, req in enumerate(reqs):
+            L = len(req.prompt)
+            tokens[i, :L] = req.prompt
+            mask[i, :L] = 1
+        # pad rows replicate request 0 (discarded at insertion) rather than
+        # run degenerate zero-length sequences through the model
+        tokens[n:] = tokens[0]
+        mask[n:] = mask[0]
+        first, pcache = self._jit_prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(mask),
+            self._next_key())
+        budgets = jnp.asarray([r.max_new_tokens - 1 for r in reqs], jnp.int32)
+        eos_ids = jnp.asarray([-1 if r.eos_id is None else r.eos_id
+                               for r in reqs], jnp.int32)
+        slots_a = jnp.asarray(slots, jnp.int32)
+        self.caches, self.cur_tokens, self.state = self._jit_insert(
+            self.caches, pcache, slots_a, self.cur_tokens, first,
+            self.state, budgets, eos_ids)
+        first_h = np.asarray(jax.device_get(first))
+        self.prefill_batches += 1
+        # meter + bookkeeping per request (true lengths, seed attribution)
+        for i, (req, slot) in enumerate(zip(reqs, slots)):
             rep = self._meter_prefill(1, len(req.prompt))
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
             resp.energy_j += rep.energy_j
-            self._slo[slot] = req.slo_s
-            self.caches = _insert_cache(self.caches, pcache, slot)
-            nxt = self._sample(last[:, :self.model.cfg.vocab])
-            self.cur_tokens = self.cur_tokens.at[slot, 0].set(nxt[0])
-            resp.tokens.append(int(nxt[0]))
+            resp.tokens.append(int(first_h[i]))
+            if req.max_new_tokens <= 1:
+                resp.finished = True   # prefill token was the whole budget
+                continue               # slot stays free (device side agrees)
             self.slot_rid[slot] = req.rid
             self.slot_budget[slot] = req.max_new_tokens - 1
             self.slot_eos[slot] = req.eos_id
+            self._slot_ctx[slot] = float(len(req.prompt))
+            self._slo[slot] = req.slo_s
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.cfg.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(
-            sub, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
-
-    def _decode_once(self) -> None:
-        """One decode step for all active slots (phase 2)."""
-        logits, self.caches = self._jit_decode(self.params, self.caches,
-                                               self.cur_tokens)
-        n_active = self.active
-        ctx = float(np.mean(np.asarray(self.caches["t"])))
-        rep = self._meter_decode(n_active, max(ctx, 1.0))
-        nxt = self._sample(logits[:, :self.model.cfg.vocab])
-        self.cur_tokens = nxt[:, None]
-        per_tok_t = rep.t_total / max(n_active, 1)
-        per_tok_e = rep.energy_j / max(n_active, 1)
-        for slot, rid in enumerate(self.slot_rid):
-            if rid < 0:
-                continue
-            resp = self.responses[rid]
-            tok = int(nxt[slot])
-            resp.tokens.append(tok)
-            resp.decode_s += per_tok_t
-            resp.energy_j += per_tok_e
-            self.slot_budget[slot] -= 1
-            done = self.slot_budget[slot] <= 0 or (
-                self.slot_eos[slot] is not None and tok == self.slot_eos[slot])
-            if done:
-                resp.finished = True
-                self.slot_rid[slot] = -1
-                self._slo[slot] = None
-        self._steps += 1
+    # --------------------------------------------------------------- decode
+    def _decode_chunk(self, max_steps: int) -> None:
+        """One fused on-device chunk of up to ``sync_every`` decode steps
+        for all active slots (phase 2); a single host sync at the end."""
+        budgets = [self.slot_budget[s] for s, r in enumerate(self.slot_rid)
+                   if r >= 0]
+        n = min(self.cfg.sync_every, max(max(budgets), 1),
+                max(max_steps - self._steps, 1))
+        (self.caches, self.cur_tokens, self.state, tok_mat,
+         emit_mat) = self._jit_steps(
+            self.params, self.caches, self.cur_tokens, self.state,
+            self._next_key(), n_steps=n, temperature=self.cfg.temperature)
+        tok_h, emit_h = jax.device_get((tok_mat, emit_mat))
+        self.decode_chunks += 1
+        for i in range(n):
+            act = emit_h[i]
+            n_active = int(act.sum())
+            if n_active == 0:
+                continue               # all slots drained mid-chunk
+            ctx = float(np.mean([self._slot_ctx[s]
+                                 for s in np.flatnonzero(act)]))
+            rep = self._meter_decode(n_active, max(ctx, 1.0))
+            per_tok_t = rep.t_total / n_active
+            per_tok_e = rep.energy_j / n_active
+            for slot in np.flatnonzero(act):
+                rid = self.slot_rid[slot]
+                resp = self.responses[rid]
+                tok = int(tok_h[i, slot])
+                resp.tokens.append(tok)
+                resp.decode_s += per_tok_t
+                resp.energy_j += per_tok_e
+                self._slot_ctx[slot] += 1.0
+                self.slot_budget[slot] -= 1
+                done = self.slot_budget[slot] <= 0 or (
+                    self.slot_eos[slot] is not None
+                    and tok == self.slot_eos[slot])
+                if done:
+                    resp.finished = True
+                    self.slot_rid[slot] = -1
+                    self._slo[slot] = None
+            self._steps += 1
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and all slots finish."""
         while (self.queue or self.active) and self._steps < max_steps:
             self._admit()
             if self.active:
-                self._decode_once()
-        return [self.responses[r.rid] if isinstance(r, Request) else r
-                for r in self.responses.values()]
+                self._decode_chunk(max_steps)
+        return list(self.responses.values())
 
     # -------------------------------------------------------------- reports
     def carbon_report(self) -> str:
         return self.meter.report()
+
+    @property
+    def host_syncs(self) -> int:
+        """Device->host synchronization points (decode chunk fetches plus
+        one first-token fetch per prefill batch)."""
+        return self.decode_chunks + self.prefill_batches
 
     def stats(self) -> Dict[str, float]:
         t = self.meter.totals
@@ -200,6 +291,9 @@ class ServingEngine:
         dc = self.meter.phase("decode")
         finished = [r for r in self.responses.values() if r.finished]
         lat = [r.prefill_s + r.decode_s for r in finished]
+        p50 = float(np.median(lat)) if lat else 0.0
+        # single-sample guard: a 1-request run reports its own latency
+        p99 = float(np.percentile(lat, 99)) if len(lat) > 1 else p50
         # SLO attainment over finished requests that declared one
         slo_ok = slo_n = 0
         for r in finished:
@@ -209,10 +303,13 @@ class ServingEngine:
                 slo_ok += (r.prefill_s + r.decode_s) <= slo
         return {
             "requests": len(self.responses),
-            "p50_latency_s": float(np.median(lat)) if lat else 0.0,
-            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "p50_latency_s": p50,
+            "p99_latency_s": p99,
             "slo_attainment": (slo_ok / slo_n) if slo_n else 1.0,
             "steps": self._steps,
+            "decode_chunks": self.decode_chunks,
+            "prefill_batches": self.prefill_batches,
+            "host_syncs": self.host_syncs,
             "prefill_tokens": pf.tokens,
             "decode_tokens": dc.tokens,
             "prefill_j_per_token": pf.j_per_token,

@@ -3,6 +3,9 @@ Tables 1-2, §3.4)."""
 import math
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (not in container)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CarbonMeter, FleetSlice, amortized_embodied_g,

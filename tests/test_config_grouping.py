@@ -1,5 +1,8 @@
 """ModelConfig pattern-factorization and padding invariants."""
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (not in container)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import ModelConfig, SSMConfig

@@ -1,5 +1,8 @@
 """CI-directed carbon-aware scheduler tests (paper §4, Takeaways 2-5)."""
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (not in container)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CIDirectedScheduler, FleetSlice, carbon_optimal_batch,
