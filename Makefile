@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test kernels verify bench-engine bench
+.PHONY: test kernels paged verify bench-engine bench
 
 test:               ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -9,7 +9,11 @@ test:               ## tier-1 suite
 kernels:            ## interpret-mode Pallas kernel sweeps + fused-step tests
 	$(PY) -m pytest -q tests/test_kernels.py tests/test_engine_fused.py
 
-verify: test kernels ## tier-1 plus interpret-mode kernel tests
+paged:              ## interpret-mode paged-kernel sweep + engine parity + allocator
+	$(PY) -m pytest -q tests/test_paged_kernel.py tests/test_paged_parity.py \
+	    tests/test_page_allocator.py tests/test_engine_admission.py
+
+verify: test kernels paged ## tier-1 plus interpret-mode kernel + paged sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py

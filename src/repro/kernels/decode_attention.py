@@ -32,7 +32,9 @@ DEFAULT_BK = 512
 
 
 def decode_grid_spec(B: int, Hq: int, Hkv: int, W: int, hd: int, hd_v: int,
-                     block_k: int = DEFAULT_BK) -> Dict:
+                     block_k: int = DEFAULT_BK,
+                     page_size: Optional[int] = None,
+                     num_pages: Optional[int] = None) -> Dict:
     """Grid + block shapes for the GQA-grouped decode kernel.
 
     The contract asserted by tests/test_engine_fused.py: the head grid axis is
@@ -40,9 +42,34 @@ def decode_grid_spec(B: int, Hq: int, Hkv: int, W: int, hd: int, hd_v: int,
     carry the full GQA group — so the number of HBM reads of each KV block
     equals the number of grid points touching it, i.e. exactly one per
     (batch, kv head, kv block).
+
+    Paged extension (``page_size``/``num_pages`` given): the kv grid axis
+    iterates the slot's ``max_pages`` LOGICAL pages and the k/v BlockSpecs
+    index the (Hkv, num_pages+1, page_size, hd) physical pool through the
+    scalar-prefetched block table — the kv block is one physical page of
+    one kv head, so the one-HBM-read-per-(batch, kv head, logical page)
+    contract carries over unchanged from the contiguous kernel.
     """
     assert Hq % Hkv == 0, "kernel requires uniform GQA grouping"
     group = Hq // Hkv
+    if page_size is not None:
+        assert num_pages is not None and W % page_size == 0
+        nk = W // page_size                  # max logical pages per slot
+        return {
+            "grid": (B, Hkv, nk),
+            "q_block": (1, group, hd),
+            "k_block": (1, 1, page_size, hd),
+            "v_block": (1, 1, page_size, hd_v),
+            "o_block": (1, group, hd_v),
+            "group": group,
+            "block_k": page_size,
+            "num_kv_blocks": nk,
+            "kv_block_hbm_reads_per_group": 1,
+            "paged": True,
+            "page_size": page_size,
+            "num_pages": num_pages,
+            "kv_pool_shape": (Hkv, num_pages + 1, page_size),
+        }
     bk = min(block_k, W)
     nk = -(-W // bk)
     return {
@@ -55,6 +82,7 @@ def decode_grid_spec(B: int, Hq: int, Hkv: int, W: int, hd: int, hd_v: int,
         "block_k": bk,
         "num_kv_blocks": nk,
         "kv_block_hbm_reads_per_group": 1,
+        "paged": False,
     }
 
 
@@ -141,3 +169,79 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(q, k, v, q_pos, k_pos)
     return out
+
+
+def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, qpos_ref, kpos_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, window, chunk,
+                         n_kv, scale):
+    # identical math to the contiguous kernel — the block table only moves
+    # WHICH physical page the k/v BlockSpecs DMA'd in (see index maps)
+    _decode_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, window=window, chunk=chunk,
+                   n_kv=n_kv, scale=scale)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tbl: jax.Array,
+                           q_pos: jax.Array, k_pos: jax.Array,
+                           window: Optional[int] = None,
+                           chunk: Optional[int] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Block-table decode attention over a shared page pool.
+
+    q: (B, Hq, hd); k_pages: (Hkv, P+1, ps, hd); v_pages: (Hkv, P+1, ps,
+    hd_v); block_tbl: (B, M) int32 physical page per logical page (-1 =
+    unmapped -> trash page P); q_pos: (B,); k_pos: (B, M*ps) LOGICAL
+    positions (-1 = empty). Returns (B, Hq, hd_v).
+
+    The grid is the contiguous kernel's (B, Hkv, nk) with nk = M logical
+    pages; the block table rides in as a scalar-prefetch operand so the
+    k/v index maps can chase it — each physical page is still read from
+    HBM exactly once per (batch, kv head) GQA group. Unmapped logical
+    pages resolve to the trash page and are masked by their -1 logical
+    positions, so the running softmax never sees them.
+    """
+    B, Hq, hd = q.shape
+    Hkv, P1, ps, _ = k_pages.shape
+    hd_v = v_pages.shape[-1]
+    M = block_tbl.shape[1]
+    spec = decode_grid_spec(B, Hq, Hkv, M * ps, hd, hd_v,
+                            page_size=ps, num_pages=P1 - 1)
+    group = spec["group"]
+    trash = P1 - 1
+
+    def page_of(b, ik, tbl):
+        p = tbl[b, ik]
+        return jnp.where(p < 0, trash, p)
+
+    kernel = functools.partial(_paged_decode_kernel, window=window,
+                               chunk=chunk, n_kv=M,
+                               scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=spec["grid"],
+        in_specs=[
+            pl.BlockSpec(spec["q_block"], lambda b, h, ik, tbl: (b, h, 0)),
+            # k/v blocks are ONE physical page of ONE kv head, located by
+            # chasing the prefetched block table
+            pl.BlockSpec(spec["k_block"],
+                         lambda b, h, ik, tbl: (h, page_of(b, ik, tbl), 0, 0)),
+            pl.BlockSpec(spec["v_block"],
+                         lambda b, h, ik, tbl: (h, page_of(b, ik, tbl), 0, 0)),
+            pl.BlockSpec((1,), lambda b, h, ik, tbl: (b,)),
+            pl.BlockSpec((1, ps), lambda b, h, ik, tbl: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec(spec["o_block"],
+                               lambda b, h, ik, tbl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, hd_v), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd_v), q.dtype),
+        interpret=interpret,
+    )(block_tbl, q, k_pages, v_pages, q_pos, k_pos)

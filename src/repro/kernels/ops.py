@@ -62,6 +62,28 @@ def decode_attention(q, k, v, q_pos, k_pos, window=None, chunk=None,
                                  interpret=(impl == "pallas_interpret"), **kw)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tbl, q_pos, k_pos,
+                           window=None, chunk=None,
+                           impl: Optional[str] = None, **kw):
+    """Single-token decode attention over a paged KV pool.
+
+    k_pages/v_pages: (Hkv, num_pages+1, page_size, *) shared physical pool
+    (last page = trash); block_tbl: (B, max_pages) logical->physical map
+    (-1 = unmapped); k_pos: (B, max_pages*page_size) LOGICAL positions.
+    The Pallas path keeps the contiguous kernel's (B, Hkv, nk) GQA grid —
+    the scalar-prefetched block table only redirects which physical page
+    each program DMAs, so every page is still read once per group.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.paged_decode_attention(q, k_pages, v_pages, block_tbl,
+                                           q_pos, k_pos, window, chunk)
+    return _dec.paged_decode_attention(q, k_pages, v_pages, block_tbl,
+                                       q_pos, k_pos, window, chunk,
+                                       interpret=(impl == "pallas_interpret"),
+                                       **kw)
+
+
 def mla_decode_attention(q_lat, q_rope, ckv, k_rope, q_pos, k_pos,
                          window=None, impl: Optional[str] = None, **kw):
     """MLA-absorbed decode as MQA flash-decode over the latent cache.

@@ -48,6 +48,26 @@ def decode_attention(q, k, v, q_pos, k_pos, window: Optional[int] = None,
     return out[:, :, 0, :]
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tbl, q_pos, k_pos,
+                           window: Optional[int] = None,
+                           chunk: Optional[int] = None):
+    """q: (B,Hq,hd); k_pages/v_pages: (Hkv,P+1,ps,*); block_tbl: (B,M);
+    q_pos: (B,); k_pos: (B,M*ps) logical. Gather the logical view through
+    the block table, then score exactly like the contiguous oracle —
+    unmapped pages read the trash page (row P) and are masked by their -1
+    logical positions."""
+    P1 = k_pages.shape[1]
+    safe = jnp.where(block_tbl < 0, P1 - 1, block_tbl)
+
+    def logical(pages):
+        g = pages[:, safe]                             # (Hkv, B, M, ps, hd)
+        H, B, M, ps, hd = g.shape
+        return jnp.moveaxis(g, 0, 1).reshape(B, H, M * ps, hd)
+
+    return decode_attention(q, logical(k_pages), logical(v_pages),
+                            q_pos, k_pos, window, chunk)
+
+
 def wkv6(r, k, v, w, u, s0):
     """r/k/v/w: (B,H,T,hd); u: (H,hd); s0: (B,H,hd,hd) f32."""
     rs = jnp.moveaxis(r.astype(jnp.float32), 2, 0)

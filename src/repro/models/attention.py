@@ -307,6 +307,67 @@ def decode_write_cache(cache: Dict, k1: jax.Array, v1: jax.Array) -> Dict:
     }
 
 
+# ---- paged KV pool (serving/paged.py owns the allocator; the layout ops
+# ---- live here with the rest of the cache code) ---------------------------
+#
+# Paged cache leaf group: {"k_pages","v_pages": (Hkv, num_pages+1, ps, *),
+# "pos_ids": (B, W) LOGICAL (-1 empty), "length": (B,)}. Head-major so a
+# (Hkv, (num_pages+1)*ps, *) reshape makes every append/gather a single
+# flat-row advanced index. The last physical page is a TRASH page: writes
+# by slots with no mapped page (finished slots coasting inside a fused
+# chunk) land there, and unmapped logical pages gather from there — always
+# masked because the logical pos_ids row is -1.
+
+
+def _flat_rows(pages: jax.Array):
+    """(Hkv, P+1, ps, hd) -> ((Hkv, (P+1)*ps, hd) view, ps, trash page)."""
+    H, P1, ps, hd = pages.shape
+    return pages.reshape(H, P1 * ps, hd), ps, P1 - 1
+
+
+def paged_decode_write(cache: Dict, tbl: jax.Array, k1: jax.Array,
+                       v1: jax.Array) -> Dict:
+    """Append one token per slot through the (B, max_pages) block table."""
+    t = cache["length"]
+    kf, ps, trash = _flat_rows(cache["k_pages"])
+    vf, _, _ = _flat_rows(cache["v_pages"])
+    B = t.shape[0]
+    M = tbl.shape[1]
+    W = cache["pos_ids"].shape[1]
+    bidx = jnp.arange(B)
+    lp = t // ps
+    pg = tbl[bidx, jnp.clip(lp, 0, M - 1)]
+    pg = jnp.where((pg < 0) | (lp >= M), trash, pg)
+    rows = pg * ps + t % ps                          # physical flat row (B,)
+    t_c = jnp.clip(t, 0, W - 1)
+    kf = kf.at[:, rows].set(jnp.swapaxes(k1[:, 0], 0, 1).astype(kf.dtype))
+    vf = vf.at[:, rows].set(jnp.swapaxes(v1[:, 0], 0, 1).astype(vf.dtype))
+    return {
+        "k_pages": kf.reshape(cache["k_pages"].shape),
+        "v_pages": vf.reshape(cache["v_pages"].shape),
+        "pos_ids": cache["pos_ids"].at[bidx, t_c].set(t),
+        "length": t + 1,
+    }
+
+
+def gather_pages_hb(pages: jax.Array, tbl: jax.Array) -> jax.Array:
+    """Head-major logical view (Hkv, B, W, hd) of a page pool, as ONE
+    page-granular gather with no transpose — the decode hot path's layout
+    (the attention einsums contract it in place). The Pallas path instead
+    chases the block table inside the kernel (kernels/decode_attention.py).
+    """
+    H, P1, ps, hd = pages.shape
+    safe = jnp.where(tbl < 0, P1 - 1, tbl)           # (B, M)
+    g = pages[:, safe]                               # (H, B, M, ps, hd)
+    return g.reshape(H, tbl.shape[0], tbl.shape[1] * ps, hd)
+
+
+def gather_pages(pages: jax.Array, tbl: jax.Array) -> jax.Array:
+    """Logical (B, W, Hkv, hd) cache view of a page pool — the layout of
+    the contiguous cache leaf, for reference/eq checks."""
+    return jnp.moveaxis(gather_pages_hb(pages, tbl), 0, 2)
+
+
 # --------------------------------------------------------------------------
 # GQA self-attention block
 # --------------------------------------------------------------------------
@@ -342,52 +403,97 @@ def _expand_kv(cfg, k):
 def self_attention(p: Dict, cfg, x: jax.Array, positions: jax.Array,
                    layer_window: Optional[int], layer_chunk: Optional[int],
                    cache: Optional[Dict] = None, mode: str = "train",
+                   page_tbl: Optional[jax.Array] = None,
                    ) -> Tuple[jax.Array, Optional[Dict]]:
-    """mode: 'train' (no cache) | 'prefill' (build cache) | 'decode' (1 tok)."""
+    """mode: 'train' (no cache) | 'prefill' (build cache) | 'decode' (1 tok).
+
+    A decode cache may be either the contiguous per-slot layout or a paged
+    leaf group (``k_pages`` present), in which case ``page_tbl`` maps the
+    slot's logical pages to the shared pool. Both layouts feed the SAME
+    attention math on masked logical positions, so they are token-for-token
+    equivalent (tests/test_paged_parity.py pins this).
+    """
     q, k, v = _qkv(p, cfg, x, positions, qk_norm="q_norm" in p)
     use_kernel = cfg.attn_impl != "ref" and uniform_gqa_group(cfg) is not None
     if mode == "decode":
         assert cache is not None
-        cache = decode_write_cache(cache, k, v)
-        gp = uniform_gqa_group(cfg)
-        bias = self_attn_bias(positions, cache["pos_ids"],
-                              layer_window, layer_chunk)[:, None]
-        if use_kernel:
-            # (B, Hkv, W, hd) is the grouped-decode kernel's native layout:
-            # its (B, Hkv, nk) grid reads each KV block once per GQA group
-            from repro.kernels import ops as KOPS
-            out = KOPS.decode_attention(
-                q[:, 0],                            # (B, Hq, hd)
-                jnp.moveaxis(cache["k"], 1, 2),     # (B, Hkv, W, hd)
-                jnp.moveaxis(cache["v"], 1, 2),
-                positions[:, 0], cache["pos_ids"],
-                window=layer_window, chunk=layer_chunk,
-                impl=cfg.attn_impl)[:, None]        # (B, 1, Hq, hd)
-        elif gp is not None:
-            # grouped attention: contract against the shard-local kv head
-            # directly — no head-expansion gather of the cache (perf: the
-            # take-based expansion all-gathers the cache over the model
-            # axis; EXPERIMENTS.md SSPerf H3)
-            kk = shard(cache["k"], "batch", "kv_seq", "kv_heads", None)
-            vv = shard(cache["v"], "batch", "kv_seq", "kv_heads", None)
-            B_, Sq_ = q.shape[0], q.shape[1]
-            hd = q.shape[-1]
-            qg = q.reshape(B_, Sq_, kk.shape[2], gp, hd)
-            scale = 1.0 / math.sqrt(hd)
-            # bf16 x bf16 -> f32 accumulation in the dot itself (MXU-native;
-            # avoids materializing an f32 copy of the 32k cache — H3 iter 3)
-            sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, kk,
-                            preferred_element_type=jnp.float32) * scale
-            sc = sc + bias[:, :, None]
-            w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
-            out = jnp.einsum("bkgqs,bskd->bqkgd", w, vv)
-            out = out.reshape(B_, Sq_, -1, hd)
+        paged = "k_pages" in cache
+        if paged:
+            assert page_tbl is not None, "paged decode cache needs page_tbl"
+            cache = paged_decode_write(cache, page_tbl, k, v)
         else:
-            kk = _expand_kv(cfg, cache["k"])
-            vv = _expand_kv(cfg, cache["v"])
-            kk = shard(kk, "batch", "kv_seq", "heads", None)
-            vv = shard(vv, "batch", "kv_seq", "heads", None)
-            out = _direct_attention(q, kk, vv, bias)
+            cache = decode_write_cache(cache, k, v)
+        gp = uniform_gqa_group(cfg)
+        if use_kernel:
+            from repro.kernels import ops as KOPS
+            if paged:
+                # same (B, Hkv, nk) grid; the scalar-prefetched block table
+                # redirects each program's page DMA — still one HBM read
+                # per (batch, kv head, logical page)
+                out = KOPS.paged_decode_attention(
+                    q[:, 0], cache["k_pages"], cache["v_pages"], page_tbl,
+                    positions[:, 0], cache["pos_ids"],
+                    window=layer_window, chunk=layer_chunk,
+                    impl=cfg.attn_impl)[:, None]    # (B, 1, Hq, hd)
+            else:
+                # (B, Hkv, W, hd) is the grouped-decode kernel's native
+                # layout: its (B, Hkv, nk) grid reads each KV block once
+                # per GQA group
+                out = KOPS.decode_attention(
+                    q[:, 0],                        # (B, Hq, hd)
+                    jnp.moveaxis(cache["k"], 1, 2),  # (B, Hkv, W, hd)
+                    jnp.moveaxis(cache["v"], 1, 2),
+                    positions[:, 0], cache["pos_ids"],
+                    window=layer_window, chunk=layer_chunk,
+                    impl=cfg.attn_impl)[:, None]    # (B, 1, Hq, hd)
+        else:
+            bias = self_attn_bias(positions, cache["pos_ids"],
+                                  layer_window, layer_chunk)[:, None]
+            if gp is not None:
+                # grouped attention: contract against the shard-local kv
+                # head directly — no head-expansion gather of the cache
+                # (perf: the take-based expansion all-gathers the cache
+                # over the model axis; EXPERIMENTS.md SSPerf H3). Same
+                # math on either layout; only the cache einsum signature
+                # differs: a paged pool is gathered page-granular into the
+                # head-major (Hkv, B, W, hd) view ("kbsd") and contracted
+                # in place — garbage rows carry logical pos -1 and mask to
+                # exactly-zero softmax weight, so this is bit-identical to
+                # the contiguous slot pool ("bskd").
+                if paged:
+                    kk = gather_pages_hb(cache["k_pages"], page_tbl)
+                    vv = gather_pages_hb(cache["v_pages"], page_tbl)
+                    kv_layout, n_kv = "kbsd", kk.shape[0]
+                else:
+                    kk = shard(cache["k"], "batch", "kv_seq", "kv_heads",
+                               None)
+                    vv = shard(cache["v"], "batch", "kv_seq", "kv_heads",
+                               None)
+                    kv_layout, n_kv = "bskd", kk.shape[2]
+                B_, Sq_ = q.shape[0], q.shape[1]
+                hd = q.shape[-1]
+                qg = q.reshape(B_, Sq_, n_kv, gp, hd)
+                scale = 1.0 / math.sqrt(hd)
+                # bf16 x bf16 -> f32 accumulation in the dot itself (MXU-
+                # native; avoids materializing an f32 copy of the 32k
+                # cache — H3 iter 3)
+                sc = jnp.einsum(f"bqkgd,{kv_layout}->bkgqs", qg, kk,
+                                preferred_element_type=jnp.float32) * scale
+                sc = sc + bias[:, :, None]
+                w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+                out = jnp.einsum(f"bkgqs,{kv_layout}->bqkgd", w, vv)
+                out = out.reshape(B_, Sq_, -1, hd)
+            else:
+                if paged:
+                    ck = gather_pages(cache["k_pages"], page_tbl)
+                    cv = gather_pages(cache["v_pages"], page_tbl)
+                else:
+                    ck, cv = cache["k"], cache["v"]
+                kk = _expand_kv(cfg, ck)
+                vv = _expand_kv(cfg, cv)
+                kk = shard(kk, "batch", "kv_seq", "heads", None)
+                vv = shard(vv, "batch", "kv_seq", "heads", None)
+                out = _direct_attention(q, kk, vv, bias)
     else:
         if mode == "prefill":
             cache = prefill_write_cache(cache, k, v, positions)

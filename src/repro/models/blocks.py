@@ -33,6 +33,7 @@ class LayerCtx:
     layer_idx: int = 0                  # absolute depth (chunk alternation)
     batch: int = 1
     max_len: int = 0                    # cache allocation length
+    page_tbl: Optional[jax.Array] = None  # (B, max_pages) paged-KV block table
 
 
 def _layer_window_chunk(cfg, layer_idx: int):
@@ -182,7 +183,8 @@ def block_apply(p: Dict, cfg, kind: str, ctx: LayerCtx, x: jax.Array,
     if kind in ("dense", "moe"):
         h = _norm3(p["ln1"], x, cfg.norm_eps)
         a, cache = A.self_attention(p["attn"], cfg, h, ctx.positions,
-                                    window, chunk, cache, ctx.mode)
+                                    window, chunk, cache, ctx.mode,
+                                    page_tbl=ctx.page_tbl)
         x = _res(cfg, x, a)
         h2 = _norm3(p["ln2"], x, cfg.norm_eps)
         if kind == "moe":
@@ -194,7 +196,8 @@ def block_apply(p: Dict, cfg, kind: str, ctx: LayerCtx, x: jax.Array,
     if kind == "parallel":                       # StableLM-2: parallel residual
         h = _norm3(p["ln1"], x, cfg.norm_eps)
         a, cache = A.self_attention(p["attn"], cfg, h, ctx.positions,
-                                    window, chunk, cache, ctx.mode)
+                                    window, chunk, cache, ctx.mode,
+                                    page_tbl=ctx.page_tbl)
         h2 = _norm3(p["ln2"], x, cfg.norm_eps)
         f = L.swiglu(p["mlp"], h2)
         return _res(cfg, x, a + f), cache, aux
@@ -225,7 +228,8 @@ def block_apply(p: Dict, cfg, kind: str, ctx: LayerCtx, x: jax.Array,
         cat = jnp.concatenate([x, ctx.emb_orig], axis=-1)
         h = _norm3(p["ln1"], cat, cfg.norm_eps)
         a, cache = A.self_attention(p["attn"], cfg, h, ctx.positions,
-                                    window, None, cache, ctx.mode)
+                                    window, None, cache, ctx.mode,
+                                    page_tbl=ctx.page_tbl)
         x = _res(cfg, x, a)
         cat2 = jnp.concatenate([x, ctx.emb_orig], axis=-1)
         h2 = _norm3(p["ln2"], cat2, cfg.norm_eps)
@@ -267,7 +271,8 @@ def block_apply(p: Dict, cfg, kind: str, ctx: LayerCtx, x: jax.Array,
         kv_cache = (None if cache is None else
                     {k: cache[k] for k in ("k", "v", "pos_ids", "length")})
         a, kv_cache = A.self_attention(p["attn"], cfg, h, ctx.positions,
-                                       window, None, kv_cache, ctx.mode)
+                                       window, None, kv_cache, ctx.mode,
+                                       page_tbl=ctx.page_tbl)
         x = _res(cfg, x, a)
         hx = _norm3(p["ln_x"], x, cfg.norm_eps)
         if ctx.mode in ("train", "prefill") and ctx.memory is not None:

@@ -52,6 +52,20 @@ class Model:
         return (not self.cfg.is_encdec
                 and kinds <= PADDED_PREFILL_KINDS)
 
+    @property
+    def supports_paged_decode(self) -> bool:
+        """True when decode KV state can live in a shared paged pool: every
+        block is a full-attention kind (uniform cache width, no ring
+        eviction to translate) or carries fixed-size recurrent state
+        (mamba2, which simply stays slot-addressed). Windowed/chunked
+        attention keeps the contiguous ring; MLA's latent cache is a
+        future extension."""
+        kinds = set(self.prefix) | set(self.unit)
+        return (not self.cfg.is_encdec
+                and kinds <= {"dense", "parallel", "moe", "shared", "mamba2"}
+                and self.cfg.sliding_window is None
+                and self.cfg.attn_chunk is None)
+
     # ------------------------------------------------------------------ init
     def init(self, key) -> Dict:
         cfg = self.cfg
@@ -249,9 +263,14 @@ class Model:
             memory = extras["image_embeds"].astype(x.dtype)
 
         emb_orig = x if any(k == "shared" for k in cfg.block_pattern) else None
+        # paged serving: the shared block table rides the cache tree once
+        # (caches["paged"]) and reaches every attention layer through ctx
+        page_tbl = None
+        if mode == "decode" and caches is not None and "paged" in caches:
+            page_tbl = caches["paged"]["tbl"]
         ctx = B.LayerCtx(cfg=cfg, mode=mode, positions=positions, mask=mask,
                          memory=memory, emb_orig=emb_orig, batch=Bsz,
-                         max_len=0)
+                         max_len=0, page_tbl=page_tbl)
         x, new_caches, aux = self._backbone(params, x, ctx, caches, remat)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = L.logits(params["lm_head"], params["embed"], cfg, x)

@@ -33,7 +33,6 @@ style) in pure JAX with a static batch shape.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -46,8 +45,34 @@ from repro.core.hardware import HardwareProfile, get_profile
 from repro.core.meter import CarbonMeter
 from repro.models import Model
 from repro.models.costing import workload_of
-from repro.serving import sampling
+from repro.serving import paged, sampling
 from repro.serving.request import Request, Response
+
+
+# Module-level jitted entry points with the model as a STATIC argument:
+# every ServingEngine instance sharing a Model instance reuses the same
+# compiled executables (fresh engines used to rebuild jax.jit wrappers
+# around per-engine partials, so each one re-paid every trace+compile —
+# which dominated short-lived engines' wall time).
+
+
+def _prefill_fn(model, params, tokens, mask, key, *, max_len, vocab,
+                temperature):
+    last, pcache = model.prefill(params, tokens, extras={"mask": mask},
+                                 max_len=max_len)
+    first = sampling.sample(last[:, :vocab], key, temperature)
+    return first, pcache
+
+
+_PREFILL = jax.jit(_prefill_fn, static_argnums=(0,),
+                   static_argnames=("max_len", "vocab", "temperature"))
+_FUSED_STEPS = jax.jit(sampling.fused_decode_steps, static_argnums=(0,),
+                       static_argnames=("n_steps", "temperature",
+                                        "page_size"))
+_INSERT = jax.jit(sampling.insert_prefill)
+_INSERT_PAGED = jax.jit(paged.insert_prefill_paged,
+                        static_argnames=("page_size",))
+_RELEASE = jax.jit(paged.release_slots)
 
 
 @dataclasses.dataclass
@@ -65,6 +90,14 @@ class EngineConfig:
     # run's cumulative carbon rate exceeds the budget (g CO2eq per 1000
     # generated tokens). None = unlimited.
     carbon_budget_g_per_ktok: Optional[float] = None
+    # paged KV pool: slots share num_pages pages of page_size tokens per
+    # cache leaf instead of owning max_len contiguous rows each — the same
+    # pool memory serves more concurrent requests (embodied carbon per
+    # request drops with provisioned-but-idle HBM). num_pages None =
+    # equal-memory default, max_batch * max_len / page_size.
+    paged: bool = False
+    page_size: int = 16
+    num_pages: Optional[int] = None
 
 
 class ServingEngine:
@@ -94,22 +127,31 @@ class ServingEngine:
         self._steps = 0
         self.decode_chunks = 0                       # device->host syncs
         self.prefill_batches = 0
+        self.peak_active = 0                         # max concurrent requests
 
-        vocab = model.cfg.vocab
-        temp = cfg.temperature
-
-        def _prefill(params, tokens, mask, key):
-            last, pcache = model.prefill(params, tokens,
-                                         extras={"mask": mask},
-                                         max_len=cfg.max_len)
-            first = sampling.sample(last[:, :vocab], key, temp)
-            return first, pcache
-
-        self._jit_prefill = jax.jit(_prefill)
-        self._jit_insert = jax.jit(sampling.insert_prefill)
-        self._jit_steps = jax.jit(
-            functools.partial(sampling.fused_decode_steps, model),
-            static_argnames=("n_steps", "temperature"))
+        self.paged = cfg.paged
+        if cfg.paged:
+            if not model.supports_paged_decode:
+                raise ValueError(
+                    f"{model.cfg.name}: paged KV pool requires full-window "
+                    "attention-family blocks (no ring eviction)")
+            if cfg.max_len % cfg.page_size:
+                raise ValueError("max_len must be a multiple of page_size")
+            self.max_pages_slot = cfg.max_len // cfg.page_size
+            # equal-memory default: the rows the contiguous pool would own
+            self.num_pages = (B * self.max_pages_slot
+                              if cfg.num_pages is None else cfg.num_pages)
+            if self.num_pages < 1:
+                raise ValueError("num_pages must be >= 1")
+            self.caches = paged.paginate_cache(
+                self.caches, B, cfg.page_size, self.num_pages)
+            # host mirror of worst-case page RESERVATIONS (>= device usage,
+            # so admission by reservation means the on-device free stack
+            # can never underflow mid-flight)
+            self.free_pages = self.num_pages
+            self.peak_pages_reserved = 0
+            self._slot_pages = [0] * B
+            self._resv: Dict[int, int] = {}
 
     # ------------------------------------------------------------- metering
     def _meter_prefill(self, batch: int, seq: int):
@@ -150,17 +192,67 @@ class ServingEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _reject(self, req: Request) -> None:
+        """Fail a request that can never fit the pool (prompt alone exceeds
+        total capacity) without admitting it."""
+        resp = self.responses[req.rid]
+        resp.finished = True
+        resp.rejected = True
+
+    def _release_slots(self, slots: List[int]) -> None:
+        """Return finished slots' pages to the pool: device free stack
+        (actual mapped pages) + host reservation mirror."""
+        if not self.paged or not slots:
+            return
+        mask = np.zeros((self.cfg.max_batch,), bool)
+        mask[slots] = True
+        self.caches = dict(self.caches)
+        self.caches["paged"] = _RELEASE(self.caches["paged"],
+                                        jnp.asarray(mask))
+        for s in slots:
+            self.free_pages += self._slot_pages[s]
+            self._slot_pages[s] = 0
+
     # ------------------------------------------------------------ admission
-    def _admit(self) -> None:
-        """Batch-prefill waiting requests into free slots (phase 1)."""
+    def _admit(self) -> int:
+        """Batch-prefill waiting requests into free slots (phase 1).
+
+        Paged mode admits FCFS by worst-case page reservation (prompt +
+        full decode budget, so alloc-on-write can never underflow the
+        device stack): a request that doesn't fit the REMAINING pool keeps
+        waiting; one whose prompt alone can never fit the TOTAL pool is
+        rejected outright instead of admitted-and-failed mid-prefill.
+        Returns the number of requests admitted."""
         if self._over_budget() and self.active > 0:
-            return                     # defer admissions; drain active work
+            return 0                   # defer admissions; drain active work
         free = self.free_slots()
         take: List[Request] = []
         while len(take) < len(free) and self.queue:
+            req = self.queue[0]
+            if self.paged:
+                L = len(req.prompt)
+                ps = self.cfg.page_size
+                resv = paged.pages_needed(
+                    L + max(req.max_new_tokens - 1, 0), ps)
+                # pages have no ring eviction: a request whose prompt +
+                # decode budget exceeds the block table (max_len) or the
+                # whole pool can NEVER be represented — reject it instead
+                # of admitting into silent context loss (the contiguous
+                # engine ring-wraps such requests; paged must refuse them)
+                if resv > self.max_pages_slot or resv > self.num_pages:
+                    self.queue.popleft()
+                    self._reject(req)
+                    continue
+                if resv > self.free_pages:
+                    break              # keep waiting (FCFS, no overtaking)
+                self.free_pages -= resv
+                self._resv[req.rid] = resv
             take.append(self.queue.popleft())
+        if self.paged:
+            self.peak_pages_reserved = max(self.peak_pages_reserved,
+                                           self.num_pages - self.free_pages)
         if not take:
-            return
+            return 0
         # bucket prompts: padded power-of-two buckets when the model masks
         # pad tokens exactly; exact-length groups otherwise (rwkv/enc-dec).
         # Buckets are clamped to max_len — past that the cache ring must
@@ -180,6 +272,7 @@ class ServingEngine:
         for bucket, reqs in groups.items():
             slots = [next(slot_iter) for _ in reqs]
             self._prefill_group(bucket, reqs, slots)
+        return len(take)
 
     def _prefill_group(self, bucket: int, reqs: List[Request],
                        slots: List[int]) -> None:
@@ -197,33 +290,45 @@ class ServingEngine:
         # run degenerate zero-length sequences through the model
         tokens[n:] = tokens[0]
         mask[n:] = mask[0]
-        first, pcache = self._jit_prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(mask),
-            self._next_key())
+        first, pcache = _PREFILL(
+            self.model, self.params, jnp.asarray(tokens), jnp.asarray(mask),
+            self._next_key(), max_len=self.cfg.max_len,
+            vocab=self.model.cfg.vocab, temperature=self.cfg.temperature)
         budgets = jnp.asarray([r.max_new_tokens - 1 for r in reqs], jnp.int32)
         eos_ids = jnp.asarray([-1 if r.eos_id is None else r.eos_id
                                for r in reqs], jnp.int32)
         slots_a = jnp.asarray(slots, jnp.int32)
-        self.caches, self.cur_tokens, self.state = self._jit_insert(
-            self.caches, pcache, slots_a, self.cur_tokens, first,
-            self.state, budgets, eos_ids)
+        if self.paged:
+            self.caches, self.cur_tokens, self.state = _INSERT_PAGED(
+                self.caches, pcache, slots_a, self.cur_tokens, first,
+                self.state, budgets, eos_ids,
+                page_size=self.cfg.page_size)
+        else:
+            self.caches, self.cur_tokens, self.state = _INSERT(
+                self.caches, pcache, slots_a, self.cur_tokens, first,
+                self.state, budgets, eos_ids)
         first_h = np.asarray(jax.device_get(first))
         self.prefill_batches += 1
         # meter + bookkeeping per request (true lengths, seed attribution)
+        released: List[int] = []
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             rep = self._meter_prefill(1, len(req.prompt))
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
             resp.energy_j += rep.energy_j
             resp.tokens.append(int(first_h[i]))
+            if self.paged:
+                self._slot_pages[slot] = self._resv.pop(req.rid)
             if req.max_new_tokens <= 1:
                 resp.finished = True   # prefill token was the whole budget
+                released.append(slot)  # return its prompt pages right away
                 continue               # slot stays free (device side agrees)
             self.slot_rid[slot] = req.rid
             self.slot_budget[slot] = req.max_new_tokens - 1
             self.slot_eos[slot] = req.eos_id
             self._slot_ctx[slot] = float(len(req.prompt))
             self._slo[slot] = req.slo_s
+        self._release_slots(released)
 
     # --------------------------------------------------------------- decode
     def _decode_chunk(self, max_steps: int) -> None:
@@ -234,11 +339,15 @@ class ServingEngine:
         n = min(self.cfg.sync_every, max(max(budgets), 1),
                 max(max_steps - self._steps, 1))
         (self.caches, self.cur_tokens, self.state, tok_mat,
-         emit_mat) = self._jit_steps(
-            self.params, self.caches, self.cur_tokens, self.state,
-            self._next_key(), n_steps=n, temperature=self.cfg.temperature)
+         emit_mat) = _FUSED_STEPS(
+            self.model, self.params, self.caches, self.cur_tokens,
+            self.state, self._next_key(), n_steps=n,
+            temperature=self.cfg.temperature,
+            page_size=self.cfg.page_size if self.paged else 0)
         tok_h, emit_h = jax.device_get((tok_mat, emit_mat))
         self.decode_chunks += 1
+        self.peak_active = max(self.peak_active, self.active)
+        released: List[int] = []
         for i in range(n):
             act = emit_h[i]
             n_active = int(act.sum())
@@ -265,14 +374,28 @@ class ServingEngine:
                     resp.finished = True
                     self.slot_rid[slot] = -1
                     self._slo[slot] = None
+                    released.append(int(slot))
             self._steps += 1
+        # page reclamation at the chunk boundary (finished slots coasted on
+        # the trash page since their done flag rose mid-chunk)
+        self._release_slots(released)
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and all slots finish."""
         while (self.queue or self.active) and self._steps < max_steps:
-            self._admit()
+            admitted = self._admit()
             if self.active:
                 self._decode_chunk(max_steps)
+            elif not admitted and self.queue:
+                if not self.paged or self.free_pages == self.num_pages:
+                    # nothing running and admission had the ENTIRE pool
+                    # available yet still refused the head request: it can
+                    # never fit — fail it rather than spin
+                    self._reject(self.queue.popleft())
+                else:
+                    raise RuntimeError(   # unreachable: release returns
+                        "admission stalled with no active work — leaked "
+                        "page reservation")
         return list(self.responses.values())
 
     # -------------------------------------------------------------- reports
@@ -301,8 +424,22 @@ class ServingEngine:
             if slo is not None:
                 slo_n += 1
                 slo_ok += (r.prefill_s + r.decode_s) <= slo
-        return {
+        out: Dict[str, float] = {}
+        if self.paged:
+            out.update({
+                "paged": 1.0,
+                "page_size": self.cfg.page_size,
+                "pages_total": self.num_pages,
+                "peak_pages_reserved": self.peak_pages_reserved,
+                "free_pages": self.free_pages,
+                # provisioned KV rows actually backing peak load — feeds
+                # the embodied-carbon memory model (ROADMAP: paged pool)
+                "peak_kv_rows_reserved":
+                    self.peak_pages_reserved * self.cfg.page_size,
+            })
+        out.update({
             "requests": len(self.responses),
+            "peak_active": self.peak_active,
             "p50_latency_s": p50,
             "p99_latency_s": p99,
             "slo_attainment": (slo_ok / slo_n) if slo_n else 1.0,
@@ -319,4 +456,5 @@ class ServingEngine:
             "total_energy_j": t.energy_j,
             "total_carbon_g": t.total_g,
             "embodied_fraction": (t.embodied_g / t.total_g) if t.total_g else 0.0,
-        }
+        })
+        return out

@@ -1,0 +1,252 @@
+"""Paged KV cache pool: shared page pool + per-slot block tables + an
+on-device free-page-stack allocator.
+
+The contiguous slot pool allocates ``max_len`` KV rows per slot per layer
+whether or not a request ever uses them; provisioned-but-idle HBM is pure
+embodied carbon (paper Eq. 2-4 — the footprint scales with installed
+memory, not with traffic). Paging shares one physical pool of
+``num_pages`` fixed-size pages across all slots, so the same GB serves
+however many concurrent requests actually fit — GreenLLM / EcoServe both
+assume this paged-attention-class baseline under their carbon policies.
+
+Layout (per attention-cache leaf; head-major so appends/gathers are flat
+single-row advanced indexing, and one (page, head) pair is one kernel
+block)::
+
+    k_pages / v_pages : (Hkv, num_pages + 1, page_size, hd)
+    pos_ids           : (B, W) int32  — LOGICAL positions, -1 = empty
+    length            : (B,)  int32
+
+plus ONE shared allocator at ``caches["paged"]`` (every layer of a slot
+has identical occupancy, so one block table serves all layers)::
+
+    tbl  : (B, max_pages) int32 physical page per logical page, -1 = none
+    free : (num_pages,)   int32 stack; free[:top] are free page ids
+    top  : ()             int32 free-page count
+
+Page ``num_pages`` (the last row of the pools) is a TRASH page: writes
+whose slot has no page mapped (finished slots coasting inside a fused
+chunk, logical rows past the pool) land there, and gathers of unmapped
+logical pages read from there — always masked because the *logical*
+``pos_ids`` row is -1. Keeping positions logical (they cost W ints per
+slot, not W*Hkv*hd) means a recycled physical page needs no scrubbing.
+
+Allocator invariants (property-tested in tests/test_page_allocator.py):
+  * a physical page is mapped by at most one live slot (no aliasing);
+  * top + #mapped == num_pages at every step (conservation);
+  * released pages are immediately reusable (LIFO pop).
+
+Alloc-on-write: ``alloc_decode_pages`` runs inside the fused decode scan
+and pops a page only for ACTIVE slots crossing a page boundary
+(``t % page_size == 0``); ``alloc_prefill_pages`` bulk-pops
+ceil(len/page_size) pages per admitted request at insertion. The engine
+admits by worst-case reservation (prompt + full decode budget), so the
+device-side stack can never underflow mid-flight.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# layout ops live with the rest of the KV-cache code; re-exported here so
+# serving code has one import surface for everything paged
+from repro.models.attention import gather_pages, paged_decode_write  # noqa: F401
+
+# keys identifying a pageable attention-KV leaf group inside a cache tree
+_KV_KEYS = {"k", "v", "pos_ids", "length"}
+_PAGED_KV_KEYS = {"k_pages", "v_pages", "pos_ids", "length"}
+
+
+# --------------------------------------------------------------- allocator
+
+
+def init_allocator(max_batch: int, max_pages_per_slot: int,
+                   num_pages: int) -> Dict[str, jax.Array]:
+    return {
+        "tbl": jnp.full((max_batch, max_pages_per_slot), -1, jnp.int32),
+        "free": jnp.arange(num_pages, dtype=jnp.int32),
+        "top": jnp.asarray(num_pages, jnp.int32),
+    }
+
+
+def alloc_decode_pages(alloc: Dict, lengths: jax.Array, active: jax.Array,
+                       page_size: int) -> Dict:
+    """Pop one page for every ACTIVE slot whose next token starts a new
+    logical page. lengths: (B,) tokens already cached; active: (B,) bool."""
+    tbl, free, top = alloc["tbl"], alloc["free"], alloc["top"]
+    B, M = tbl.shape
+    P = free.shape[0]
+    lp = lengths // page_size
+    need = active & (lengths % page_size == 0) & (lp < M)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1       # pop order (LIFO)
+    take = top - 1 - rank
+    pages = free[jnp.clip(take, 0, P - 1)]
+    ok = need & (take >= 0)                             # guard underflow
+    bidx = jnp.arange(B)
+    lp_c = jnp.clip(lp, 0, M - 1)
+    tbl = tbl.at[bidx, lp_c].set(
+        jnp.where(ok, pages, tbl[bidx, lp_c]))
+    return {"tbl": tbl, "free": free,
+            "top": top - ok.astype(jnp.int32).sum()}
+
+
+def alloc_prefill_pages(alloc: Dict, slots: jax.Array,
+                        n_pages: jax.Array) -> Dict:
+    """Bulk-pop ``n_pages[i]`` pages for slot ``slots[i]`` and rewrite the
+    slot's whole block-table row (stale entries from the previous tenant
+    become -1). slots/n_pages: (n,) int32."""
+    tbl, free, top = alloc["tbl"], alloc["free"], alloc["top"]
+    M = tbl.shape[1]
+    P = free.shape[0]
+    need = jnp.arange(M)[None, :] < n_pages[:, None]    # (n, M)
+    rank = jnp.cumsum(need.reshape(-1).astype(jnp.int32)) - 1
+    take = (top - 1 - rank).reshape(need.shape)
+    pages = free[jnp.clip(take, 0, P - 1)]
+    ok = need & (take >= 0)
+    tbl = tbl.at[slots].set(jnp.where(ok, pages, -1))
+    return {"tbl": tbl, "free": free,
+            "top": top - ok.astype(jnp.int32).sum()}
+
+
+def release_slots(alloc: Dict, released: jax.Array) -> Dict:
+    """Push every page mapped by the ``released`` (B,) bool slots back onto
+    the free stack and clear their block-table rows."""
+    tbl, free, top = alloc["tbl"], alloc["free"], alloc["top"]
+    P = free.shape[0]
+    rel = (released[:, None] & (tbl >= 0)).reshape(-1)
+    rank = jnp.cumsum(rel.astype(jnp.int32)) - 1
+    dest = jnp.where(rel, top + rank, P)                # P = out of bounds
+    free = free.at[dest].set(tbl.reshape(-1), mode="drop")
+    tbl = jnp.where(released[:, None], -1, tbl)
+    return {"tbl": tbl, "free": free,
+            "top": top + rel.astype(jnp.int32).sum()}
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-max(n_tokens, 0) // page_size)
+
+
+# ----------------------------------------------------------- cache layout
+
+
+def _is_kv_leafgroup(d) -> bool:
+    return isinstance(d, dict) and _KV_KEYS <= set(d) and d["k"].ndim >= 4
+
+
+def _paginate_leafgroup(d: Dict, page_size: int, num_pages: int) -> Dict:
+    k = d["k"]                       # ([R,] B, W, Hkv, hd)
+    W, H, hd = k.shape[-3], k.shape[-2], k.shape[-1]
+    assert W % page_size == 0, "cache width must be a page multiple"
+    lead = k.shape[:-4]              # () or (repeats,)
+    hd_v = d["v"].shape[-1]
+    return {
+        "k_pages": jnp.zeros(lead + (H, num_pages + 1, page_size, hd),
+                             k.dtype),
+        "v_pages": jnp.zeros(lead + (H, num_pages + 1, page_size, hd_v),
+                             d["v"].dtype),
+        "pos_ids": d["pos_ids"],     # stays LOGICAL: ([R,] B, W)
+        "length": d["length"],
+    }
+
+
+def _walk(node, fn):
+    """Map ``fn`` over kv leaf-groups of a cache tree, preserving layout."""
+    if _is_kv_leafgroup(node):
+        return fn(node)
+    if isinstance(node, dict):
+        return {k: _walk(v, fn) for k, v in node.items()}
+    if isinstance(node, (tuple, list)):
+        return type(node)(_walk(v, fn) for v in node)
+    return node
+
+
+def paginate_cache(cache: Dict, max_batch: int, page_size: int,
+                   num_pages: int) -> Dict:
+    """Convert a contiguous slot-pool cache (model.init_cache) into the
+    paged layout and attach the shared allocator at cache['paged']."""
+    widths = []
+    _walk(cache, lambda d: (widths.append(d["k"].shape[-3]), d)[1])
+    assert widths, "model has no attention KV caches to page"
+    assert len(set(widths)) == 1, "paged pool needs uniform cache width"
+    W = widths[0]
+    paged = _walk(cache, lambda d: _paginate_leafgroup(d, page_size,
+                                                       num_pages))
+    paged["paged"] = init_allocator(max_batch, W // page_size, num_pages)
+    return paged
+
+
+# --------------------------------------------------------------- insertion
+
+
+def insert_prefill_paged(pool, src, slots: jax.Array, cur_tokens: jax.Array,
+                         first_tokens: jax.Array, state: Dict,
+                         budgets: jax.Array, eos_ids: jax.Array,
+                         page_size: int) -> Tuple:
+    """Paged counterpart of ``sampling.insert_prefill``: bulk-allocate
+    ceil(len/page_size) pages per admitted request, then scatter the
+    contiguous prefill cache rows into the pages — one scatter per leaf
+    for the whole admission batch, exactly like the contiguous path.
+
+    pool: paged cache tree (with pool['paged']); src: contiguous prefill
+    cache tree (batch >= n, leaves (n_pad, W, ...)); slots/budgets/eos_ids:
+    (n,). Logical rows whose page is unmapped (past the request's length)
+    scatter into the trash page.
+    """
+    n = slots.shape[0]
+    true_len = src["t"][:n]
+    n_pages = -(-true_len // page_size)
+    alloc = alloc_prefill_pages(pool["paged"], slots, n_pages)
+
+    # physical page per (request, logical page), shared by all layers;
+    # logical pages past the request's allocation point at the trash page
+    row_tbl = alloc["tbl"][slots]                        # (n, M)
+    M = row_tbl.shape[1]
+
+    def scatter_rows(pages, src, stacked):
+        # page-granular scatter: pages ([R,] H, P+1, ps, hd)
+        #                        <- src ([R,] n_pad, W, H, hd)
+        trash = pages.shape[-3] - 1
+        pg = jnp.where(row_tbl < 0, trash, row_tbl)      # (n, M)
+        ps, hd = page_size, pages.shape[-1]
+        if stacked:
+            sv = jnp.moveaxis(src[:, :n], 3, 1)          # (R, H, n, W, hd)
+            sv = sv.reshape(sv.shape[0], sv.shape[1], n, M, ps, hd)
+            return pages.at[:, :, pg].set(sv.astype(pages.dtype))
+        sv = jnp.moveaxis(src[:n], 2, 0)                 # (H, n, W, hd)
+        sv = sv.reshape(sv.shape[0], n, M, ps, hd)
+        return pages.at[:, pg].set(sv.astype(pages.dtype))
+
+    def leafgroup(d: Dict, s: Dict, stacked: bool) -> Dict:
+        if stacked:
+            pos = d["pos_ids"].at[:, slots].set(s["pos_ids"][:, :n])
+            ln = d["length"].at[:, slots].set(s["length"][:, :n])
+        else:
+            pos = d["pos_ids"].at[slots].set(s["pos_ids"][:n])
+            ln = d["length"].at[slots].set(s["length"][:n])
+        return {"k_pages": scatter_rows(d["k_pages"], s["k"], stacked),
+                "v_pages": scatter_rows(d["v_pages"], s["v"], stacked),
+                "pos_ids": pos, "length": ln}
+
+    def walk(p, s, stacked):
+        if p is None:
+            return None
+        if isinstance(p, dict) and _PAGED_KV_KEYS <= set(p):
+            return leafgroup(p, s, stacked)
+        if isinstance(p, dict):
+            return {k: (walk(v, s[k], stacked or k == "unit")
+                        if k != "paged" else alloc)
+                    for k, v in p.items()}
+        if isinstance(p, (tuple, list)):
+            return type(p)(walk(pv, sv, stacked) for pv, sv in zip(p, s))
+        # plain leaf (e.g. the position counter "t"): slot scatter
+        if stacked:
+            return p.at[:, slots].set(s[:, :n].astype(p.dtype))
+        return p.at[slots].set(s[:n].astype(p.dtype))
+
+    pool = walk(pool, src, False)
+    from repro.serving import sampling
+    cur_tokens, state = sampling.arm_slots(cur_tokens, state, slots,
+                                           first_tokens, budgets, eos_ids)
+    return pool, cur_tokens, state

@@ -24,6 +24,7 @@ class Response:
     energy_j: float = 0.0
     carbon_g: float = 0.0
     finished: bool = False
+    rejected: bool = False             # could never fit the KV pool
 
     @property
     def n_tokens(self) -> int:

@@ -54,7 +54,8 @@ def sample(logits: jax.Array, key: jax.Array,
 
 def fused_decode_steps(model, params, caches, cur_tokens: jax.Array,
                        state: Dict[str, jax.Array], key: jax.Array,
-                       n_steps: int, temperature: float
+                       n_steps: int, temperature: float,
+                       page_size: int = 0
                        ) -> Tuple:
     """Run ``n_steps`` fused engine micro-steps fully on device.
 
@@ -64,12 +65,23 @@ def fused_decode_steps(model, params, caches, cur_tokens: jax.Array,
     whether the slot was active (i.e. the token is a real emission).
     Finished/free slots keep re-feeding their last token; their logits are
     computed but never read (same batch-shape invariance as the seed).
+
+    page_size > 0 marks a paged KV pool (``caches["paged"]`` holds the
+    shared allocator): before each micro-step, alloc-on-write pops a free
+    page for every ACTIVE slot whose next token starts a new logical page —
+    inactive slots never allocate, so finished slots coasting to the chunk
+    boundary write to the trash page instead of draining the pool.
     """
     vocab = model.cfg.vocab
     keys = jax.random.split(key, n_steps)
 
     def body(carry, k_i):
         caches, toks, active, budget = carry
+        if page_size:
+            from repro.serving import paged as _paged
+            caches = dict(caches)
+            caches["paged"] = _paged.alloc_decode_pages(
+                caches["paged"], caches["t"], active, page_size)
         logits, caches = model.decode_step(params, caches, toks)
         nxt = sample(logits[:, :vocab], k_i, temperature)
         nxt = jnp.where(active, nxt, toks[:, 0])
@@ -111,13 +123,26 @@ def insert_prefill(pool, src, slots: jax.Array, cur_tokens: jax.Array,
         return d.at[:, slots].set(s.astype(d.dtype))
 
     pool = jax.tree_util.tree_map_with_path(leaf, pool, src)
+    cur_tokens, state = arm_slots(cur_tokens, state, slots, first_tokens,
+                                  budgets, eos_ids)
+    return pool, cur_tokens, state
+
+
+def arm_slots(cur_tokens: jax.Array, state: Dict[str, jax.Array],
+              slots: jax.Array, first_tokens: jax.Array,
+              budgets: jax.Array, eos_ids: jax.Array) -> Tuple:
+    """Set the admitted slots' first decode tokens and arm their device
+    state (shared by the contiguous and paged insertion paths — the
+    termination semantics MUST stay identical for token-for-token parity).
+    A zero budget arms the slot inactive."""
+    n = slots.shape[0]
     cur_tokens = cur_tokens.at[slots, 0].set(first_tokens[:n])
     state = {
         "active": state["active"].at[slots].set(budgets > 0),
         "budget": state["budget"].at[slots].set(budgets),
         "eos": state["eos"].at[slots].set(eos_ids),
     }
-    return pool, cur_tokens, state
+    return cur_tokens, state
 
 
 def prefill_bucket(length: int, min_bucket: int = 8) -> int:

@@ -1,0 +1,134 @@
+"""Property-based tests of the on-device page allocator.
+
+Random interleavings of bulk prefill allocation, alloc-on-write decode
+steps, and slot release must preserve the allocator invariants the paged
+engine's correctness rests on: no page is ever mapped by two live slots,
+pages are conserved (free + mapped == pool), and released pages come back
+reusable. The allocator runs jitted exactly as in the engine.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (not in container)")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import paged
+
+B, M, PS = 4, 4, 4                     # slots, max pages/slot, page size
+P = 10                                 # pool pages (tight: forces pressure)
+
+_alloc_prefill = jax.jit(paged.alloc_prefill_pages)
+_alloc_decode = jax.jit(paged.alloc_decode_pages,
+                        static_argnames=("page_size",))
+_release = jax.jit(paged.release_slots)
+
+
+def check_invariants(alloc, live_len):
+    a = jax.device_get(alloc)
+    tbl, free, top = np.asarray(a["tbl"]), np.asarray(a["free"]), int(a["top"])
+    mapped = []
+    for b in range(B):
+        pages = tbl[b][tbl[b] >= 0].tolist()
+        n_expect = -(-live_len[b] // PS) if live_len[b] else 0
+        assert len(pages) == n_expect, "mapped pages != ceil(len/page_size)"
+        # contiguity: logical pages fill from 0 with no holes
+        assert (tbl[b, :len(pages)] >= 0).all()
+        assert (tbl[b, len(pages):] == -1).all()
+        mapped += pages
+    # no aliasing: every mapped page belongs to exactly one live slot
+    assert len(mapped) == len(set(mapped))
+    stack = free[:top].tolist()
+    # conservation: free stack + mapped = the whole pool, disjointly
+    assert len(stack) == len(set(stack))
+    assert not (set(stack) & set(mapped))
+    assert sorted(stack + mapped) == list(range(P))
+
+
+# op encoding: (kind, slot, amount)
+#   kind 0 = prefill-alloc `amount`+1 tokens into slot (if free)
+#   kind 1 = decode-step every live slot whose id is in the `amount` mask
+#   kind 2 = release slot (if live)
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, B - 1),
+              st.integers(0, M * PS - 1)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops_strategy)
+def test_random_interleavings_never_alias_and_conserve(ops):
+    alloc = paged.init_allocator(B, M, P)
+    live_len = [0] * B                  # 0 = slot free
+    for kind, slot, amount in ops:
+        if kind == 0 and live_len[slot] == 0:
+            n_tok = amount + 1
+            n_pages = -(-n_tok // PS)
+            # engine admission: only admit when the reservation fits
+            if n_pages <= int(jax.device_get(alloc["top"])):
+                alloc = _alloc_prefill(alloc, jnp.asarray([slot], jnp.int32),
+                                       jnp.asarray([n_pages], jnp.int32))
+                live_len[slot] = n_tok
+        elif kind == 1:
+            active = np.array([live_len[b] > 0 and (amount >> b) & 1
+                               for b in range(B)])
+            # never grow past the block table, mirroring the engine's
+            # worst-case reservation guarantee
+            grows = [b for b in range(B) if active[b]
+                     and live_len[b] % PS == 0]
+            need = len(grows)
+            for b in list(grows):
+                if live_len[b] >= M * PS:
+                    active[b] = False
+                    need -= 1
+            if need > int(jax.device_get(alloc["top"])):
+                continue               # engine reservation forbids this
+            lengths = jnp.asarray(live_len, jnp.int32)
+            alloc = _alloc_decode(alloc, lengths, jnp.asarray(active),
+                                  page_size=PS)
+            for b in range(B):
+                if active[b]:
+                    live_len[b] += 1
+        elif kind == 2 and live_len[slot] > 0:
+            mask = np.zeros((B,), bool)
+            mask[slot] = True
+            alloc = _release(alloc, jnp.asarray(mask))
+            live_len[slot] = 0
+        check_invariants(alloc, live_len)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, M * PS), min_size=1, max_size=12))
+def test_released_pages_are_reusable(lengths):
+    """Serial fill/release cycles on one slot: the pool never shrinks, and
+    a full-pool allocation succeeds again after every release."""
+    alloc = paged.init_allocator(B, M, P)
+    for n_tok in lengths:
+        n_pages = -(-n_tok // PS)
+        if n_pages > P:
+            continue
+        alloc = _alloc_prefill(alloc, jnp.asarray([0], jnp.int32),
+                               jnp.asarray([n_pages], jnp.int32))
+        check_invariants(alloc, [n_tok, 0, 0, 0])
+        alloc = _release(alloc, jnp.asarray([True, False, False, False]))
+        check_invariants(alloc, [0, 0, 0, 0])
+        assert int(jax.device_get(alloc["top"])) == P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, P))
+def test_free_stack_is_lifo(n_pages):
+    """Released pages are handed out again first (cache-friendly reuse)."""
+    alloc = paged.init_allocator(B, M, P)
+    n = min(n_pages, M)
+    alloc = _alloc_prefill(alloc, jnp.asarray([0], jnp.int32),
+                           jnp.asarray([n], jnp.int32))
+    got = set(np.asarray(jax.device_get(alloc["tbl"]))[0, :n].tolist())
+    alloc = _release(alloc, jnp.asarray([True, False, False, False]))
+    alloc = _alloc_prefill(alloc, jnp.asarray([1], jnp.int32),
+                           jnp.asarray([n], jnp.int32))
+    again = set(np.asarray(jax.device_get(alloc["tbl"]))[1, :n].tolist())
+    assert got == again
