@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test kernels paged verify bench-engine bench
+.PHONY: test kernels paged chunked check-clean verify bench-engine bench
 
 test:               ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -13,7 +13,17 @@ paged:              ## interpret-mode paged-kernel sweep + engine parity + alloc
 	$(PY) -m pytest -q tests/test_paged_kernel.py tests/test_paged_parity.py \
 	    tests/test_page_allocator.py tests/test_engine_admission.py
 
-verify: test kernels paged ## tier-1 plus interpret-mode kernel + paged sweeps
+chunked:            ## interpret-mode chunked-prefill kernel sweep + quantum-scheduler parity
+	$(PY) -m pytest -q tests/test_chunked_prefill_kernel.py \
+	    tests/test_chunked_parity.py
+
+check-clean:        ## fail if compiled artifacts are tracked by git
+	@bad=$$(git ls-files | grep -E '(\.pyc$$|__pycache__/)' || true); \
+	if [ -n "$$bad" ]; then \
+	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
+	fi
+
+verify: check-clean test kernels paged chunked ## tier-1 plus interpret-mode kernel + paged + chunked sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py

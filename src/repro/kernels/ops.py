@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import chunked_prefill as _cp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
@@ -82,6 +83,32 @@ def paged_decode_attention(q, k_pages, v_pages, block_tbl, q_pos, k_pos,
                                        q_pos, k_pos, window, chunk,
                                        interpret=(impl == "pallas_interpret"),
                                        **kw)
+
+
+chunked_prefill_grid_spec = _cp.chunked_prefill_grid_spec
+
+
+def chunked_prefill_attention(q, k_pages, v_pages, block_tbl, q_pos, k_pos,
+                              window=None, chunk=None,
+                              impl: Optional[str] = None, **kw):
+    """Chunked-prefill attention over a paged KV pool.
+
+    q: (B, Hq, S, hd) — one fixed-size prompt chunk of S queries per slot;
+    k_pages/v_pages: (Hkv, num_pages+1, page_size, *) shared pool with the
+    chunk's own keys already written; block_tbl: (B, max_pages); q_pos:
+    (B, S) (-1 = pad); k_pos: (B, max_pages*page_size) LOGICAL positions.
+    The Pallas path runs the paged decode kernel's (B, Hkv, max_pages) GQA
+    grid with the whole query chunk resident per program — each page is
+    still read from HBM once per (batch, kv head) regardless of S.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.chunked_prefill_attention(q, k_pages, v_pages, block_tbl,
+                                              q_pos, k_pos, window, chunk)
+    return _cp.chunked_prefill_attention(q, k_pages, v_pages, block_tbl,
+                                         q_pos, k_pos, window, chunk,
+                                         interpret=(impl == "pallas_interpret"),
+                                         **kw)
 
 
 def mla_decode_attention(q_lat, q_rope, ckv, k_rope, q_pos, k_pos,

@@ -48,24 +48,44 @@ def decode_attention(q, k, v, q_pos, k_pos, window: Optional[int] = None,
     return out[:, :, 0, :]
 
 
+def _logical_view(pages, block_tbl):
+    """(Hkv,P+1,ps,hd) pool -> (B,Hkv,M*ps,hd) per-slot logical cache view
+    through the block table; unmapped pages read the trash page (row P)
+    and are masked by their -1 logical positions. Shared by every paged
+    oracle so the trash-page convention lives in one place."""
+    P1 = pages.shape[1]
+    safe = jnp.where(block_tbl < 0, P1 - 1, block_tbl)
+    g = pages[:, safe]                                 # (Hkv, B, M, ps, hd)
+    H, B, M, ps, hd = g.shape
+    return jnp.moveaxis(g, 0, 1).reshape(B, H, M * ps, hd)
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_tbl, q_pos, k_pos,
                            window: Optional[int] = None,
                            chunk: Optional[int] = None):
     """q: (B,Hq,hd); k_pages/v_pages: (Hkv,P+1,ps,*); block_tbl: (B,M);
     q_pos: (B,); k_pos: (B,M*ps) logical. Gather the logical view through
-    the block table, then score exactly like the contiguous oracle —
-    unmapped pages read the trash page (row P) and are masked by their -1
-    logical positions."""
-    P1 = k_pages.shape[1]
-    safe = jnp.where(block_tbl < 0, P1 - 1, block_tbl)
-
-    def logical(pages):
-        g = pages[:, safe]                             # (Hkv, B, M, ps, hd)
-        H, B, M, ps, hd = g.shape
-        return jnp.moveaxis(g, 0, 1).reshape(B, H, M * ps, hd)
-
-    return decode_attention(q, logical(k_pages), logical(v_pages),
+    the block table, then score exactly like the contiguous oracle."""
+    return decode_attention(q, _logical_view(k_pages, block_tbl),
+                            _logical_view(v_pages, block_tbl),
                             q_pos, k_pos, window, chunk)
+
+
+def chunked_prefill_attention(q, k_pages, v_pages, block_tbl, q_pos, k_pos,
+                              window: Optional[int] = None,
+                              chunk: Optional[int] = None):
+    """Chunked-prefill attention: a chunk of S queries per slot scores the
+    slot's ENTIRE logical KV history — chunks 0..i-1 already resident in the
+    paged pool plus chunk i's own keys (written before the call).
+
+    q: (B,Hq,S,hd); k_pages/v_pages: (Hkv,P+1,ps,*); block_tbl: (B,M);
+    q_pos: (B,S) (-1 = pad query); k_pos: (B,M*ps) logical. Gather the
+    logical view through the block table, then score exactly like the
+    contiguous flash oracle — causality inside the chunk falls out of the
+    kpos <= qpos mask."""
+    return flash_attention(q, _logical_view(k_pages, block_tbl),
+                           _logical_view(v_pages, block_tbl),
+                           q_pos, k_pos, window, chunk)
 
 
 def wkv6(r, k, v, w, u, s0):

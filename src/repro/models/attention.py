@@ -350,6 +350,39 @@ def paged_decode_write(cache: Dict, tbl: jax.Array, k1: jax.Array,
     }
 
 
+def paged_chunk_write(cache: Dict, tbl: jax.Array, k: jax.Array,
+                      v: jax.Array, positions: jax.Array) -> Dict:
+    """Append one prompt chunk per slot through the block table.
+
+    k/v: (B, S, Hkv, hd); positions: (B, S) LOGICAL (-1 = pad). The pages
+    covering the chunk must already be mapped (``alloc_chunk_pages``). Pad
+    tokens and rows past the table land in the trash page, and ``pos_ids``
+    is only written at valid positions, so pads never unmask — the same
+    invariant as the single-token decode write, extended to S tokens.
+    """
+    t = positions
+    kf, ps, trash = _flat_rows(cache["k_pages"])
+    vf, _, _ = _flat_rows(cache["v_pages"])
+    B, S = t.shape
+    M = tbl.shape[1]
+    W = cache["pos_ids"].shape[1]
+    bidx = jnp.arange(B)[:, None]
+    valid = t >= 0
+    lp = jnp.where(valid, t // ps, M)                # pads -> out of range
+    pg = tbl[bidx, jnp.clip(lp, 0, M - 1)]
+    pg = jnp.where(valid & (lp < M) & (pg >= 0), pg, trash)
+    rows = pg * ps + jnp.where(valid, t % ps, 0)     # (B, S) physical rows
+    kf = kf.at[:, rows].set(jnp.moveaxis(k, 2, 0).astype(kf.dtype))
+    vf = vf.at[:, rows].set(jnp.moveaxis(v, 2, 0).astype(vf.dtype))
+    col = jnp.where(valid, jnp.clip(t, 0, W - 1), W)  # W = dropped
+    return {
+        "k_pages": kf.reshape(cache["k_pages"].shape),
+        "v_pages": vf.reshape(cache["v_pages"].shape),
+        "pos_ids": cache["pos_ids"].at[bidx, col].set(t, mode="drop"),
+        "length": cache["length"] + valid.sum(axis=1).astype(jnp.int32),
+    }
+
+
 def gather_pages_hb(pages: jax.Array, tbl: jax.Array) -> jax.Array:
     """Head-major logical view (Hkv, B, W, hd) of a page pool, as ONE
     page-granular gather with no transpose — the decode hot path's layout
@@ -405,20 +438,28 @@ def self_attention(p: Dict, cfg, x: jax.Array, positions: jax.Array,
                    cache: Optional[Dict] = None, mode: str = "train",
                    page_tbl: Optional[jax.Array] = None,
                    ) -> Tuple[jax.Array, Optional[Dict]]:
-    """mode: 'train' (no cache) | 'prefill' (build cache) | 'decode' (1 tok).
+    """mode: 'train' (no cache) | 'prefill' (build cache) | 'decode' (1 tok)
+    | 'chunk' (S-token prompt chunk appended to a paged cache).
 
     A decode cache may be either the contiguous per-slot layout or a paged
     leaf group (``k_pages`` present), in which case ``page_tbl`` maps the
     slot's logical pages to the shared pool. Both layouts feed the SAME
     attention math on masked logical positions, so they are token-for-token
-    equivalent (tests/test_paged_parity.py pins this).
+    equivalent (tests/test_paged_parity.py pins this). Chunk mode is the
+    paged decode path widened to S queries: the chunk's keys are written
+    first, then the queries score the slot's whole logical history — the
+    ``k_pos <= q_pos`` mask gives in-chunk causality for free.
     """
     q, k, v = _qkv(p, cfg, x, positions, qk_norm="q_norm" in p)
     use_kernel = cfg.attn_impl != "ref" and uniform_gqa_group(cfg) is not None
-    if mode == "decode":
+    if mode in ("decode", "chunk"):
         assert cache is not None
         paged = "k_pages" in cache
-        if paged:
+        if mode == "chunk":
+            assert paged and page_tbl is not None, \
+                "chunked prefill needs a paged cache + block table"
+            cache = paged_chunk_write(cache, page_tbl, k, v, positions)
+        elif paged:
             assert page_tbl is not None, "paged decode cache needs page_tbl"
             cache = paged_decode_write(cache, page_tbl, k, v)
         else:
@@ -426,7 +467,18 @@ def self_attention(p: Dict, cfg, x: jax.Array, positions: jax.Array,
         gp = uniform_gqa_group(cfg)
         if use_kernel:
             from repro.kernels import ops as KOPS
-            if paged:
+            if mode == "chunk":
+                # (B, Hkv, max_pages) GQA grid with the whole (group, S)
+                # query chunk per program — one HBM read per page per
+                # group, independent of chunk size
+                out = jnp.moveaxis(
+                    KOPS.chunked_prefill_attention(
+                        jnp.moveaxis(q, 1, 2), cache["k_pages"],
+                        cache["v_pages"], page_tbl, positions,
+                        cache["pos_ids"], window=layer_window,
+                        chunk=layer_chunk, impl=cfg.attn_impl),
+                    1, 2)                           # (B, S, Hq, hd_v)
+            elif paged:
                 # same (B, Hkv, nk) grid; the scalar-prefetched block table
                 # redirects each program's page DMA — still one HBM read
                 # per (batch, kv head, logical page)

@@ -66,6 +66,17 @@ class Model:
                 and self.cfg.sliding_window is None
                 and self.cfg.attn_chunk is None)
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when prompt processing can be split into fixed-size chunks
+        interleaved with decode: every stateful block's KV must live in the
+        paged pool, because chunk i reaches chunks 0..i-1 through the block
+        table. Recurrent blocks (mamba2) would need carried-state chunk
+        resume and keep the monolithic prefill path for now."""
+        kinds = set(self.prefix) | set(self.unit)
+        return (self.supports_paged_decode
+                and kinds <= {"dense", "parallel", "moe", "shared"})
+
     # ------------------------------------------------------------------ init
     def init(self, key) -> Dict:
         cfg = self.cfg
@@ -235,12 +246,18 @@ class Model:
         cfg = self.cfg
         extras = extras or {}
         Bsz, S = tokens.shape
+        mask = extras.get("mask")
         if mode == "decode":
             positions = caches["t"][:, None]
+        elif mode == "chunk":
+            # prompt chunk: positions continue from the slot's token count;
+            # pad queries (partial last chunk) get -1 like padded prefill
+            positions = caches["t"][:, None] + jnp.arange(S, dtype=jnp.int32)
+            if mask is not None:
+                positions = jnp.where(mask > 0, positions, -1)
         else:
             positions = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
-        mask = extras.get("mask")
         if mode == "prefill" and mask is not None:
             # right-padded batched prefill: pad slots get position -1, so
             # their cache entries are masked (pos_ids == -1 = empty) and no
@@ -266,16 +283,29 @@ class Model:
         # paged serving: the shared block table rides the cache tree once
         # (caches["paged"]) and reaches every attention layer through ctx
         page_tbl = None
-        if mode == "decode" and caches is not None and "paged" in caches:
+        if mode in ("decode", "chunk") and caches is not None \
+                and "paged" in caches:
             page_tbl = caches["paged"]["tbl"]
         ctx = B.LayerCtx(cfg=cfg, mode=mode, positions=positions, mask=mask,
                          memory=memory, emb_orig=emb_orig, batch=Bsz,
                          max_len=0, page_tbl=page_tbl)
         x, new_caches, aux = self._backbone(params, x, ctx, caches, remat)
+        if mode == "chunk":
+            # only the last REAL token's logits matter (next-chunk callers
+            # discard them; the final chunk samples the first decode token);
+            # no mask means the whole chunk is real
+            nv = (mask.sum(axis=1).astype(jnp.int32) if mask is not None
+                  else jnp.full((Bsz,), S, jnp.int32))
+            idx = jnp.maximum(nv - 1, 0)
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B,1,d)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = L.logits(params["lm_head"], params["embed"], cfg, x)
         if mode == "decode" and new_caches is not None:
             new_caches["t"] = new_caches["t"] + 1
+        elif mode == "chunk" and new_caches is not None:
+            nv = (mask.sum(axis=1).astype(jnp.int32) if mask is not None
+                  else jnp.full((Bsz,), S, jnp.int32))
+            new_caches["t"] = new_caches["t"] + nv
         elif mode == "prefill" and new_caches is not None:
             lengths = (mask.sum(axis=1).astype(jnp.int32) if mask is not None
                        else jnp.full((Bsz,), S, jnp.int32))
@@ -338,6 +368,17 @@ class Model:
         last = jnp.take_along_axis(
             logits, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         return last, caches
+
+    def prefill_chunk(self, params, caches, tokens, mask):
+        """Process one fixed-size prompt chunk against a paged slot view
+        (``serving.paged.gather_slot_view``): the chunk's KV is appended to
+        the slots' pages and its queries attend over each slot's whole
+        logical history (prior chunks + itself, causally). tokens/mask:
+        (n, C); positions continue from ``caches['t']``. Returns
+        (last-valid-token logits (n, vocab), caches)."""
+        logits, caches, _ = self.forward(params, tokens, {"mask": mask},
+                                         mode="chunk", caches=caches)
+        return logits[:, 0], caches
 
     def decode_step(self, params, caches, tokens):
         """tokens: (B, 1) -> (logits (B, vocab), caches)."""

@@ -29,10 +29,33 @@ prefilled (phase 1) and their caches inserted into free slots; each fused
 chunk advances every active slot (phase 2); finished slots are freed at
 chunk boundaries. This is the standard in-flight batching loop (Orca/vLLM
 style) in pure JAX with a static batch shape.
+
+Chunked prefill (``prefill_chunk`` set, requires ``paged``): the two-phase
+admit-then-decode loop above serializes phases — every admission runs a
+monolithic prefill while all active decode slots stall, so a long prompt
+spikes time-between-tokens for everyone else. The quantum scheduler
+instead splits each prompt into fixed-size chunks and packs AT MOST ONE
+prefill chunk plus the fused decode scan into every scheduling quantum
+(Sarathi-style): chunk i of a prompt attends over its own queries plus the
+KV of chunks 0..i-1 already resident in the paged pool (the chunked-
+prefill kernel chases the same scalar-prefetched block table as paged
+decode), so decode TBT is bounded by one chunk's compute regardless of
+prompt length. Pages materialize chunk by chunk (incremental bulk-alloc +
+scatter) against the worst-case reservation made at admission.
+
+Metering under chunking: chunking changes the SCHEDULE, not the modeled
+energy — the paper's per-phase model attributes each request's prefill at
+its true prompt length (batch 1, exact) when its last chunk completes, so
+modeled J/token is invariant to the ``prefill_chunk`` choice (asserted in
+tests/test_chunked_parity.py); decode quanta keep their per-micro-step
+active-slot attribution. The wall-clock wins (TTFT, inter-token p99) are
+measured, not modeled — benchmarks/engine_bench.py tracks them via the
+per-token emission timestamps on ``Response.t_emit``.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -64,15 +87,40 @@ def _prefill_fn(model, params, tokens, mask, key, *, max_len, vocab,
     return first, pcache
 
 
+def _chunk_prefill_fn(model, params, caches, tokens, mask, slots, key, *,
+                      vocab, temperature, page_size):
+    """One chunked-prefill step: allocate the chunk's pages, run the chunk
+    through the model against a gathered slot view (its KV scatters into
+    the pool, its queries see the slots' whole logical history), and sample
+    a candidate next token (only meaningful after the LAST chunk)."""
+    nv = mask.sum(axis=1).astype(jnp.int32)              # (n,) valid tokens
+    t0 = caches["t"][slots]
+    start_pg = (t0 + page_size - 1) // page_size
+    end_pg = (t0 + nv + page_size - 1) // page_size
+    caches = dict(caches)
+    caches["paged"] = paged.alloc_chunk_pages(caches["paged"], slots,
+                                              start_pg, end_pg)
+    view = paged.gather_slot_view(caches, slots)
+    last, view = model.prefill_chunk(params, view, tokens, mask)
+    caches = paged.scatter_slot_view(caches, view, slots)
+    first = sampling.sample(last[:, :vocab], key, temperature)
+    return first, caches
+
+
 _PREFILL = jax.jit(_prefill_fn, static_argnums=(0,),
                    static_argnames=("max_len", "vocab", "temperature"))
 _FUSED_STEPS = jax.jit(sampling.fused_decode_steps, static_argnums=(0,),
                        static_argnames=("n_steps", "temperature",
-                                        "page_size"))
+                                        "page_size", "freeze_inactive"))
 _INSERT = jax.jit(sampling.insert_prefill)
 _INSERT_PAGED = jax.jit(paged.insert_prefill_paged,
                         static_argnames=("page_size",))
 _RELEASE = jax.jit(paged.release_slots)
+_CHUNK_PREFILL = jax.jit(_chunk_prefill_fn, static_argnums=(0,),
+                         static_argnames=("vocab", "temperature",
+                                          "page_size"))
+_BEGIN_CHUNKED = jax.jit(paged.begin_chunked_prefill)
+_ARM = jax.jit(sampling.arm_slots)
 
 
 @dataclasses.dataclass
@@ -98,6 +146,13 @@ class EngineConfig:
     paged: bool = False
     page_size: int = 16
     num_pages: Optional[int] = None
+    # chunked prefill (requires paged): split prompts into fixed-size
+    # chunks scheduled into the same quantum as decode — at most one chunk
+    # plus one fused decode scan per host sync, so decode time-between-
+    # tokens is bounded by one chunk's compute instead of a whole prompt's.
+    # None = monolithic admission prefill (the parity oracle). 256 is the
+    # production default; tests/benches use smaller chunks.
+    prefill_chunk: Optional[int] = None
 
 
 class ServingEngine:
@@ -127,7 +182,13 @@ class ServingEngine:
         self._steps = 0
         self.decode_chunks = 0                       # device->host syncs
         self.prefill_batches = 0
+        self.prefill_chunks = 0                      # chunked-prefill launches
         self.peak_active = 0                         # max concurrent requests
+        # host mirror of which slots are ARMED for decode (device
+        # state["active"] at chunk boundaries): in chunked mode a slot is
+        # occupied (slot_rid >= 0) during its whole prefill but must not
+        # trigger decode scans until its last chunk arms it
+        self._slot_armed = [False] * B
 
         self.paged = cfg.paged
         if cfg.paged:
@@ -153,9 +214,31 @@ class ServingEngine:
             self._slot_pages = [0] * B
             self._resv: Dict[int, int] = {}
 
+        self.chunked = cfg.prefill_chunk is not None
+        if self.chunked:
+            if cfg.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if not cfg.paged:
+                raise ValueError("chunked prefill requires the paged KV "
+                                 "pool (chunk i reads chunks 0..i-1 "
+                                 "through the block table)")
+            if not model.supports_chunked_prefill:
+                raise ValueError(
+                    f"{model.cfg.name}: chunked prefill requires all "
+                    "stateful blocks to keep their KV in the paged pool "
+                    "(recurrent blocks need carried-state chunk resume)")
+            # FCFS queue of (request, slot) mid-prefill; req.prefill_pos
+            # tracks how many prompt tokens are already in the pool
+            self._prefilling: deque = deque()
+
     # ------------------------------------------------------------- metering
-    def _meter_prefill(self, batch: int, seq: int):
-        counts = prefill_counts(self.workload, batch, seq)
+    def _meter_prefill(self, batch: int, seq: int,
+                       useful_seq: Optional[float] = None):
+        """Meter one prefill launch of ``batch`` sequences padded to
+        ``seq``; ``useful_seq`` (mean real tokens per row) attributes only
+        the real tokens while the energy covers the whole padded launch."""
+        counts = prefill_counts(self.workload, batch, seq,
+                                useful_seq=useful_seq)
         rep = step_energy(self.profile, counts)
         self.meter.record("prefill", rep.tokens, rep.t_total, rep.energy_j)
         return rep
@@ -178,6 +261,11 @@ class ServingEngine:
     @property
     def active(self) -> int:
         return sum(1 for r in self.slot_rid if r >= 0)
+
+    @property
+    def decoding(self) -> int:
+        """Slots armed for decode (excludes slots still mid-prefill)."""
+        return sum(self._slot_armed)
 
     def _over_budget(self) -> bool:
         b = self.cfg.carbon_budget_g_per_ktok
@@ -253,6 +341,26 @@ class ServingEngine:
                                            self.num_pages - self.free_pages)
         if not take:
             return 0
+        if self.chunked:
+            # quantum scheduler: admission only claims the slot + pages and
+            # queues the request for chunk-at-a-time prefill — no prefill
+            # launch here, so decode slots are never stalled by admission
+            slot_iter = iter(free)
+            slots: List[int] = []
+            for req in take:
+                slot = next(slot_iter)
+                self.slot_rid[slot] = req.rid
+                self.slot_budget[slot] = 0           # armed after last chunk
+                self.slot_eos[slot] = req.eos_id
+                self._slot_ctx[slot] = 0.0
+                self._slo[slot] = req.slo_s
+                self._slot_pages[slot] = self._resv.pop(req.rid)
+                req.prefill_pos = 0
+                self._prefilling.append((req, slot))
+                slots.append(slot)
+            self.caches = _BEGIN_CHUNKED(self.caches,
+                                         jnp.asarray(slots, jnp.int32))
+            return len(take)
         # bucket prompts: padded power-of-two buckets when the model masks
         # pad tokens exactly; exact-length groups otherwise (rwkv/enc-dec).
         # Buckets are clamped to max_len — past that the cache ring must
@@ -309,14 +417,22 @@ class ServingEngine:
                 self.state, budgets, eos_ids)
         first_h = np.asarray(jax.device_get(first))
         self.prefill_batches += 1
-        # meter + bookkeeping per request (true lengths, seed attribution)
+        # meter the REAL padded launch once — the device ran ONE
+        # (n_pad, bucket) batch, not n exact-length singles. Real tokens
+        # are attributed (useful_seq), so prefill J/token honestly carries
+        # the padding + batch-shape waste; per-request energy shares go by
+        # true prompt length, while each request's modeled prefill TIME is
+        # the whole launch it waited on (that's its TTFT contribution).
+        tot_real = sum(len(r.prompt) for r in reqs)
+        rep = self._meter_prefill(n_pad, bucket, useful_seq=tot_real / n_pad)
+        now = time.perf_counter()
         released: List[int] = []
         for i, (req, slot) in enumerate(zip(reqs, slots)):
-            rep = self._meter_prefill(1, len(req.prompt))
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
-            resp.energy_j += rep.energy_j
+            resp.energy_j += rep.energy_j * (len(req.prompt) / tot_real)
             resp.tokens.append(int(first_h[i]))
+            resp.t_emit.append(now)
             if self.paged:
                 self._slot_pages[slot] = self._resv.pop(req.rid)
             if req.max_new_tokens <= 1:
@@ -328,14 +444,72 @@ class ServingEngine:
             self.slot_eos[slot] = req.eos_id
             self._slot_ctx[slot] = float(len(req.prompt))
             self._slo[slot] = req.slo_s
+            self._slot_armed[slot] = True
         self._release_slots(released)
+
+    # ------------------------------------------------------ chunked prefill
+    def _prefill_quantum(self) -> int:
+        """Run AT MOST ONE prefill chunk (head of the FCFS prefilling
+        queue) — the prefill half of a scheduling quantum. Decode slots
+        stall for one chunk's compute, never a whole prompt's. Returns the
+        number of chunks launched (0 or 1)."""
+        if not self._prefilling:
+            return 0
+        req, slot = self._prefilling[0]
+        C = self.cfg.prefill_chunk
+        piece = req.prompt[req.prefill_pos:req.prefill_pos + C]
+        nv = len(piece)
+        tokens = np.zeros((1, C), np.int32)
+        mask = np.zeros((1, C), np.int32)
+        tokens[0, :nv] = piece
+        mask[0, :nv] = 1
+        first, self.caches = _CHUNK_PREFILL(
+            self.model, self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(mask), jnp.asarray([slot], jnp.int32),
+            self._next_key(), vocab=self.model.cfg.vocab,
+            temperature=self.cfg.temperature, page_size=self.cfg.page_size)
+        self.prefill_chunks += 1
+        req.prefill_pos += nv
+        if req.prefill_pos < len(req.prompt):
+            return 1                   # intermediate chunk: no host sync
+        # last chunk: its sampled token is the request's first emission
+        self._prefilling.popleft()
+        first_h = np.asarray(jax.device_get(first))
+        self.prefill_batches += 1      # one first-token host sync
+        # chunking changes the schedule, not the modeled energy: attribute
+        # the request's prefill at its true prompt length exactly once, so
+        # modeled J/token is invariant to the prefill_chunk choice
+        rep = self._meter_prefill(1, len(req.prompt))
+        resp = self.responses[req.rid]
+        resp.prefill_s += rep.t_total
+        resp.energy_j += rep.energy_j
+        resp.tokens.append(int(first_h[0]))
+        resp.t_emit.append(time.perf_counter())
+        budget = req.max_new_tokens - 1
+        if budget <= 0:
+            resp.finished = True       # prefill token was the whole budget
+            self.slot_rid[slot] = -1
+            self._slo[slot] = None
+            self._release_slots([slot])
+            return 1
+        self.cur_tokens, self.state = _ARM(
+            self.cur_tokens, self.state, jnp.asarray([slot], jnp.int32),
+            first, jnp.asarray([budget], jnp.int32),
+            jnp.asarray([-1 if req.eos_id is None else req.eos_id],
+                        jnp.int32))
+        self.slot_budget[slot] = budget
+        self._slot_ctx[slot] = float(len(req.prompt))
+        self._slot_armed[slot] = True
+        return 1
 
     # --------------------------------------------------------------- decode
     def _decode_chunk(self, max_steps: int) -> None:
         """One fused on-device chunk of up to ``sync_every`` decode steps
-        for all active slots (phase 2); a single host sync at the end."""
-        budgets = [self.slot_budget[s] for s, r in enumerate(self.slot_rid)
-                   if r >= 0]
+        for all armed slots (phase 2); a single host sync at the end.
+        Slots still mid-chunked-prefill ride along inert (device ``active``
+        false, cursors frozen by the fused step)."""
+        budgets = [self.slot_budget[s] for s in range(self.cfg.max_batch)
+                   if self._slot_armed[s]]
         n = min(self.cfg.sync_every, max(max(budgets), 1),
                 max(max_steps - self._steps, 1))
         (self.caches, self.cur_tokens, self.state, tok_mat,
@@ -343,8 +517,10 @@ class ServingEngine:
             self.model, self.params, self.caches, self.cur_tokens,
             self.state, self._next_key(), n_steps=n,
             temperature=self.cfg.temperature,
-            page_size=self.cfg.page_size if self.paged else 0)
+            page_size=self.cfg.page_size if self.paged else 0,
+            freeze_inactive=self.chunked)
         tok_h, emit_h = jax.device_get((tok_mat, emit_mat))
+        now = time.perf_counter()
         self.decode_chunks += 1
         self.peak_active = max(self.peak_active, self.active)
         released: List[int] = []
@@ -363,6 +539,7 @@ class ServingEngine:
                 resp = self.responses[rid]
                 tok = int(tok_h[i, slot])
                 resp.tokens.append(tok)
+                resp.t_emit.append(now)
                 resp.decode_s += per_tok_t
                 resp.energy_j += per_tok_e
                 self._slot_ctx[slot] += 1.0
@@ -373,6 +550,7 @@ class ServingEngine:
                 if done:
                     resp.finished = True
                     self.slot_rid[slot] = -1
+                    self._slot_armed[slot] = False
                     self._slo[slot] = None
                     released.append(int(slot))
             self._steps += 1
@@ -381,12 +559,21 @@ class ServingEngine:
         self._release_slots(released)
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
-        """Drive until the queue drains and all slots finish."""
+        """Drive until the queue drains and all slots finish.
+
+        In chunked mode every loop iteration is one scheduling QUANTUM:
+        admission claims slots/pages (no prefill launch), at most one
+        prefill chunk runs, then one fused decode scan advances every
+        armed slot — so a long prompt costs each decode slot one chunk of
+        stall per quantum instead of its whole prefill."""
         while (self.queue or self.active) and self._steps < max_steps:
             admitted = self._admit()
-            if self.active:
+            chunks = self._prefill_quantum() if self.chunked else 0
+            if self.decoding:
                 self._decode_chunk(max_steps)
-            elif not admitted and self.queue:
+            elif admitted or chunks:
+                continue               # prefill-only quantum
+            elif self.queue:
                 if not self.paged or self.free_pages == self.num_pages:
                     # nothing running and admission had the ENTIRE pool
                     # available yet still refused the head request: it can
@@ -436,6 +623,12 @@ class ServingEngine:
                 # the embodied-carbon memory model (ROADMAP: paged pool)
                 "peak_kv_rows_reserved":
                     self.peak_pages_reserved * self.cfg.page_size,
+            })
+        if self.chunked:
+            out.update({
+                "chunked": 1.0,
+                "prefill_chunk": self.cfg.prefill_chunk,
+                "prefill_chunks": self.prefill_chunks,
             })
         out.update({
             "requests": len(self.responses),

@@ -110,6 +110,28 @@ def alloc_prefill_pages(alloc: Dict, slots: jax.Array,
             "top": top - ok.astype(jnp.int32).sum()}
 
 
+def alloc_chunk_pages(alloc: Dict, slots: jax.Array, start_pg: jax.Array,
+                      end_pg: jax.Array) -> Dict:
+    """Pop pages for the logical page range [start_pg[i], end_pg[i]) of
+    slot ``slots[i]``, preserving the slot's existing entries — the
+    incremental counterpart of ``alloc_prefill_pages`` for chunked prefill
+    (a prompt's pages materialize chunk by chunk instead of all at once).
+    slots/start_pg/end_pg: (n,) int32. The engine admits by worst-case
+    reservation, so the stack can never underflow mid-prompt."""
+    tbl, free, top = alloc["tbl"], alloc["free"], alloc["top"]
+    M = tbl.shape[1]
+    P = free.shape[0]
+    ar = jnp.arange(M)[None, :]
+    need = (ar >= start_pg[:, None]) & (ar < end_pg[:, None])   # (n, M)
+    rank = jnp.cumsum(need.reshape(-1).astype(jnp.int32)) - 1
+    take = (top - 1 - rank).reshape(need.shape)
+    pages = free[jnp.clip(take, 0, P - 1)]
+    ok = need & (take >= 0)                             # guard underflow
+    rows = jnp.where(ok, pages, tbl[slots])
+    return {"tbl": tbl.at[slots].set(rows), "free": free,
+            "top": top - ok.astype(jnp.int32).sum()}
+
+
 def release_slots(alloc: Dict, released: jax.Array) -> Dict:
     """Push every page mapped by the ``released`` (B,) bool slots back onto
     the free stack and clear their block-table rows."""
@@ -126,6 +148,62 @@ def release_slots(alloc: Dict, released: jax.Array) -> Dict:
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
+
+
+def _walk_paged(leafgroup_fn, plain_fn, paged_fn, *trees):
+    """Map parallel paged cache trees with one traversal skeleton.
+
+    ``leafgroup_fn(stacked, *groups)`` handles ``_PAGED_KV_KEYS`` leaf
+    groups, ``plain_fn(stacked, *leaves)`` everything else (e.g. the
+    position counter ``t``), ``paged_fn(*allocators)`` the shared
+    allocator at key ``"paged"``. ``stacked`` is True under the scanned
+    ``"unit"`` subtree, whose leaves carry batch on axis 1 instead of 0 —
+    every chunked-prefill view/reset/freeze below shares this walk so a
+    cache-layout change cannot drift between them.
+    """
+    def walk(nodes, stacked):
+        n0 = nodes[0]
+        if isinstance(n0, dict) and _PAGED_KV_KEYS <= set(n0):
+            return leafgroup_fn(stacked, *nodes)
+        if isinstance(n0, dict):
+            return {k: (paged_fn(*[nd[k] for nd in nodes]) if k == "paged"
+                        else walk([nd[k] for nd in nodes],
+                                  stacked or k == "unit"))
+                    for k in n0}
+        if isinstance(n0, (tuple, list)):
+            return type(n0)(walk(list(vs), stacked) for vs in zip(*nodes))
+        return plain_fn(stacked, *nodes)
+
+    return walk(list(trees), False)
+
+
+def freeze_inactive_cursors(old: Dict, new: Dict,
+                            active: jax.Array) -> Dict:
+    """Keep INACTIVE slots' per-slot write cursors (``t`` / ``pos_ids`` /
+    ``length``) at their pre-step values after a fused decode micro-step.
+
+    The fused step is batch-shape invariant: every slot writes a KV row per
+    micro-step, active or not. Released slots' garbage lands in the trash
+    page (block-table row cleared), but a slot that is mid-CHUNKED-PREFILL
+    has mapped pages and a cursor pointing at its next prompt row — letting
+    the decode write advance it would corrupt the chunk schedule. Freezing
+    the cursor pins the garbage write to the slot's next-unwritten row
+    (overwritten by the next real chunk/decode write before any query can
+    unmask it) and keeps the logical position bookkeeping exact. Pool
+    pages are taken from ``new`` untouched. Only reached from chunked
+    engines (attention-only models), so every plain leaf is batch-leading.
+    """
+    def leafgroup(stacked, o, n):
+        act = active[None, :, None] if stacked else active[:, None]
+        actl = active[None, :] if stacked else active
+        return {**n,
+                "pos_ids": jnp.where(act, n["pos_ids"], o["pos_ids"]),
+                "length": jnp.where(actl, n["length"], o["length"])}
+
+    def plain(stacked, o, n):
+        return jnp.where(active[None] if stacked else active, n, o)
+
+    return _walk_paged(leafgroup, plain, lambda o, n: n, old, new)
 
 
 # ----------------------------------------------------------- cache layout
@@ -250,3 +328,60 @@ def insert_prefill_paged(pool, src, slots: jax.Array, cur_tokens: jax.Array,
     cur_tokens, state = sampling.arm_slots(cur_tokens, state, slots,
                                            first_tokens, budgets, eos_ids)
     return pool, cur_tokens, state
+
+
+# ----------------------------------------------------- chunked prefill view
+
+
+def begin_chunked_prefill(pool: Dict, slots: jax.Array) -> Dict:
+    """Reset the admitted slots' per-slot cache rows for a fresh chunked
+    prefill: logical positions all-empty, lengths/counters zero. Pool pages
+    and block-table rows are untouched — a released tenant already cleared
+    its table row, and its stale pool rows are unreachable behind
+    ``pos_ids == -1``."""
+    def rows(d, value, stacked):
+        return (d.at[:, slots].set(value) if stacked
+                else d.at[slots].set(value))
+
+    def leafgroup(stacked, p):
+        return {**p, "pos_ids": rows(p["pos_ids"], -1, stacked),
+                "length": rows(p["length"], 0, stacked)}
+
+    return _walk_paged(leafgroup,
+                       lambda stacked, p: rows(p, 0, stacked),
+                       lambda p: p, pool)
+
+
+def gather_slot_view(pool: Dict, slots: jax.Array) -> Dict:
+    """Batch-n view of the paged cache tree for a chunked-prefill step:
+    per-slot leaves (``pos_ids``/``length``/``t``) are gathered to rows
+    ``slots``, the shared page pools ride through whole, and the allocator
+    is reduced to the slots' block-table rows (all a forward pass needs).
+    ``scatter_slot_view`` writes the per-slot rows back afterwards."""
+    def rows(d, stacked):
+        return d[:, slots] if stacked else d[slots]
+
+    def leafgroup(stacked, p):
+        return {**p, "pos_ids": rows(p["pos_ids"], stacked),
+                "length": rows(p["length"], stacked)}
+
+    return _walk_paged(leafgroup, lambda stacked, p: rows(p, stacked),
+                       lambda p: {"tbl": p["tbl"][slots]}, pool)
+
+
+def scatter_slot_view(pool: Dict, view: Dict, slots: jax.Array) -> Dict:
+    """Fold a chunk-updated ``gather_slot_view`` tree back into the full
+    cache: shared pools are taken from the view (the chunk wrote them),
+    per-slot rows scatter into ``slots``, and the allocator stays the
+    pool's (the view only carried read-only table rows)."""
+    def rows(d, s, stacked):
+        return d.at[:, slots].set(s) if stacked else d.at[slots].set(s)
+
+    def leafgroup(stacked, p, v):
+        return {"k_pages": v["k_pages"], "v_pages": v["v_pages"],
+                "pos_ids": rows(p["pos_ids"], v["pos_ids"], stacked),
+                "length": rows(p["length"], v["length"], stacked)}
+
+    return _walk_paged(leafgroup,
+                       lambda stacked, p, v: rows(p, v, stacked),
+                       lambda p, v: p, pool, view)

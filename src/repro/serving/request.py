@@ -13,6 +13,10 @@ class Request:
     arrival_s: float = 0.0
     slo_s: Optional[float] = None
     eos_id: Optional[int] = None
+    # chunked-prefill progress: prompt tokens already processed (the quantum
+    # scheduler advances this one `prefill_chunk` slice at a time while
+    # decode slots keep running)
+    prefill_pos: int = 0
 
 
 @dataclasses.dataclass
@@ -25,6 +29,11 @@ class Response:
     carbon_g: float = 0.0
     finished: bool = False
     rejected: bool = False             # could never fit the KV pool
+    # host wall-clock (time.perf_counter) at which each token became
+    # visible to the host — one entry per token; tokens landing in the same
+    # fused chunk share a timestamp. Feeds TTFT / inter-token-latency
+    # percentiles in benchmarks/engine_bench.py.
+    t_emit: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def n_tokens(self) -> int:

@@ -55,7 +55,7 @@ def sample(logits: jax.Array, key: jax.Array,
 def fused_decode_steps(model, params, caches, cur_tokens: jax.Array,
                        state: Dict[str, jax.Array], key: jax.Array,
                        n_steps: int, temperature: float,
-                       page_size: int = 0
+                       page_size: int = 0, freeze_inactive: bool = False
                        ) -> Tuple:
     """Run ``n_steps`` fused engine micro-steps fully on device.
 
@@ -71,6 +71,13 @@ def fused_decode_steps(model, params, caches, cur_tokens: jax.Array,
     page for every ACTIVE slot whose next token starts a new logical page —
     inactive slots never allocate, so finished slots coasting to the chunk
     boundary write to the trash page instead of draining the pool.
+
+    ``freeze_inactive`` (chunked-prefill engines) restores inactive slots'
+    write cursors to their pre-step values after each micro-step
+    (``paged.freeze_inactive_cursors``): a slot parked mid-chunked-prefill
+    keeps its logical position exact while decode chunks run around it.
+    Non-chunked engines skip the extra selects — their inactive slots are
+    free/finished and get fully re-initialized at insertion anyway.
     """
     vocab = model.cfg.vocab
     keys = jax.random.split(key, n_steps)
@@ -82,7 +89,13 @@ def fused_decode_steps(model, params, caches, cur_tokens: jax.Array,
             caches = dict(caches)
             caches["paged"] = _paged.alloc_decode_pages(
                 caches["paged"], caches["t"], active, page_size)
-        logits, caches = model.decode_step(params, caches, toks)
+            prev = caches
+            logits, caches = model.decode_step(params, caches, toks)
+            if freeze_inactive:
+                caches = _paged.freeze_inactive_cursors(prev, caches,
+                                                        active)
+        else:
+            logits, caches = model.decode_step(params, caches, toks)
         nxt = sample(logits[:, :vocab], k_i, temperature)
         nxt = jnp.where(active, nxt, toks[:, 0])
         emitted = active

@@ -1,0 +1,269 @@
+"""Chunked-prefill engine vs the monolithic-prefill oracle: token-for-token
+parity, quantum-scheduler interleaving, energy-meter invariance to the
+chunk-size knob, admission-metering accounting, and jit-entry reuse across
+engines.
+
+The chunked engine reuses the paged decode path verbatim and feeds the
+same attention math chunk by chunk, so greedy decoding must be EXACTLY
+equal to the monolithic paged engine — any drift means a chunk wrote the
+wrong page, a stale row unmasked, a cursor moved during an interleaved
+decode scan, or positions skewed at a partial chunk.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.energy import prefill_counts, step_energy
+from repro.models import Model, ModelConfig
+from repro.models.config import SSMConfig, repeat_pattern
+from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import engine as engine_mod
+
+PS = 8                                 # page size exercised in the suite
+CH = 8                                 # prefill chunk size
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = ModelConfig(
+        name="tiny-chunked", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=2, d_ff=128, vocab=256, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def run_engine(m, params, reqs, prefill_chunk, **kw):
+    args = dict(max_batch=4, max_len=64, sync_every=8, paged=True,
+                page_size=PS, prefill_chunk=prefill_chunk)
+    args.update(kw)
+    eng = ServingEngine(m, params, EngineConfig(**args))
+    for r in reqs:
+        eng.submit(Request(**r))
+    resps = {r.rid: r for r in eng.run()}
+    return resps, eng
+
+
+def assert_parity(m, params, reqs, prefill_chunk=CH, **kw):
+    want, _ = run_engine(m, params, reqs, prefill_chunk=None, **kw)
+    got, eng = run_engine(m, params, reqs, prefill_chunk=prefill_chunk, **kw)
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+        assert got[rid].finished == want[rid].finished
+        assert got[rid].rejected == want[rid].rejected
+    return eng
+
+
+def assert_pool_clean(eng):
+    alloc = jax.device_get(eng.caches["paged"])
+    P = alloc["free"].shape[0]
+    assert int(alloc["top"]) == P
+    assert (np.asarray(alloc["tbl"]) == -1).all()
+    assert eng.free_pages == eng.num_pages
+
+
+# ------------------------------------------------------------------ parity
+
+
+def test_chunk_span_1_2_many_and_partial(parts):
+    """Prompts spanning one chunk, exactly two chunks, many chunks, and a
+    partial last chunk — all token-for-token with the monolithic oracle."""
+    _, m, params = parts
+    rng = np.random.default_rng(7)
+    lens = (3,           # < one chunk (partial only)
+            CH,          # exactly one chunk
+            2 * CH,      # exactly two chunks
+            2 * CH + 5,  # many chunks, partial last
+            30)          # many chunks, page boundary inside a chunk
+    reqs = [dict(rid=i, prompt=list(rng.integers(0, 256, int(n))),
+                 max_new_tokens=9)
+            for i, n in enumerate(lens)]
+    eng = assert_parity(m, params, reqs)
+    assert eng.prefill_chunks == sum(-(-n // CH) for n in lens)
+    assert_pool_clean(eng)
+
+
+def test_admitted_mid_stream_while_slots_decode(parts):
+    """The acceptance case: a long prompt is admitted while other slots
+    actively decode. The quantum scheduler must interleave its chunks with
+    their fused decode scans — and every token must still equal the
+    blocking-admit oracle."""
+    _, m, params = parts
+    rng = np.random.default_rng(11)
+    # 2 slots: both fill with long-budget decoders; the long prompt queues
+    # behind and is admitted only when slot 0 frees mid-run
+    reqs = [dict(rid=0, prompt=list(rng.integers(0, 256, 5)),
+                 max_new_tokens=10),
+            dict(rid=1, prompt=list(rng.integers(0, 256, 6)),
+                 max_new_tokens=40),
+            dict(rid=2, prompt=list(rng.integers(0, 256, 3 * CH + 3)),
+                 max_new_tokens=8)]
+    eng = assert_parity(m, params, reqs, max_batch=2)
+    st = eng.stats()
+    # rid 2's 4 chunks ran while rid 1 still decoded: the scheduler packed
+    # mixed quanta (prefill chunks happened after decode chunks started)
+    assert st["prefill_chunks"] >= 4
+    assert st["peak_active"] == 2
+    assert_pool_clean(eng)
+
+
+def test_eos_and_budget_one(parts):
+    """EOS raised mid-chunk and a budget-1 request (prefill token is the
+    whole budget, slot released straight from the prefill queue)."""
+    _, m, params = parts
+    probe, _ = run_engine(m, params,
+                          [dict(rid=0, prompt=[9, 8, 7, 6, 5],
+                                max_new_tokens=12)], prefill_chunk=None)
+    eos = probe[0].tokens[4]
+    reqs = [dict(rid=0, prompt=[9, 8, 7, 6, 5], max_new_tokens=12,
+                 eos_id=eos),
+            dict(rid=1, prompt=list(range(1, CH + 4)), max_new_tokens=1)]
+    eng = assert_parity(m, params, reqs)
+    assert_pool_clean(eng)
+
+
+def test_pool_pressure_queues_and_completes(parts):
+    """A tight pool forces requests to wait for reclaimed pages while
+    earlier ones prefill chunk-by-chunk; everyone finishes with parity."""
+    _, m, params = parts
+    rng = np.random.default_rng(3)
+    reqs = [dict(rid=i, prompt=list(rng.integers(0, 256, 10)),
+                 max_new_tokens=8)
+            for i in range(6)]
+    eng = assert_parity(m, params, reqs, num_pages=7)
+    assert eng.stats()["peak_pages_reserved"] <= 7
+    assert_pool_clean(eng)
+
+
+def test_oversized_and_never_fitting_rejected(parts):
+    """Reservation rules are unchanged by chunking: never-fits prompts are
+    rejected up front, fitting ones complete."""
+    _, m, params = parts
+    reqs = [dict(rid=0, prompt=list(range(1, 70)), max_new_tokens=5),
+            dict(rid=1, prompt=[1, 2, 3], max_new_tokens=5)]
+    eng = assert_parity(m, params, reqs)   # 69 + 4 > max_len=64 -> reject
+    assert_pool_clean(eng)
+
+
+def test_chunked_requires_paged_and_attention_only(parts):
+    _, m, params = parts
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(m, params, EngineConfig(max_batch=2, max_len=64,
+                                              prefill_chunk=8))
+    cfg = ModelConfig(
+        name="tiny-hybrid", family="hybrid", n_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=128, dtype="float32",
+        block_pattern=repeat_pattern(("mamba2", "dense"), 2),
+        ssm=SSMConfig(state_dim=16, head_dim=16, chunk=4),
+        vocab_pad_multiple=8)
+    hm = Model(cfg)
+    assert hm.supports_paged_decode and not hm.supports_chunked_prefill
+    hp = hm.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ServingEngine(hm, hp, EngineConfig(max_batch=2, max_len=64,
+                                           paged=True, page_size=PS,
+                                           prefill_chunk=8))
+
+
+# ---------------------------------------------------------------- metering
+
+
+def test_modeled_j_per_token_invariant_to_chunk_size(parts):
+    """The paper's per-phase model attributes prefill at the request's true
+    prompt length — chunking changes the schedule, not the modeled energy.
+    Metered totals must be EXACTLY equal at chunk sizes {64, 256, full}."""
+    _, m, params = parts
+    rng = np.random.default_rng(5)
+    reqs = [dict(rid=i, prompt=list(rng.integers(0, 256, int(n))),
+                 max_new_tokens=4)
+            for i, n in enumerate((300, 100, 37))]  # spans many/1/partial
+    totals = {}
+    for chunk in (64, 256, 512):       # 512 >= every prompt: "full" chunks
+        _, eng = run_engine(m, params, reqs, prefill_chunk=chunk,
+                            max_batch=1, max_len=512)  # serial: decode
+        pf, dc = eng.meter.phase("prefill"), eng.meter.phase("decode")
+        totals[chunk] = (pf.tokens, pf.energy_j, pf.time_s,
+                         dc.tokens, dc.energy_j)
+    base = totals[64]
+    for chunk, t in totals.items():
+        assert t == base, f"chunk={chunk}: metered totals drifted"
+    assert base[0] == 300 + 100 + 37   # true prompt tokens, no padding
+
+
+def test_prefill_phase_totals_invariant_under_interleaving(parts):
+    """Even with decode interleaved (multi-slot), the PREFILL phase totals
+    must not depend on the chunk size."""
+    _, m, params = parts
+    rng = np.random.default_rng(6)
+    reqs = [dict(rid=i, prompt=list(rng.integers(0, 256, int(n))),
+                 max_new_tokens=7)
+            for i, n in enumerate((30, 9, 21, 14, 26))]
+    pf_totals = set()
+    for chunk in (4, 16, 64):
+        _, eng = run_engine(m, params, reqs, prefill_chunk=chunk)
+        pf = eng.meter.phase("prefill")
+        pf_totals.add((pf.steps, pf.tokens, pf.energy_j, pf.time_s))
+    assert len(pf_totals) == 1
+    (steps, tokens, _, _), = pf_totals
+    assert steps == len(reqs)          # one attribution per request
+    assert tokens == sum(len(r["prompt"]) for r in reqs)
+
+
+def test_monolithic_admission_meters_real_padded_launch(parts):
+    """Regression (admission metering fix): one bucketed admission batch
+    must be metered as ONE (n_pad, bucket) launch — real tokens attributed,
+    launch energy shared by true prompt length — not as n batch-1 launches
+    at exact length."""
+    _, m, params = parts
+    eng = ServingEngine(m, params, EngineConfig(max_batch=4, max_len=64))
+    rng = np.random.default_rng(2)
+    p0, p1, p2 = (list(rng.integers(0, 256, n)) for n in (9, 12, 16))
+    for i, p in enumerate((p0, p1, p2)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=1))
+    resps = {r.rid: r for r in eng.run()}
+    pf = eng.meter.phase("prefill")
+    assert pf.steps == 1               # ONE launch, not 3
+    assert pf.tokens == 9 + 12 + 16    # real tokens only
+    # the launch the device actually ran: n_pad=4 rows (pow2) x bucket 16
+    rep = step_energy(eng.profile,
+                      prefill_counts(eng.workload, 4, 16,
+                                     useful_seq=(9 + 12 + 16) / 4))
+    assert pf.energy_j == pytest.approx(rep.energy_j)
+    assert pf.time_s == pytest.approx(rep.t_total)
+    # per-request shares: energy split by true length, time = whole launch
+    for rid, L in ((0, 9), (1, 12), (2, 16)):
+        assert resps[rid].energy_j == pytest.approx(
+            rep.energy_j * L / (9 + 12 + 16))
+        assert resps[rid].prefill_s == pytest.approx(rep.t_total)
+
+
+# ---------------------------------------------------------------- jit reuse
+
+
+def test_jit_entries_reused_across_engines(parts):
+    """Regression guard for the module-level jit refactor: constructing and
+    running a SECOND engine with the same model config must not grow the
+    compile caches of the shared entry points."""
+    _, m, params = parts
+
+    def exercise():
+        for chunk in (None, CH):
+            eng = ServingEngine(m, params, EngineConfig(
+                max_batch=4, max_len=64, sync_every=8, paged=True,
+                page_size=PS, prefill_chunk=chunk))
+            eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5],
+                               max_new_tokens=6))
+            eng.submit(Request(rid=1, prompt=list(range(1, CH + 5)),
+                               max_new_tokens=4))
+            eng.run()
+
+    exercise()                         # populate caches (sizes may grow)
+    entries = (engine_mod._PREFILL, engine_mod._FUSED_STEPS,
+               engine_mod._INSERT_PAGED, engine_mod._CHUNK_PREFILL,
+               engine_mod._BEGIN_CHUNKED, engine_mod._ARM,
+               engine_mod._RELEASE)
+    sizes = [f._cache_size() for f in entries]
+    assert all(s > 0 for s in sizes[:2])
+    exercise()                         # same config: zero new traces
+    assert [f._cache_size() for f in entries] == sizes

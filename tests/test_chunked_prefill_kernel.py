@@ -1,0 +1,141 @@
+"""Chunked-prefill kernel: interpret-mode sweep vs the jnp oracle across
+chunk sizes x page sizes x GQA groups, the grid-spec traffic contract
+(one HBM read per (batch, kv head, logical page), independent of Hq and of
+chunk size), and trash-page isolation of unmapped pool rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.attention import gather_pages
+
+
+def make_case(rng, B, Hkv, hd, ps, num_pages, lens, max_pages, S):
+    """Pool + block tables for B slots whose prompts are ``lens`` tokens,
+    with the LAST min(S, len) tokens of each forming the current chunk
+    (pads marked -1 in q_pos, exactly as the engine slices prompts)."""
+    kp = jnp.asarray(rng.normal(size=(Hkv, num_pages + 1, ps, hd)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(Hkv, num_pages + 1, ps, hd)),
+                     jnp.float32)
+    perm = rng.permutation(num_pages)
+    tbl = np.full((B, max_pages), -1, np.int32)
+    kpos = np.full((B, max_pages * ps), -1, np.int32)
+    qpos = np.full((B, S), -1, np.int32)
+    pi = 0
+    for b, L in enumerate(lens):
+        npg = -(-L // ps)
+        tbl[b, :npg] = perm[pi:pi + npg]
+        pi += npg
+        kpos[b, :L] = np.arange(L)
+        nv = min(S, L)
+        qpos[b, :nv] = np.arange(L - nv, L)
+    return kp, vp, jnp.asarray(tbl), jnp.asarray(qpos), jnp.asarray(kpos)
+
+
+@pytest.mark.parametrize("group", [1, 2, 4])
+@pytest.mark.parametrize("page_size", [8, 16])
+@pytest.mark.parametrize("chunk_len", [4, 8, 16])
+def test_chunked_prefill_kernel_sweep(group, page_size, chunk_len):
+    """Sweep: history + partial chunk, chunk == full (short) prompt, and a
+    prompt whose chunk crosses a page boundary."""
+    B, Hkv, hd, M = 3, 2, 16, 4
+    Hq = group * Hkv
+    num_pages = B * M - 2              # pages shared tighter than B*M
+    lens = [2 * page_size + 5, 3, min(chunk_len + page_size - 1,
+                                      M * page_size)]
+    rng = np.random.default_rng(group * 31 + page_size * 7 + chunk_len)
+    kp, vp, tbl, qpos, kpos = make_case(rng, B, Hkv, hd, page_size,
+                                        num_pages, lens, M, chunk_len)
+    q = jnp.asarray(rng.normal(size=(B, Hq, chunk_len, hd)), jnp.float32)
+    got = ops.chunked_prefill_attention(q, kp, vp, tbl, qpos, kpos,
+                                        impl="pallas_interpret")
+    want = ref.chunked_prefill_attention(q, kp, vp, tbl, qpos, kpos)
+    for b, L in enumerate(lens):       # pad query rows are don't-cares
+        nv = min(chunk_len, L)
+        np.testing.assert_allclose(np.asarray(got)[b, :, :nv],
+                                   np.asarray(want)[b, :, :nv],
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_chunk_oracle_equals_contiguous_flash_on_gathered_view():
+    """The paged chunk oracle is exactly contiguous flash attention on the
+    block-table-gathered logical view — no separate math to trust."""
+    B, Hkv, hd, ps, M, S = 2, 2, 16, 8, 3, 8
+    rng = np.random.default_rng(3)
+    kp, vp, tbl, qpos, kpos = make_case(rng, B, Hkv, hd, ps, B * M,
+                                        [2 * ps + 3, 9], M, S)
+    q = jnp.asarray(rng.normal(size=(B, 4, S, hd)), jnp.float32)
+    want = ref.chunked_prefill_attention(q, kp, vp, tbl, qpos, kpos)
+    kk = jnp.moveaxis(gather_pages(kp, tbl), 1, 2)     # (B, Hkv, W, hd)
+    vv = jnp.moveaxis(gather_pages(vp, tbl), 1, 2)
+    base = ref.flash_attention(q, kk, vv, qpos, kpos)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(base), rtol=1e-6)
+
+
+@pytest.mark.parametrize("chunk_len", [8, 32])
+def test_chunked_prefill_grid_spec_contract(chunk_len):
+    """The chunked-prefill grid keeps the GQA-grouped traffic shape: kv
+    axis iterates logical pages, one (kv head, physical page) per block,
+    the whole (group, S) query chunk per program — page fetches are
+    independent of BOTH Hq and chunk size."""
+    B, Hq, Hkv, hd, ps, M, P = 2, 8, 2, 16, 8, 4, 6
+    spec = ops.chunked_prefill_grid_spec(B, Hq, Hkv, chunk_len, hd, hd,
+                                         page_size=ps, num_pages=P,
+                                         max_pages=M)
+    assert spec["grid"] == (B, Hkv, M)          # NOT (B, Hq, ...)
+    assert spec["group"] == 4
+    assert spec["chunk_len"] == chunk_len
+    assert spec["q_block"] == (1, 4, chunk_len, hd)
+    assert spec["k_block"] == (1, 1, ps, hd)    # ONE page, ONE kv head
+    assert spec["v_block"] == (1, 1, ps, hd)
+    assert spec["o_block"] == (1, 4, chunk_len, hd)
+    assert spec["kv_block_hbm_reads_per_group"] == 1
+    assert spec["kv_pool_shape"] == (Hkv, P + 1, ps)
+    b, h, nk = spec["grid"]
+    assert b * h * nk == B * Hkv * M            # chunk_len-independent
+
+
+def test_unmapped_pages_never_reach_the_chunk():
+    """Poisoning every physical page the block table does NOT map (incl.
+    the trash page) must not change the chunk's output."""
+    B, Hq, Hkv, hd, ps, M, S = 1, 4, 2, 16, 8, 3, 8
+    rng = np.random.default_rng(5)
+    kp, vp, tbl, qpos, kpos = make_case(rng, B, Hkv, hd, ps, 4, [ps + 3],
+                                        M, S)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, hd)), jnp.float32)
+    base = ops.chunked_prefill_attention(q, kp, vp, tbl, qpos, kpos,
+                                         impl="pallas_interpret")
+    mapped = {int(p) for p in np.asarray(tbl).ravel() if p >= 0}
+    poison = np.asarray(kp).copy()
+    for p in range(kp.shape[1]):
+        if p not in mapped:
+            poison[:, p] = 1e3
+    got = ops.chunked_prefill_attention(q, jnp.asarray(poison), vp, tbl,
+                                        qpos, kpos,
+                                        impl="pallas_interpret")
+    nv = min(S, ps + 3)
+    np.testing.assert_allclose(np.asarray(got)[:, :, :nv],
+                               np.asarray(base)[:, :, :nv], rtol=1e-6)
+
+
+def test_in_chunk_causality():
+    """A query at position p must see keys <= p only — including keys of
+    LATER tokens in its own chunk, which sit in the pool already."""
+    B, Hq, Hkv, hd, ps, M, S = 1, 2, 2, 16, 8, 2, 8
+    rng = np.random.default_rng(9)
+    kp, vp, tbl, qpos, kpos = make_case(rng, B, Hkv, hd, ps, 3, [S], M, S)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, hd)), jnp.float32)
+    full = ref.chunked_prefill_attention(q, kp, vp, tbl, qpos, kpos)
+    # zero out the keys/values of the LAST chunk token; earlier queries
+    # must be bit-identical (they never attended to it)
+    tbl_np = np.asarray(tbl)
+    pg, row = tbl_np[0, (S - 1) // ps], (S - 1) % ps
+    kz = np.asarray(kp).copy(); kz[:, pg, row] = 0.0
+    vz = np.asarray(vp).copy(); vz[:, pg, row] = 0.0
+    cut = ref.chunked_prefill_attention(q, jnp.asarray(kz), jnp.asarray(vz),
+                                        tbl, qpos, kpos)
+    np.testing.assert_array_equal(np.asarray(full)[:, :, :S - 1],
+                                  np.asarray(cut)[:, :, :S - 1])
