@@ -1,10 +1,14 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test kernels paged chunked check-clean verify bench-engine bench
+.PHONY: test test-all kernels paged chunked prefix check-clean verify \
+	bench-engine bench-smoke bench
 
-test:               ## tier-1 suite
+test:               ## tier-1 suite (fail fast: local inner loop)
 	$(PY) -m pytest -x -q
+
+test-all:           ## tier-1 suite, no -x: CI needs EVERY failure reported
+	$(PY) -m pytest -q -ra
 
 kernels:            ## interpret-mode Pallas kernel sweeps + fused-step tests
 	$(PY) -m pytest -q tests/test_kernels.py tests/test_engine_fused.py
@@ -17,16 +21,22 @@ chunked:            ## interpret-mode chunked-prefill kernel sweep + quantum-sch
 	$(PY) -m pytest -q tests/test_chunked_prefill_kernel.py \
 	    tests/test_chunked_parity.py
 
+prefix:             ## prefix-sharing parity + copy-on-write + refcount invariants
+	$(PY) -m pytest -q tests/test_prefix_sharing.py
+
 check-clean:        ## fail if compiled artifacts are tracked by git
 	@bad=$$(git ls-files | grep -E '(\.pyc$$|__pycache__/)' || true); \
 	if [ -n "$$bad" ]; then \
 	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
 	fi
 
-verify: check-clean test kernels paged chunked ## tier-1 plus interpret-mode kernel + paged + chunked sweeps
+verify: check-clean test kernels paged chunked prefix ## tier-1 plus interpret-mode kernel + paged + chunked + prefix sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py
+
+bench-smoke:        ## CI: every bench code path once, reduced size -> BENCH_engine_smoke.json
+	$(PY) benchmarks/engine_bench.py --smoke
 
 bench:              ## all paper-figure benchmarks + engine bench
 	$(PY) -m benchmarks.run

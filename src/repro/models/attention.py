@@ -383,6 +383,22 @@ def paged_chunk_write(cache: Dict, tbl: jax.Array, k: jax.Array,
     }
 
 
+def copy_page_rows(pages: jax.Array, src_pg: jax.Array,
+                   dst_pg: jax.Array) -> jax.Array:
+    """Copy whole pages ``src_pg[i] -> dst_pg[i]`` inside one pool leaf —
+    the data half of copy-on-write (serving/paged.py owns the refcount
+    half). pages: ([R,] Hkv, P+1, ps, hd); src_pg/dst_pg: (n,) physical
+    ids, dst < 0 = skip (the write is dropped past the pool edge). A page
+    is the CoW unit: the copy is one gather + one scatter per leaf, no
+    row-level bookkeeping."""
+    P1 = pages.shape[-3]
+    src = jnp.take(pages, jnp.clip(src_pg, 0, P1 - 1), axis=-3)
+    dst = jnp.where(dst_pg < 0, P1, dst_pg)             # P1 = out of bounds
+    if pages.ndim == 4:
+        return pages.at[:, dst].set(src, mode="drop")
+    return pages.at[:, :, dst].set(src, mode="drop")
+
+
 def gather_pages_hb(pages: jax.Array, tbl: jax.Array) -> jax.Array:
     """Head-major logical view (Hkv, B, W, hd) of a page pool, as ONE
     page-granular gather with no transpose — the decode hot path's layout

@@ -51,13 +51,34 @@ tests/test_chunked_parity.py); decode quanta keep their per-micro-step
 active-slot attribution. The wall-clock wins (TTFT, inter-token p99) are
 measured, not modeled — benchmarks/engine_bench.py tracks them via the
 per-token emission timestamps on ``Response.t_emit``.
+
+Prefix sharing (``prefix_sharing``, requires ``prefill_chunk``): production
+traffic is dominated by requests repeating a common prompt prefix (system
+prompts, few-shot templates), and the paper's embodied-carbon model
+(Eq. 2-4) charges each request for the memory the fleet must provision for
+it — so materializing one private copy of the same prefix per slot is pure
+embodied waste. A host-side prefix index (SHA-256 chain over page-size
+token chunks -> resident physical page run) lets admission map the shared
+pages of a new prompt straight into its block table with per-page refcounts
+(``paged.map_shared_prefix``); chunked prefill then starts at the first
+UNSHARED token, so only novel pages are computed and allocated — admission
+reserves only the unshared worst case, which is what multiplies concurrent
+capacity at equal pool bytes. Writes into a page with refcount > 1 (the
+recomputed tail token when the whole prompt is shared) go through
+copy-on-write (``paged.cow_chunk_pages``); release is decref-to-zero, and
+index entries drop when their page's last holder releases (weak index: no
+eviction policy needed — concurrent requests share, the pool never pins
+dead prefixes). The decode and chunked-prefill kernels need NO change: the
+block table already indirects every read, which is the design's proof of
+leverage.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,11 +109,18 @@ def _prefill_fn(model, params, tokens, mask, key, *, max_len, vocab,
 
 
 def _chunk_prefill_fn(model, params, caches, tokens, mask, slots, key, *,
-                      vocab, temperature, page_size):
+                      vocab, temperature, page_size, sharing=False):
     """One chunked-prefill step: allocate the chunk's pages, run the chunk
     through the model against a gathered slot view (its KV scatters into
     the pool, its queries see the slots' whole logical history), and sample
-    a candidate next token (only meaningful after the LAST chunk)."""
+    a candidate next token (only meaningful after the LAST chunk).
+
+    ``sharing`` additionally privatizes (copy-on-write) any page the chunk
+    writes that is mapped with refcount > 1 — only possible when the slot
+    adopted a shared prefix covering its whole prompt and now recomputes
+    the last prompt token for first-token logits. Returns the slots'
+    block-table rows too, so the host can register the prompt's pages in
+    the prefix index at the last chunk without an extra sync."""
     nv = mask.sum(axis=1).astype(jnp.int32)              # (n,) valid tokens
     t0 = caches["t"][slots]
     start_pg = (t0 + page_size - 1) // page_size
@@ -100,11 +128,15 @@ def _chunk_prefill_fn(model, params, caches, tokens, mask, slots, key, *,
     caches = dict(caches)
     caches["paged"] = paged.alloc_chunk_pages(caches["paged"], slots,
                                               start_pg, end_pg)
+    if sharing:
+        caches = paged.cow_chunk_pages(
+            caches, slots, t0, nv, page_size,
+            span=tokens.shape[1] // page_size + 1)
     view = paged.gather_slot_view(caches, slots)
     last, view = model.prefill_chunk(params, view, tokens, mask)
     caches = paged.scatter_slot_view(caches, view, slots)
     first = sampling.sample(last[:, :vocab], key, temperature)
-    return first, caches
+    return first, caches["paged"]["tbl"][slots], caches
 
 
 _PREFILL = jax.jit(_prefill_fn, static_argnums=(0,),
@@ -118,8 +150,9 @@ _INSERT_PAGED = jax.jit(paged.insert_prefill_paged,
 _RELEASE = jax.jit(paged.release_slots)
 _CHUNK_PREFILL = jax.jit(_chunk_prefill_fn, static_argnums=(0,),
                          static_argnames=("vocab", "temperature",
-                                          "page_size"))
+                                          "page_size", "sharing"))
 _BEGIN_CHUNKED = jax.jit(paged.begin_chunked_prefill)
+_MAP_PREFIX = jax.jit(paged.map_shared_prefix)
 _ARM = jax.jit(sampling.arm_slots)
 
 
@@ -153,6 +186,14 @@ class EngineConfig:
     # None = monolithic admission prefill (the parity oracle). 256 is the
     # production default; tests/benches use smaller chunks.
     prefill_chunk: Optional[int] = None
+    # page-level prefix sharing (requires prefill_chunk): requests whose
+    # prompts repeat a page-aligned prefix already resident in the pool map
+    # those pages into their block table by refcount instead of recomputing
+    # and re-storing them — admission reserves only the UNSHARED worst
+    # case, prefill starts at the first unshared token, and writes into
+    # shared pages go through copy-on-write. Off by default: the unshared
+    # paged engine is the token-for-token parity oracle.
+    prefix_sharing: bool = False
 
 
 class ServingEngine:
@@ -231,14 +272,52 @@ class ServingEngine:
             # tracks how many prompt tokens are already in the pool
             self._prefilling: deque = deque()
 
+        self.sharing = cfg.prefix_sharing
+        if self.sharing:
+            if not self.chunked:
+                raise ValueError(
+                    "prefix_sharing requires chunked prefill (prefill_chunk "
+                    "set): sharing works by starting the chunk schedule at "
+                    "the first unshared token")
+            # host-side prefix index: SHA-256 chain digest of the first
+            # (i+1) page-size token chunks -> physical page holding chunk i.
+            # WEAK entries: an index page is always mapped by >= 1 live
+            # slot; _page_ref mirrors the device refcount for indexed pages
+            # (all sharing traffic originates host-side, so the mirror is
+            # exact) and the entry drops at decref-to-zero.
+            self._prefix_index: Dict[bytes, int] = {}
+            self._page_key: Dict[int, bytes] = {}        # reverse map
+            self._page_ref: Dict[int, int] = {}
+            # per-slot indexed pages: adopted from the index at admission
+            # (not in this slot's reservation) vs registered by this slot
+            # (popped under its reservation) — release accounting differs
+            self._slot_shared_in: Dict[int, List[int]] = {}
+            self._slot_own_idx: Dict[int, List[int]] = {}
+            self.prefix_hit_tokens = 0     # prompt tokens never recomputed
+            self.prefix_shared_requests = 0
+            self.peak_shared_mappings = 0  # extra mappings beyond 1st copy
+
     # ------------------------------------------------------------- metering
     def _meter_prefill(self, batch: int, seq: int,
-                       useful_seq: Optional[float] = None):
+                       useful_seq: Optional[float] = None, skip: int = 0):
         """Meter one prefill launch of ``batch`` sequences padded to
         ``seq``; ``useful_seq`` (mean real tokens per row) attributes only
-        the real tokens while the energy covers the whole padded launch."""
+        the real tokens while the energy covers the whole padded launch.
+        ``skip`` > 0 (prefix sharing, batch 1) removes the cost of the
+        first ``skip`` tokens — their compute and KV writes never ran;
+        the difference prefill(seq) - prefill(skip) is exactly the cost
+        of computing the suffix with attention over the full prefix."""
         counts = prefill_counts(self.workload, batch, seq,
                                 useful_seq=useful_seq)
+        if skip > 0:
+            base = prefill_counts(self.workload, batch, skip)
+            counts = dataclasses.replace(
+                counts, flops=counts.flops - base.flops,
+                # the suffix launch still streams the weights once
+                hbm_bytes=(counts.hbm_bytes - base.hbm_bytes
+                           + self.workload.params_bytes),
+                kv_bytes=counts.kv_bytes - base.kv_bytes,
+                compute_tokens=counts.compute_tokens - base.compute_tokens)
         rep = step_energy(self.profile, counts)
         self.meter.record("prefill", rep.tokens, rep.t_total, rep.energy_j)
         return rep
@@ -280,6 +359,41 @@ class ServingEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    # ------------------------------------------------------- prefix sharing
+    def _prompt_page_keys(self, req: Request) -> List[bytes]:
+        """Chain digest per full page-size chunk of the prompt: key[i]
+        commits to tokens [0, (i+1)*page_size), so an index hit at i means
+        the WHOLE prefix through page i matches — not just that one chunk.
+        Cached on the request (waiting requests re-match every admission
+        pass as the index fills)."""
+        if req.prefix_keys is None:
+            ps = self.cfg.page_size
+            keys: List[bytes] = []
+            h = hashlib.sha256()
+            for i in range(len(req.prompt) // ps):
+                h.update(np.asarray(req.prompt[i * ps:(i + 1) * ps],
+                                    np.int64).tobytes())
+                keys.append(h.digest())
+            req.prefix_keys = keys
+        return req.prefix_keys
+
+    def _match_prefix(self, req: Request) -> Tuple[int, List[int]]:
+        """Longest resident prefix of the prompt: (#shared whole pages,
+        their physical ids, in logical order)."""
+        phys: List[int] = []
+        for k in self._prompt_page_keys(req):
+            p = self._prefix_index.get(k)
+            if p is None:
+                break
+            phys.append(p)
+        return len(phys), phys
+
+    def _drop_index_page(self, p: int) -> None:
+        key = self._page_key.pop(p, None)
+        if key is not None:
+            self._prefix_index.pop(key, None)
+        self._page_ref.pop(p, None)
+
     def _reject(self, req: Request) -> None:
         """Fail a request that can never fit the pool (prompt alone exceeds
         total capacity) without admitting it."""
@@ -289,7 +403,14 @@ class ServingEngine:
 
     def _release_slots(self, slots: List[int]) -> None:
         """Return finished slots' pages to the pool: device free stack
-        (actual mapped pages) + host reservation mirror."""
+        (actual mapped pages, decref-to-zero) + host reservation mirror.
+
+        With prefix sharing the per-slot flows are asymmetric but the
+        global mirror stays exact: a page this slot POPPED (reserved) that
+        others still reference is NOT freed (give back one page fewer),
+        and a page this slot merely adopted whose refcount just hit zero
+        IS freed (give back one page more) — every physical page is
+        charged once by its popper and credited once by its last holder."""
         if not self.paged or not slots:
             return
         mask = np.zeros((self.cfg.max_batch,), bool)
@@ -298,7 +419,20 @@ class ServingEngine:
         self.caches["paged"] = _RELEASE(self.caches["paged"],
                                         jnp.asarray(mask))
         for s in slots:
-            self.free_pages += self._slot_pages[s]
+            ret = self._slot_pages[s]
+            if self.sharing:
+                for p in self._slot_own_idx.pop(s, []):
+                    self._page_ref[p] -= 1
+                    if self._page_ref[p] <= 0:
+                        self._drop_index_page(p)
+                    else:
+                        ret -= 1       # survives under someone else's map
+                for p in self._slot_shared_in.pop(s, []):
+                    self._page_ref[p] -= 1
+                    if self._page_ref[p] <= 0:
+                        self._drop_index_page(p)
+                        ret += 1       # last holder frees the original
+            self.free_pages += ret
             self._slot_pages[s] = 0
 
     # ------------------------------------------------------------ admission
@@ -315,22 +449,37 @@ class ServingEngine:
             return 0                   # defer admissions; drain active work
         free = self.free_slots()
         take: List[Request] = []
+        share: Dict[int, Tuple[int, List[int], int]] = {}
         while len(take) < len(free) and self.queue:
             req = self.queue[0]
             if self.paged:
                 L = len(req.prompt)
                 ps = self.cfg.page_size
-                resv = paged.pages_needed(
+                n_total = paged.pages_needed(
                     L + max(req.max_new_tokens - 1, 0), ps)
                 # pages have no ring eviction: a request whose prompt +
                 # decode budget exceeds the block table (max_len) or the
                 # whole pool can NEVER be represented — reject it instead
                 # of admitting into silent context loss (the contiguous
-                # engine ring-wraps such requests; paged must refuse them)
-                if resv > self.max_pages_slot or resv > self.num_pages:
+                # engine ring-wraps such requests; paged must refuse them).
+                # The unshared worst case decides: shared pages are a
+                # transient property of current residents, not capacity.
+                if n_total > self.max_pages_slot or n_total > self.num_pages:
                     self.queue.popleft()
                     self._reject(req)
                     continue
+                resv = n_total
+                if self.sharing:
+                    # reserve only the UNSHARED worst case: the pages this
+                    # request will itself pop — novel prompt pages + decode
+                    # budget + (when the whole prompt is shared) the one
+                    # copy-on-write pop for the recomputed tail token.
+                    # Matching is re-done on every admission pass: the
+                    # index fills as earlier residents finish prefilling.
+                    n_pg, phys = self._match_prefix(req)
+                    first_tok = min(n_pg * ps, L - 1)
+                    resv = n_total - first_tok // ps
+                    share[req.rid] = (n_pg, phys, first_tok)
                 if resv > self.free_pages:
                     break              # keep waiting (FCFS, no overtaking)
                 self.free_pages -= resv
@@ -360,6 +509,9 @@ class ServingEngine:
                 slots.append(slot)
             self.caches = _BEGIN_CHUNKED(self.caches,
                                          jnp.asarray(slots, jnp.int32))
+            if self.sharing:
+                for req, slot in zip(take, slots):
+                    self._adopt_prefix(req, slot, *share[req.rid])
             return len(take)
         # bucket prompts: padded power-of-two buckets when the model masks
         # pad tokens exactly; exact-length groups otherwise (rwkv/enc-dec).
@@ -447,6 +599,48 @@ class ServingEngine:
             self._slot_armed[slot] = True
         self._release_slots(released)
 
+    def _adopt_prefix(self, req: Request, slot: int, n_pg: int,
+                      phys: List[int], first_tok: int) -> None:
+        """Map a matched prefix run into the freshly claimed slot (device
+        increfs + logical-history rows) and start its chunk schedule at
+        the first unshared token."""
+        self._slot_shared_in[slot] = []
+        self._slot_own_idx[slot] = []
+        if n_pg == 0:
+            return
+        pages = np.full((self.max_pages_slot,), -1, np.int32)
+        pages[:n_pg] = phys
+        self.caches = _MAP_PREFIX(
+            self.caches, jnp.asarray(slot, jnp.int32), jnp.asarray(pages),
+            jnp.asarray(n_pg * self.cfg.page_size, jnp.int32),
+            jnp.asarray(first_tok, jnp.int32))
+        req.prefill_pos = first_tok
+        req.shared_prefix_tokens = first_tok
+        for p in phys:
+            self._page_ref[p] += 1
+        self._slot_shared_in[slot] = list(phys)
+        self.prefix_hit_tokens += first_tok
+        self.prefix_shared_requests += 1
+        cur = sum(len(v) for v in self._slot_shared_in.values())
+        self.peak_shared_mappings = max(self.peak_shared_mappings, cur)
+
+    def _register_prefix(self, req: Request, slot: int,
+                         row: np.ndarray) -> None:
+        """After the LAST chunk, publish the prompt's whole pages into the
+        prefix index (``row`` is the slot's block-table row, fetched with
+        the first-token sync — no extra device round-trip). First writer
+        wins: a page already indexed under the same key (this slot adopted
+        it, or a concurrent twin prefilled the same novel prefix) is not
+        re-registered; the slot's private duplicate stays untracked."""
+        own = self._slot_own_idx.setdefault(slot, [])
+        for i, key in enumerate(self._prompt_page_keys(req)):
+            p = int(row[i])
+            if key not in self._prefix_index:
+                self._prefix_index[key] = p
+                self._page_key[p] = key
+                self._page_ref[p] = self._page_ref.get(p, 0) + 1
+                own.append(p)
+
     # ------------------------------------------------------ chunked prefill
     def _prefill_quantum(self) -> int:
         """Run AT MOST ONE prefill chunk (head of the FCFS prefilling
@@ -457,29 +651,51 @@ class ServingEngine:
             return 0
         req, slot = self._prefilling[0]
         C = self.cfg.prefill_chunk
-        piece = req.prompt[req.prefill_pos:req.prefill_pos + C]
+        pos0 = req.prefill_pos
+        piece = req.prompt[pos0:pos0 + C]
         nv = len(piece)
         tokens = np.zeros((1, C), np.int32)
         mask = np.zeros((1, C), np.int32)
         tokens[0, :nv] = piece
         mask[0, :nv] = 1
-        first, self.caches = _CHUNK_PREFILL(
+        first, tbl_row, self.caches = _CHUNK_PREFILL(
             self.model, self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(mask), jnp.asarray([slot], jnp.int32),
             self._next_key(), vocab=self.model.cfg.vocab,
-            temperature=self.cfg.temperature, page_size=self.cfg.page_size)
+            temperature=self.cfg.temperature, page_size=self.cfg.page_size,
+            sharing=self.sharing)
         self.prefill_chunks += 1
         req.prefill_pos += nv
+        if self.sharing and nv > 0:
+            # mirror the device's copy-on-write: if this chunk wrote into
+            # an adopted page still shared (refcount > 1), the device
+            # swapped in a private copy — the slot no longer maps the
+            # indexed original. Sole-owner pages are written in place and
+            # stay mapped (and indexed; the rewrite recomputes identical
+            # rows, so the index entry remains valid).
+            shared = self._slot_shared_in.get(slot) or []
+            lp = pos0 // self.cfg.page_size
+            if lp < len(shared) and self._page_ref[shared[lp]] > 1:
+                self._page_ref[shared[lp]] -= 1
+                self._slot_shared_in[slot] = shared[:lp]
         if req.prefill_pos < len(req.prompt):
             return 1                   # intermediate chunk: no host sync
         # last chunk: its sampled token is the request's first emission
         self._prefilling.popleft()
-        first_h = np.asarray(jax.device_get(first))
+        first_h, row_h = jax.device_get((first, tbl_row))
+        first_h = np.asarray(first_h)
+        if self.sharing:
+            self._register_prefix(req, slot, np.asarray(row_h)[0])
         self.prefill_batches += 1      # one first-token host sync
         # chunking changes the schedule, not the modeled energy: attribute
         # the request's prefill at its true prompt length exactly once, so
-        # modeled J/token is invariant to the prefill_chunk choice
-        rep = self._meter_prefill(1, len(req.prompt))
+        # modeled J/token is invariant to the prefill_chunk choice. Prefix
+        # sharing DOES change the modeled energy — the shared tokens'
+        # compute genuinely never ran — so their cost is subtracted while
+        # the request still accounts its full prompt as served tokens
+        # (operational J/prompt-token falls with every cache hit).
+        rep = self._meter_prefill(1, len(req.prompt),
+                                  skip=req.shared_prefix_tokens)
         resp = self.responses[req.rid]
         resp.prefill_s += rep.t_total
         resp.energy_j += rep.energy_j
@@ -629,6 +845,23 @@ class ServingEngine:
                 "chunked": 1.0,
                 "prefill_chunk": self.cfg.prefill_chunk,
                 "prefill_chunks": self.prefill_chunks,
+            })
+        if self.sharing:
+            out.update({
+                "prefix_sharing": 1.0,
+                # prompt tokens served straight from resident pages —
+                # compute and pages that were never spent again
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_shared_requests": self.prefix_shared_requests,
+                # peak EXTRA block-table mappings of already-provisioned
+                # pages (the dedup: each is a page some other slot would
+                # have forced the fleet to provision again)...
+                "shared_pages": self.peak_shared_mappings,
+                # ...while unique_pages is the physical footprint that
+                # actually backed peak load — shared pages counted ONCE,
+                # which is why peak_kv_rows_reserved (the Eq. 2-4 embodied
+                # input) falls under prefix-heavy traffic
+                "unique_pages": self.peak_pages_reserved,
             })
         out.update({
             "requests": len(self.responses),

@@ -23,6 +23,18 @@ has identical occupancy, so one block table serves all layers)::
     tbl  : (B, max_pages) int32 physical page per logical page, -1 = none
     free : (num_pages,)   int32 stack; free[:top] are free page ids
     top  : ()             int32 free-page count
+    ref  : (num_pages,)   int32 per-page reference count (# block-table
+                          entries mapping the page; 0 = free)
+
+Prefix sharing (PR 4): a physical page may be mapped by SEVERAL slots'
+block tables when their prompts share a page-aligned prefix — the engine's
+host-side prefix index maps token-chunk hashes to resident page runs and
+``map_shared_prefix`` increfs them into a new slot's table, so the shared
+prefix is provisioned once (the embodied-carbon lever: Eq. 2-4 charge per
+request falls with deduplicated HBM). Release is decref-to-zero
+(``release_slots``); a write into a page with refcount > 1 must first go
+through copy-on-write (``cow_chunk_pages``): pop a fresh page, copy the
+rows, swap the table entry, decref the original.
 
 Page ``num_pages`` (the last row of the pools) is a TRASH page: writes
 whose slot has no page mapped (finished slots coasting inside a fused
@@ -31,10 +43,15 @@ logical pages read from there — always masked because the *logical*
 ``pos_ids`` row is -1. Keeping positions logical (they cost W ints per
 slot, not W*Hkv*hd) means a recycled physical page needs no scrubbing.
 
-Allocator invariants (property-tested in tests/test_page_allocator.py):
-  * a physical page is mapped by at most one live slot (no aliasing);
-  * top + #mapped == num_pages at every step (conservation);
-  * released pages are immediately reusable (LIFO pop).
+Allocator invariants (property-tested in tests/test_page_allocator.py and
+tests/test_prefix_sharing.py):
+  * ``ref[p]`` equals the number of live block-table entries mapping ``p``
+    (writable pages have refcount exactly 1 — aliased WRITES are the bug
+    class copy-on-write exists to prevent);
+  * top + #uniquely-mapped == num_pages at every step (conservation:
+    shared pages count once);
+  * pages return to the free stack exactly at decref-to-zero, and are
+    immediately reusable.
 
 Alloc-on-write: ``alloc_decode_pages`` runs inside the fused decode scan
 and pops a page only for ACTIVE slots crossing a page boundary
@@ -52,7 +69,8 @@ import jax.numpy as jnp
 
 # layout ops live with the rest of the KV-cache code; re-exported here so
 # serving code has one import surface for everything paged
-from repro.models.attention import gather_pages, paged_decode_write  # noqa: F401
+from repro.models.attention import (copy_page_rows, gather_pages,  # noqa: F401
+                                    paged_decode_write)
 
 # keys identifying a pageable attention-KV leaf group inside a cache tree
 _KV_KEYS = {"k", "v", "pos_ids", "length"}
@@ -68,13 +86,25 @@ def init_allocator(max_batch: int, max_pages_per_slot: int,
         "tbl": jnp.full((max_batch, max_pages_per_slot), -1, jnp.int32),
         "free": jnp.arange(num_pages, dtype=jnp.int32),
         "top": jnp.asarray(num_pages, jnp.int32),
+        "ref": jnp.zeros((num_pages,), jnp.int32),
     }
+
+
+def _set_ref(ref: jax.Array, pages: jax.Array, ok: jax.Array) -> jax.Array:
+    """Mark freshly popped pages as singly referenced (scatter, drop-pad)."""
+    P = ref.shape[0]
+    idx = jnp.where(ok, pages, P).reshape(-1)
+    return ref.at[idx].set(1, mode="drop")
 
 
 def alloc_decode_pages(alloc: Dict, lengths: jax.Array, active: jax.Array,
                        page_size: int) -> Dict:
     """Pop one page for every ACTIVE slot whose next token starts a new
-    logical page. lengths: (B,) tokens already cached; active: (B,) bool."""
+    logical page. lengths: (B,) tokens already cached; active: (B,) bool.
+    Popped pages come off the free stack with refcount 0 and enter the
+    table singly referenced — decode appends therefore never target a
+    shared page (the engine's prefill CoW privatized any shared page the
+    slot could still write; see cow_chunk_pages)."""
     tbl, free, top = alloc["tbl"], alloc["free"], alloc["top"]
     B, M = tbl.shape
     P = free.shape[0]
@@ -89,7 +119,8 @@ def alloc_decode_pages(alloc: Dict, lengths: jax.Array, active: jax.Array,
     tbl = tbl.at[bidx, lp_c].set(
         jnp.where(ok, pages, tbl[bidx, lp_c]))
     return {"tbl": tbl, "free": free,
-            "top": top - ok.astype(jnp.int32).sum()}
+            "top": top - ok.astype(jnp.int32).sum(),
+            "ref": _set_ref(alloc["ref"], pages, ok)}
 
 
 def alloc_prefill_pages(alloc: Dict, slots: jax.Array,
@@ -107,7 +138,8 @@ def alloc_prefill_pages(alloc: Dict, slots: jax.Array,
     ok = need & (take >= 0)
     tbl = tbl.at[slots].set(jnp.where(ok, pages, -1))
     return {"tbl": tbl, "free": free,
-            "top": top - ok.astype(jnp.int32).sum()}
+            "top": top - ok.astype(jnp.int32).sum(),
+            "ref": _set_ref(alloc["ref"], pages, ok)}
 
 
 def alloc_chunk_pages(alloc: Dict, slots: jax.Array, start_pg: jax.Array,
@@ -129,21 +161,46 @@ def alloc_chunk_pages(alloc: Dict, slots: jax.Array, start_pg: jax.Array,
     ok = need & (take >= 0)                             # guard underflow
     rows = jnp.where(ok, pages, tbl[slots])
     return {"tbl": tbl.at[slots].set(rows), "free": free,
-            "top": top - ok.astype(jnp.int32).sum()}
+            "top": top - ok.astype(jnp.int32).sum(),
+            "ref": _set_ref(alloc["ref"], pages, ok)}
+
+
+def map_shared_pages(alloc: Dict, slot: jax.Array,
+                     pages: jax.Array) -> Dict:
+    """Map an already-resident page run (``pages``: (max_pages,) physical
+    ids, -1 padded) into logical pages 0.. of ``slot``'s block-table row,
+    incrementing each page's refcount. The pages stay where their original
+    owner popped them — this is the whole point: N slots, one copy."""
+    tbl, free, top, ref = (alloc["tbl"], alloc["free"], alloc["top"],
+                           alloc["ref"])
+    P = free.shape[0]
+    m = pages >= 0
+    tbl = tbl.at[slot].set(jnp.where(m, pages, tbl[slot]))
+    ref = ref.at[jnp.where(m, pages, P)].add(1, mode="drop")
+    return {"tbl": tbl, "free": free, "top": top, "ref": ref}
 
 
 def release_slots(alloc: Dict, released: jax.Array) -> Dict:
-    """Push every page mapped by the ``released`` (B,) bool slots back onto
-    the free stack and clear their block-table rows."""
-    tbl, free, top = alloc["tbl"], alloc["free"], alloc["top"]
+    """Decrement the refcount of every page mapped by the ``released``
+    (B,) bool slots and clear their block-table rows; pages reaching
+    refcount zero go back on the free stack (shared prefix pages survive
+    until their LAST holder releases)."""
+    tbl, free, top, ref = (alloc["tbl"], alloc["free"], alloc["top"],
+                           alloc["ref"])
     P = free.shape[0]
-    rel = (released[:, None] & (tbl >= 0)).reshape(-1)
-    rank = jnp.cumsum(rel.astype(jnp.int32)) - 1
-    dest = jnp.where(rel, top + rank, P)                # P = out of bounds
-    free = free.at[dest].set(tbl.reshape(-1), mode="drop")
+    rel = released[:, None] & (tbl >= 0)
+    pages = jnp.where(rel, tbl, P)                      # P = dropped
+    drops = jnp.zeros((P,), jnp.int32).at[pages.reshape(-1)].add(
+        1, mode="drop")                                 # decrefs per page
+    ref = ref - drops
+    freed = (drops > 0) & (ref <= 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    dest = jnp.where(freed, top + rank, P)              # P = out of bounds
+    free = free.at[dest].set(jnp.arange(P, dtype=jnp.int32), mode="drop")
     tbl = jnp.where(released[:, None], -1, tbl)
     return {"tbl": tbl, "free": free,
-            "top": top + rel.astype(jnp.int32).sum()}
+            "top": top + freed.astype(jnp.int32).sum(),
+            "ref": jnp.maximum(ref, 0)}
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
@@ -350,6 +407,95 @@ def begin_chunked_prefill(pool: Dict, slots: jax.Array) -> Dict:
     return _walk_paged(leafgroup,
                        lambda stacked, p: rows(p, 0, stacked),
                        lambda p: p, pool)
+
+
+def map_shared_prefix(pool: Dict, slot: jax.Array, pages: jax.Array,
+                      n_shared: jax.Array, start_tok: jax.Array) -> Dict:
+    """Adopt an already-resident prefix into a freshly admitted slot.
+
+    ``pages``: (max_pages,) physical page ids from the engine's prefix
+    index, -1 padded; they cover logical tokens [0, n_shared). The run is
+    increfed into the slot's block table (``map_shared_pages``), the
+    slot's logical rows [0, n_shared) are marked as valid history
+    (``pos_ids`` = 0..n_shared-1 — the shared pool rows already hold the
+    prefix KV, so they unmask immediately), and the write cursors
+    (``length`` / ``t``) are set to ``start_tok``, the first token the
+    slot will actually COMPUTE. ``start_tok`` < ``n_shared`` only when
+    the whole prompt is shared: the last prompt token is recomputed to
+    produce first-token logits, and that write lands in a shared page —
+    which is exactly what ``cow_chunk_pages`` privatizes first."""
+    alloc = map_shared_pages(pool["paged"], slot, pages)
+
+    def rows(d, value, stacked):
+        if stacked:
+            value = jnp.broadcast_to(value, d.shape[:1] + jnp.shape(value))
+            return d.at[:, slot].set(value)
+        return d.at[slot].set(value)
+
+    def leafgroup(stacked, p):
+        W = p["pos_ids"].shape[-1]
+        posrow = jnp.where(jnp.arange(W) < n_shared, jnp.arange(W), -1)
+        return {**p, "pos_ids": rows(p["pos_ids"], posrow, stacked),
+                "length": rows(p["length"], start_tok, stacked)}
+
+    def plain(stacked, p):
+        return rows(p, start_tok.astype(p.dtype), stacked)
+
+    return _walk_paged(leafgroup, plain, lambda a: alloc, pool)
+
+
+def cow_chunk_pages(pool: Dict, slots: jax.Array, start_tok: jax.Array,
+                    n_tok: jax.Array, page_size: int, span: int) -> Dict:
+    """Copy-on-write for the logical pages the next chunk write touches.
+
+    slots/start_tok/n_tok: (n,) int32 — the chunk writes tokens
+    [start_tok, start_tok + n_tok) of each slot. ``span`` (static) bounds
+    the pages one chunk can touch (chunk_tokens // page_size + 1). Any
+    touched page mapped with refcount > 1 is privatized BEFORE the write:
+    pop a fresh page, copy its rows in every KV leaf, swap the table
+    entry, decref the original. Sole-owner pages (refcount 1) are written
+    in place. The engine's worst-case reservation covers these pops, so
+    the stack cannot underflow."""
+    alloc = pool["paged"]
+    tbl, free, top, ref = (alloc["tbl"], alloc["free"], alloc["top"],
+                           alloc["ref"])
+    M = tbl.shape[1]
+    P = free.shape[0]
+    lp = start_tok[:, None] // page_size + jnp.arange(span)[None, :]
+    last = (start_tok + jnp.maximum(n_tok, 1) - 1) // page_size
+    valid = (n_tok[:, None] > 0) & (lp <= last[:, None]) & (lp < M)
+    phys = tbl[slots[:, None], jnp.clip(lp, 0, M - 1)]   # (n, span)
+    do = valid & (phys >= 0) & (ref[jnp.clip(phys, 0, P - 1)] > 1)
+    rank = jnp.cumsum(do.reshape(-1).astype(jnp.int32)) - 1
+    take = (top - 1 - rank).reshape(do.shape)
+    fresh = free[jnp.clip(take, 0, P - 1)]
+    ok = do & (take >= 0)                                # guard underflow
+    tbl = tbl.at[slots[:, None], lp].set(jnp.where(ok, fresh, phys),
+                                         mode="drop")
+    dec = jnp.zeros((P,), jnp.int32).at[
+        jnp.where(ok, phys, P).reshape(-1)].add(1, mode="drop")
+    ref = ref - dec
+    ref = ref.at[jnp.where(ok, fresh, P).reshape(-1)].set(1, mode="drop")
+    # two slots CoW-ing the SAME page in one call each decref it: a page
+    # dropping to zero here has no holders left and must return to the
+    # stack (conservation), exactly as in release_slots
+    new_top = top - ok.astype(jnp.int32).sum()
+    freed = (dec > 0) & (ref <= 0)
+    rank_f = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    dest = jnp.where(freed, new_top + rank_f, P)
+    free = free.at[dest].set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+    alloc = {"tbl": tbl, "free": free,
+             "top": new_top + freed.astype(jnp.int32).sum(),
+             "ref": jnp.maximum(ref, 0)}
+    src_pg = jnp.where(ok, phys, 0).reshape(-1)
+    dst_pg = jnp.where(ok, fresh, -1).reshape(-1)        # -1 = dropped
+
+    def leafgroup(stacked, d):
+        return {**d, "k_pages": copy_page_rows(d["k_pages"], src_pg, dst_pg),
+                "v_pages": copy_page_rows(d["v_pages"], src_pg, dst_pg)}
+
+    return _walk_paged(leafgroup, lambda stacked, x: x,
+                       lambda a: alloc, pool)
 
 
 def gather_slot_view(pool: Dict, slots: jax.Array) -> Dict:

@@ -17,6 +17,12 @@ class Request:
     # scheduler advances this one `prefill_chunk` slice at a time while
     # decode slots keep running)
     prefill_pos: int = 0
+    # prefix sharing: chain digest per whole page of the prompt (computed
+    # lazily by the engine; waiting requests re-match every admission pass
+    # as the index fills, so the keys are cached here), and how many prompt
+    # tokens were adopted from resident pages instead of recomputed
+    prefix_keys: Optional[List[bytes]] = None
+    shared_prefix_tokens: int = 0
 
 
 @dataclasses.dataclass

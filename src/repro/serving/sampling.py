@@ -70,7 +70,13 @@ def fused_decode_steps(model, params, caches, cur_tokens: jax.Array,
     shared allocator): before each micro-step, alloc-on-write pops a free
     page for every ACTIVE slot whose next token starts a new logical page —
     inactive slots never allocate, so finished slots coasting to the chunk
-    boundary write to the trash page instead of draining the pool.
+    boundary write to the trash page instead of draining the pool. Popped
+    pages enter the table singly referenced; decode appends never need
+    copy-on-write because by the time a slot is armed, the page holding
+    its last cached token is private (prefix-sharing CoW runs in the
+    chunked-prefill path) and every later page is popped fresh — the
+    refcounted-allocator suite (tests/test_prefix_sharing.py) asserts no
+    write ever lands in a page with refcount > 1.
 
     ``freeze_inactive`` (chunked-prefill engines) restores inactive slots'
     write cursors to their pre-step values after each micro-step

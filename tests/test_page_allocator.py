@@ -1,10 +1,13 @@
 """Property-based tests of the on-device page allocator.
 
 Random interleavings of bulk prefill allocation, alloc-on-write decode
-steps, and slot release must preserve the allocator invariants the paged
-engine's correctness rests on: no page is ever mapped by two live slots,
-pages are conserved (free + mapped == pool), and released pages come back
-reusable. The allocator runs jitted exactly as in the engine.
+steps, prefix-sharing adoption, copy-on-write, and slot release must
+preserve the allocator invariants the paged engine's correctness rests on:
+``ref[p]`` equals the number of live block-table entries mapping ``p``
+(without sharing, no page is ever mapped twice), pages are conserved
+counting shared pages ONCE (free + uniquely-mapped == pool), pages free
+exactly at decref-to-zero, and released pages come back reusable. The
+allocator runs jitted exactly as in the engine.
 """
 import numpy as np
 import pytest
@@ -25,11 +28,32 @@ _alloc_prefill = jax.jit(paged.alloc_prefill_pages)
 _alloc_decode = jax.jit(paged.alloc_decode_pages,
                         static_argnames=("page_size",))
 _release = jax.jit(paged.release_slots)
+_map_shared = jax.jit(paged.map_shared_pages)
+
+
+def check_ref_invariants(a):
+    """Refcount truths that hold under ANY op mix (sharing included):
+    ref mirrors the block table exactly, and the pool partitions into the
+    free stack plus the uniquely-mapped pages."""
+    tbl, free, top, ref = (np.asarray(a["tbl"]), np.asarray(a["free"]),
+                           int(a["top"]), np.asarray(a["ref"]))
+    counts = np.bincount(tbl[tbl >= 0].reshape(-1), minlength=P)
+    assert (ref == counts).all(), "refcounts != block-table mapping counts"
+    stack = free[:top].tolist()
+    unique = np.flatnonzero(counts).tolist()
+    assert len(stack) == len(set(stack))
+    assert not (set(stack) & set(unique))
+    assert sorted(stack + unique) == list(range(P)), \
+        "conservation: top + #uniquely-mapped != num_pages"
+    return counts
 
 
 def check_invariants(alloc, live_len):
     a = jax.device_get(alloc)
-    tbl, free, top = np.asarray(a["tbl"]), np.asarray(a["free"]), int(a["top"])
+    tbl, top = np.asarray(a["tbl"]), int(a["top"])
+    counts = check_ref_invariants(a)
+    # without sharing every refcount is 0 or 1
+    assert counts.max(initial=0) <= 1
     mapped = []
     for b in range(B):
         pages = tbl[b][tbl[b] >= 0].tolist()
@@ -41,11 +65,6 @@ def check_invariants(alloc, live_len):
         mapped += pages
     # no aliasing: every mapped page belongs to exactly one live slot
     assert len(mapped) == len(set(mapped))
-    stack = free[:top].tolist()
-    # conservation: free stack + mapped = the whole pool, disjointly
-    assert len(stack) == len(set(stack))
-    assert not (set(stack) & set(mapped))
-    assert sorted(stack + mapped) == list(range(P))
 
 
 # op encoding: (kind, slot, amount)
@@ -116,6 +135,83 @@ def test_released_pages_are_reusable(lengths):
         alloc = _release(alloc, jnp.asarray([True, False, False, False]))
         check_invariants(alloc, [0, 0, 0, 0])
         assert int(jax.device_get(alloc["top"])) == P
+
+
+# op encoding for the sharing interleavings: (kind, slot, other, amount)
+#   kind 0 = prefill-alloc amount+1 tokens into slot (if free)
+#   kind 1 = adopt `other`'s whole-page prefix into slot (if slot free,
+#            other live with >= 1 full page) — refcounts rise
+#   kind 2 = copy-on-write the LAST adopted page of a sharing slot
+#   kind 3 = release slot (decref-to-zero)
+share_ops = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, B - 1),
+              st.integers(0, B - 1), st.integers(0, M * PS - 1)),
+    min_size=1, max_size=40)
+
+
+def _mini_tree(alloc):
+    """Smallest cache tree cow_chunk_pages can walk: one KV leaf group."""
+    return {"layer": {"k_pages": jnp.zeros((1, P + 1, PS, 2)),
+                      "v_pages": jnp.zeros((1, P + 1, PS, 2)),
+                      "pos_ids": jnp.full((B, M * PS), -1, jnp.int32),
+                      "length": jnp.zeros((B,), jnp.int32)},
+            "t": jnp.zeros((B,), jnp.int32), "paged": alloc}
+
+
+@settings(max_examples=40, deadline=None)
+@given(share_ops)
+def test_sharing_interleavings_refcount_and_conserve(ops):
+    """Random prefill / adopt / CoW / release interleavings: refcounts
+    always equal mapping counts, conservation counts shared pages once,
+    pages free exactly at decref-to-zero, and after a CoW the written page
+    is ALWAYS singly referenced (the no-aliased-writes property)."""
+    alloc = paged.init_allocator(B, M, P)
+    live = [0] * B                      # full pages owned/adopted, 0 = free
+    shared_from = [None] * B            # slot adopted its prefix (sharing)
+    for kind, slot, other, amount in ops:
+        a = jax.device_get(alloc)
+        top = int(a["top"])
+        if kind == 0 and live[slot] == 0:
+            n_pages = -(-(amount + 1) // PS)
+            if n_pages <= top:
+                alloc = _alloc_prefill(alloc, jnp.asarray([slot], jnp.int32),
+                                       jnp.asarray([n_pages], jnp.int32))
+                live[slot] = n_pages
+                shared_from[slot] = None
+        elif kind == 1 and live[slot] == 0 and other != slot and live[other]:
+            row = np.asarray(a["tbl"])[other]
+            k = live[other]
+            pages = np.full((M,), -1, np.int32)
+            pages[:k] = row[:k]
+            alloc = _map_shared(alloc, jnp.asarray(slot, jnp.int32),
+                                jnp.asarray(pages))
+            live[slot] = k
+            shared_from[slot] = other
+        elif kind == 2 and shared_from[slot] is not None and top >= 1:
+            k = live[slot]
+            tree = paged.cow_chunk_pages(
+                _mini_tree(alloc), jnp.asarray([slot], jnp.int32),
+                jnp.asarray([k * PS - 1], jnp.int32),
+                jnp.asarray([1], jnp.int32), PS, span=1)
+            alloc = tree["paged"]
+            b = jax.device_get(alloc)
+            p = int(np.asarray(b["tbl"])[slot, k - 1])
+            assert int(np.asarray(b["ref"])[p]) == 1, \
+                "page written after CoW must be singly referenced"
+            shared_from[slot] = None     # tail privatized; prefix may share
+        elif kind == 3 and live[slot]:
+            mask = np.zeros((B,), bool)
+            mask[slot] = True
+            alloc = _release(alloc, jnp.asarray(mask))
+            live[slot] = 0
+            shared_from[slot] = None
+        check_ref_invariants(jax.device_get(alloc))
+    # drain: every release path must return the pool to pristine
+    alloc = _release(alloc, jnp.asarray([True] * B))
+    a = jax.device_get(alloc)
+    assert int(a["top"]) == P
+    assert (np.asarray(a["ref"]) == 0).all()
+    assert sorted(np.asarray(a["free"]).tolist()) == list(range(P))
 
 
 @settings(max_examples=30, deadline=None)

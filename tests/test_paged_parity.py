@@ -56,6 +56,7 @@ def assert_pool_clean(eng):
     P = alloc["free"].shape[0]
     assert int(alloc["top"]) == P
     assert (np.asarray(alloc["tbl"]) == -1).all()
+    assert (np.asarray(alloc["ref"]) == 0).all()
     assert sorted(np.asarray(alloc["free"]).tolist()) == list(range(P))
     assert eng.free_pages == eng.num_pages
 
