@@ -22,3 +22,17 @@ def make_test_mesh(*, multi_pod: bool = False):
     shape = (2, 2, 2) if multi_pod else (2, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(n_shards: int):
+    """1-D data-parallel mesh for the mesh-sharded serving engine: each
+    shard owns a full model replica plus its own slot pool / page pool /
+    free stack, so the only mesh axis is the fleet axis. CPU test runs
+    force host devices via --xla_force_host_platform_device_count."""
+    if n_shards > jax.device_count():
+        raise ValueError(
+            f"serving mesh needs {n_shards} devices, have "
+            f"{jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} before the "
+            "first jax import for CPU testing)")
+    return jax.make_mesh((n_shards,), ("data",))

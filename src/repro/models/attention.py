@@ -383,6 +383,18 @@ def paged_chunk_write(cache: Dict, tbl: jax.Array, k: jax.Array,
     }
 
 
+def serving_cache_axes(leaf: jax.Array) -> Tuple[Optional[str], ...]:
+    """Logical sharding axes for one leaf of a SHARD-STACKED serving state
+    tree (cache pools, allocator arrays, slot state, token buffers): the
+    leading axis is the fleet axis ``"shard"``; every other dim is
+    shard-local. This is the whole sharding contract of the mesh-sharded
+    engine — KV heads, pages, and batch rows are never split WITHIN a
+    shard, because the decode/chunked kernels' (B, Hkv, pages) grids and
+    the allocator's LIFO free stack both assume whole device-local pools.
+    Resolved to mesh axes via repro.sharding.rules.SERVING_RULES."""
+    return ("shard",) + (None,) * (leaf.ndim - 1)
+
+
 def copy_page_rows(pages: jax.Array, src_pg: jax.Array,
                    dst_pg: jax.Array) -> jax.Array:
     """Copy whole pages ``src_pg[i] -> dst_pg[i]`` inside one pool leaf —

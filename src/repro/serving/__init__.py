@@ -1,4 +1,6 @@
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Request, Response
+from repro.serving.sharded import ShardedServingEngine
 
-__all__ = ["EngineConfig", "ServingEngine", "Request", "Response"]
+__all__ = ["EngineConfig", "ServingEngine", "ShardedServingEngine",
+           "Request", "Response"]

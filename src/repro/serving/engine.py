@@ -156,6 +156,51 @@ _MAP_PREFIX = jax.jit(paged.map_shared_prefix)
 _ARM = jax.jit(sampling.arm_slots)
 
 
+def pack_chunks(prefilling, chunk: int, pack: int):
+    """Select the prefill work of ONE quantum from the FCFS ``prefilling``
+    deque of (request, slot) pairs: up to ``pack`` requests' next chunks
+    whose combined token count fits the ``chunk`` budget.
+
+    The head always contributes its next chunk (min(remaining, chunk)
+    tokens — the K=1 schedule). Requests behind it join only with their
+    WHOLE remainder, and only while the budget holds, so every request's
+    chunk-boundary sequence is bit-identical to the head-only schedule —
+    packing regroups launches, it never re-chunks anyone (that is what
+    makes greedy parity and per-request prefill metering exactly invariant
+    to ``pack``). FCFS is preserved: the scan stops at the first request
+    that doesn't fit, so nobody overtakes. Returns [(req, slot, pos0,
+    piece), ...]; launch shapes are (k, chunk) with k <= pack, so the knob
+    bounds the extra trace count.
+
+    At most ONE ``cow_pending`` row (a whole-prompt-shared adopter about
+    to recompute its tail token into a still-shared page) rides a launch:
+    ``paged.cow_chunk_pages`` evaluates every row against a single
+    pre-launch refcount snapshot, so two such rows adopting the SAME page
+    at refcount 2 would both privatize it and free the original, while
+    the engine's sequential host mirror would keep it indexed — a
+    use-after-free window for the next adopter. One CoW row per launch
+    keeps the mirror in exact lockstep with the device (single decref,
+    snapshot refcount > 1 means the page always survives the launch).
+    """
+    take = []
+    budget = chunk
+    cow_seen = False
+    for req, slot in prefilling:
+        if len(take) >= pack:
+            break
+        rem = len(req.prompt) - req.prefill_pos
+        piece = min(rem, chunk) if not take else rem
+        if piece > budget:
+            break
+        if req.cow_pending and cow_seen:
+            break                      # second CoW row waits its turn
+        take.append((req, slot, req.prefill_pos,
+                     req.prompt[req.prefill_pos:req.prefill_pos + piece]))
+        budget -= piece
+        cow_seen = cow_seen or req.cow_pending
+    return take
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8                 # decode slot count
@@ -186,6 +231,16 @@ class EngineConfig:
     # None = monolithic admission prefill (the parity oracle). 256 is the
     # production default; tests/benches use smaller chunks.
     prefill_chunk: Optional[int] = None
+    # chunk packing: up to this many prefilling requests' next chunks ride
+    # ONE quantum when their combined token count fits prefill_chunk (FCFS
+    # order preserved — a request is packed only behind everything ahead of
+    # it). 1 = the head-only schedule; packing changes launch grouping,
+    # never any request's chunk boundaries, so greedy parity and the
+    # per-request metering are exactly invariant to this knob.
+    prefill_pack: int = 1
+    # mesh-sharded serving (ShardedServingEngine): data-parallel shard
+    # count. The base ServingEngine is single-device and ignores it.
+    shards: int = 1
     # page-level prefix sharing (requires prefill_chunk): requests whose
     # prompts repeat a page-aligned prefix already resident in the pool map
     # those pages into their block table by refcount instead of recomputing
@@ -259,6 +314,8 @@ class ServingEngine:
         if self.chunked:
             if cfg.prefill_chunk < 1:
                 raise ValueError("prefill_chunk must be >= 1")
+            if cfg.prefill_pack < 1:
+                raise ValueError("prefill_pack must be >= 1")
             if not cfg.paged:
                 raise ValueError("chunked prefill requires the paged KV "
                                  "pool (chunk i reads chunks 0..i-1 "
@@ -616,6 +673,10 @@ class ServingEngine:
             jnp.asarray(first_tok, jnp.int32))
         req.prefill_pos = first_tok
         req.shared_prefix_tokens = first_tok
+        # whole prompt shared: the first chunk recomputes the tail token
+        # into a still-shared page and must copy-on-write — flag it so the
+        # packer never puts two such rows in one launch
+        req.cow_pending = first_tok < n_pg * self.cfg.page_size
         for p in phys:
             self._page_ref[p] += 1
         self._slot_shared_in[slot] = list(phys)
@@ -643,79 +704,104 @@ class ServingEngine:
 
     # ------------------------------------------------------ chunked prefill
     def _prefill_quantum(self) -> int:
-        """Run AT MOST ONE prefill chunk (head of the FCFS prefilling
-        queue) — the prefill half of a scheduling quantum. Decode slots
-        stall for one chunk's compute, never a whole prompt's. Returns the
-        number of chunks launched (0 or 1)."""
+        """Run AT MOST ONE prefill launch — the prefill half of a
+        scheduling quantum. The launch carries the FCFS head's next chunk
+        plus (``prefill_pack`` > 1) the whole remainders of requests behind
+        it while the combined token count fits ``prefill_chunk``, so decode
+        slots stall for one chunk budget's compute regardless of how many
+        small prompts are queued. Returns the number of launches (0 or 1)."""
         if not self._prefilling:
             return 0
-        req, slot = self._prefilling[0]
         C = self.cfg.prefill_chunk
-        pos0 = req.prefill_pos
-        piece = req.prompt[pos0:pos0 + C]
-        nv = len(piece)
-        tokens = np.zeros((1, C), np.int32)
-        mask = np.zeros((1, C), np.int32)
-        tokens[0, :nv] = piece
-        mask[0, :nv] = 1
-        first, tbl_row, self.caches = _CHUNK_PREFILL(
+        packed = pack_chunks(self._prefilling, C, self.cfg.prefill_pack)
+        n = len(packed)
+        tokens = np.zeros((n, C), np.int32)
+        mask = np.zeros((n, C), np.int32)
+        for i, (_, _, _, piece) in enumerate(packed):
+            tokens[i, :len(piece)] = piece
+            mask[i, :len(piece)] = 1
+        slots_a = jnp.asarray([slot for _, slot, _, _ in packed], jnp.int32)
+        first, tbl_rows, self.caches = _CHUNK_PREFILL(
             self.model, self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(mask), jnp.asarray([slot], jnp.int32),
-            self._next_key(), vocab=self.model.cfg.vocab,
-            temperature=self.cfg.temperature, page_size=self.cfg.page_size,
-            sharing=self.sharing)
+            jnp.asarray(mask), slots_a, self._next_key(),
+            vocab=self.model.cfg.vocab, temperature=self.cfg.temperature,
+            page_size=self.cfg.page_size, sharing=self.sharing)
         self.prefill_chunks += 1
-        req.prefill_pos += nv
-        if self.sharing and nv > 0:
-            # mirror the device's copy-on-write: if this chunk wrote into
-            # an adopted page still shared (refcount > 1), the device
-            # swapped in a private copy — the slot no longer maps the
-            # indexed original. Sole-owner pages are written in place and
-            # stay mapped (and indexed; the rewrite recomputes identical
-            # rows, so the index entry remains valid).
-            shared = self._slot_shared_in.get(slot) or []
-            lp = pos0 // self.cfg.page_size
-            if lp < len(shared) and self._page_ref[shared[lp]] > 1:
-                self._page_ref[shared[lp]] -= 1
-                self._slot_shared_in[slot] = shared[:lp]
-        if req.prefill_pos < len(req.prompt):
+        finished: List[int] = []
+        for i, (req, slot, pos0, piece) in enumerate(packed):
+            req.prefill_pos += len(piece)
+            if self.sharing and piece:
+                # mirror the device's copy-on-write: if this chunk wrote
+                # into an adopted page still shared (refcount > 1), the
+                # device swapped in a private copy — the slot no longer
+                # maps the indexed original. Sole-owner pages are written
+                # in place and stay mapped (and indexed; the rewrite
+                # recomputes identical rows, so the entry remains valid).
+                shared = self._slot_shared_in.get(slot) or []
+                lp = pos0 // self.cfg.page_size
+                if lp < len(shared) and self._page_ref[shared[lp]] > 1:
+                    self._page_ref[shared[lp]] -= 1
+                    self._slot_shared_in[slot] = shared[:lp]
+                req.cow_pending = False    # its CoW (if any) just ran
+            if req.prefill_pos >= len(req.prompt):
+                finished.append(i)
+        if not finished:
             return 1                   # intermediate chunk: no host sync
-        # last chunk: its sampled token is the request's first emission
-        self._prefilling.popleft()
-        first_h, row_h = jax.device_get((first, tbl_row))
-        first_h = np.asarray(first_h)
-        if self.sharing:
-            self._register_prefix(req, slot, np.asarray(row_h)[0])
+        # by construction only the head can be mid-prompt after a launch
+        # (packed tails always carried their whole remainder), so finished
+        # rows are exactly the first len(finished) deque entries
+        assert finished == list(range(n)), "packed tail finished before head"
+        for _ in finished:
+            self._prefilling.popleft()
+        # last chunks: the sampled tokens are the requests' first emissions
+        # — ONE host sync for every request finishing in this launch
+        first_h, rows_h = jax.device_get((first, tbl_rows))
+        first_h, rows_h = np.asarray(first_h), np.asarray(rows_h)
         self.prefill_batches += 1      # one first-token host sync
-        # chunking changes the schedule, not the modeled energy: attribute
-        # the request's prefill at its true prompt length exactly once, so
-        # modeled J/token is invariant to the prefill_chunk choice. Prefix
-        # sharing DOES change the modeled energy — the shared tokens'
-        # compute genuinely never ran — so their cost is subtracted while
-        # the request still accounts its full prompt as served tokens
-        # (operational J/prompt-token falls with every cache hit).
-        rep = self._meter_prefill(1, len(req.prompt),
-                                  skip=req.shared_prefix_tokens)
-        resp = self.responses[req.rid]
-        resp.prefill_s += rep.t_total
-        resp.energy_j += rep.energy_j
-        resp.tokens.append(int(first_h[0]))
-        resp.t_emit.append(time.perf_counter())
-        budget = req.max_new_tokens - 1
-        if budget <= 0:
-            resp.finished = True       # prefill token was the whole budget
-            self.slot_rid[slot] = -1
-            self._slo[slot] = None
-            self._release_slots([slot])
-            return 1
-        self.cur_tokens, self.state = _ARM(
-            self.cur_tokens, self.state, jnp.asarray([slot], jnp.int32),
-            first, jnp.asarray([budget], jnp.int32),
-            jnp.asarray([-1 if req.eos_id is None else req.eos_id],
-                        jnp.int32))
-        self.slot_budget[slot] = budget
-        self._slot_ctx[slot] = float(len(req.prompt))
-        self._slot_armed[slot] = True
+        now = time.perf_counter()
+        released: List[int] = []
+        arm: List[Tuple[int, int, int, int]] = []   # slot, tok, budget, eos
+        for i in finished:
+            req, slot, _, _ = packed[i]
+            if self.sharing:
+                self._register_prefix(req, slot, rows_h[i])
+            # chunking changes the schedule, not the modeled energy:
+            # attribute the request's prefill at its true prompt length
+            # exactly once, so modeled J/token is invariant to the
+            # prefill_chunk (and prefill_pack) choice. Prefix sharing DOES
+            # change the modeled energy — the shared tokens' compute
+            # genuinely never ran — so their cost is subtracted while the
+            # request still accounts its full prompt as served tokens
+            # (operational J/prompt-token falls with every cache hit).
+            rep = self._meter_prefill(1, len(req.prompt),
+                                      skip=req.shared_prefix_tokens)
+            resp = self.responses[req.rid]
+            resp.prefill_s += rep.t_total
+            resp.energy_j += rep.energy_j
+            resp.tokens.append(int(first_h[i]))
+            resp.t_emit.append(now)
+            budget = req.max_new_tokens - 1
+            if budget <= 0:
+                resp.finished = True   # prefill token was the whole budget
+                self.slot_rid[slot] = -1
+                self._slo[slot] = None
+                released.append(slot)
+                continue
+            arm.append((slot, int(first_h[i]), budget,
+                        -1 if req.eos_id is None else req.eos_id))
+            self.slot_budget[slot] = budget
+            self._slot_ctx[slot] = float(len(req.prompt))
+            self._slot_armed[slot] = True
+        if arm:
+            # one batched arm for every request finishing in this launch
+            # (first tokens come from the host fetch above — no extra sync)
+            self.cur_tokens, self.state = _ARM(
+                self.cur_tokens, self.state,
+                jnp.asarray([a[0] for a in arm], jnp.int32),
+                jnp.asarray([a[1] for a in arm], jnp.int32),
+                jnp.asarray([a[2] for a in arm], jnp.int32),
+                jnp.asarray([a[3] for a in arm], jnp.int32))
+        self._release_slots(released)
         return 1
 
     # --------------------------------------------------------------- decode

@@ -23,6 +23,14 @@ class Request:
     # tokens were adopted from resident pages instead of recomputed
     prefix_keys: Optional[List[bytes]] = None
     shared_prefix_tokens: int = 0
+    # True between adopting a prefix that covers the WHOLE prompt and the
+    # first chunk launch: that chunk recomputes the last prompt token into
+    # a still-shared page, i.e. it will copy-on-write. The chunk packer
+    # admits at most one such row per launch — the device CoWs all rows of
+    # a launch against ONE refcount snapshot, so two CoW rows on the same
+    # page would free it while the host's sequential mirror kept it
+    # indexed (see pack_chunks).
+    cow_pending: bool = False
 
 
 @dataclasses.dataclass

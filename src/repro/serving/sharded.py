@@ -1,0 +1,724 @@
+"""Mesh-sharded serving: the fused engine step over a JAX device mesh,
+with per-shard page pools.
+
+The paper's operational-carbon model (Eq. 1) prices serving by wall-clock
+energy at a region's carbon intensity, so once the single-device hot path
+is fused (PR 1-4) the remaining lever is aggregate throughput per host
+overhead — and the fleet-placement work this repo targets next (GreenLLM's
+disaggregated fleets, EcoServe's carbon-aware placement) presupposes an
+engine whose step, KV pool, and scheduler are mesh-native. This module
+shards the serving engine data-parallel over a 1-D device mesh:
+
+  * every device-side array gains a LEADING shard axis — slot pools and
+    per-attention-leaf page pools ``(S, Hkv, num_pages+1, ps, hd)``, the
+    block table ``(S, B, max_pages)``, slot state ``(S, B)``, allocator
+    free stacks ``(S, num_pages)`` — laid out by the logical-axis contract
+    in ``repro.models.attention.serving_cache_axes`` and resolved through
+    ``repro.sharding.rules.SERVING_RULES`` (shard -> the mesh's data axis);
+  * the fused decode scan, the chunked-prefill step, and every insertion/
+    release op run as ONE jitted program spanning the whole mesh: a
+    ``shard_map`` whose body is the unmodified single-device function on
+    the local shard (kernels, allocator, sampling all reused verbatim —
+    no per-shard Python loop, no GSPMD guessing). One host sync per
+    ``sync_every`` micro-steps serves the WHOLE fleet: the stacked
+    ``(S, n_steps, B)`` token/emission matrices come back in one fetch;
+  * free stacks are per shard, so alloc-on-write inside the fused scan
+    stays shard-local by construction — no cross-device traffic on the
+    decode hot path, which is what makes aggregate steps/s scale.
+
+Host-side scheduling is shard-aware: admission places each request on the
+shard with the most free pages (reservation accounting per shard, FCFS —
+the head request never gets overtaken), the prefix index is PER SHARD
+(keys carry the shard id implicitly: one index dict per shard), so
+adoption never crosses shards and release/decref stays shard-local.
+Requests whose prompts hit a resident prefix are steered to the shard
+holding it (longest match wins, free pages break ties) — sharing is a
+placement input, not just an admission discount.
+
+Idle lanes inside a fleet-wide program are expressed with the sentinel
+slot id ``B`` (one past the per-shard slot range): JAX drops out-of-range
+scatters and clamps out-of-range gathers, so a lane whose ``slots`` row is
+all-sentinel (plus an all-zero token mask) runs the same traced program as
+a busy lane while provably writing nothing but its own trash page — the
+fleet step stays a single SPMD program with no per-lane control flow.
+
+The single-device paged engine is preserved untouched as the token-for-
+token parity oracle (tests/test_sharded_parity.py), exactly as the
+contiguous engine was for PR 2-4.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.hardware import HardwareProfile, get_profile
+from repro.core.meter import CarbonMeter
+from repro.launch.mesh import make_serving_mesh
+from repro.models import Model
+from repro.models.costing import workload_of
+from repro.models.moe_sharded import shard_map
+from repro.serving import paged, sampling
+from repro.serving.engine import (EngineConfig, ServingEngine,
+                                  _chunk_prefill_fn, pack_chunks)
+from repro.serving.request import Request, Response
+from repro.sharding.rules import serving_shardings
+
+_SHARD = P("data")                     # leading fleet axis of every leaf
+
+
+def _lane(tree):
+    """Local (1, ...) shard_map view -> the single-shard (...) tree."""
+    return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+
+def _unlane(tree):
+    return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+
+# ------------------------------------------------------- fleet jit entries
+#
+# Module-level with (model, mesh) static, same as engine.py's single-device
+# entries: every ShardedServingEngine sharing a Model instance and mesh
+# reuses the same compiled executables. Each wraps the UNmodified
+# single-device function in a shard_map body — the mesh program is the
+# single-device program, replicated, with shard-local state.
+
+
+def _fused_steps_fleet(model, mesh, params, caches, cur_tokens, state, keys,
+                       *, n_steps, temperature, page_size):
+    def body(params, caches, cur_tokens, state, keys):
+        out = sampling.fused_decode_steps(
+            model, params, _lane(caches), _lane(cur_tokens), _lane(state),
+            keys[0], n_steps=n_steps, temperature=temperature,
+            page_size=page_size, freeze_inactive=True)
+        return tuple(_unlane(t) for t in out)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), _SHARD, _SHARD, _SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(
+        params, caches, cur_tokens, state, keys)
+
+
+def _chunk_prefill_fleet(model, mesh, params, caches, tokens, mask, slots,
+                         keys, *, vocab, temperature, page_size, sharing):
+    def body(params, caches, tokens, mask, slots, keys):
+        first, rows, caches = _chunk_prefill_fn(
+            model, params, _lane(caches), tokens[0], mask[0], slots[0],
+            keys[0], vocab=vocab, temperature=temperature,
+            page_size=page_size, sharing=sharing)
+        return first[None], rows[None], _unlane(caches)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), _SHARD, _SHARD, _SHARD, _SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(
+        params, caches, tokens, mask, slots, keys)
+
+
+def _begin_fleet(mesh, caches, slots):
+    def body(caches, slots):
+        return _unlane(paged.begin_chunked_prefill(_lane(caches), slots[0]))
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(caches, slots)
+
+
+def _arm_fleet(mesh, cur_tokens, state, slots, firsts, budgets, eos_ids):
+    def body(cur_tokens, state, slots, firsts, budgets, eos_ids):
+        cur, st = sampling.arm_slots(_lane(cur_tokens), _lane(state),
+                                     slots[0], firsts[0], budgets[0],
+                                     eos_ids[0])
+        return _unlane(cur), _unlane(st)
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD,) * 6,
+                     out_specs=_SHARD, check_vma=False)(
+        cur_tokens, state, slots, firsts, budgets, eos_ids)
+
+
+def _release_fleet(mesh, caches, released):
+    def body(caches, released):
+        caches = _lane(caches)
+        caches = dict(caches)
+        caches["paged"] = paged.release_slots(caches["paged"], released[0])
+        return _unlane(caches)
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(caches, released)
+
+
+def _map_prefix_fleet(mesh, caches, slot, pages, n_shared, start_tok):
+    def body(caches, slot, pages, n_shared, start_tok):
+        return _unlane(paged.map_shared_prefix(
+            _lane(caches), slot[0], pages[0], n_shared[0], start_tok[0]))
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD,) * 5,
+                     out_specs=_SHARD, check_vma=False)(
+        caches, slot, pages, n_shared, start_tok)
+
+
+_FUSED_FLEET = jax.jit(_fused_steps_fleet, static_argnums=(0, 1),
+                       static_argnames=("n_steps", "temperature",
+                                        "page_size"))
+_CHUNK_FLEET = jax.jit(_chunk_prefill_fleet, static_argnums=(0, 1),
+                       static_argnames=("vocab", "temperature", "page_size",
+                                        "sharing"))
+_BEGIN_FLEET = jax.jit(_begin_fleet, static_argnums=(0,))
+_ARM_FLEET = jax.jit(_arm_fleet, static_argnums=(0,))
+_RELEASE_FLEET = jax.jit(_release_fleet, static_argnums=(0,))
+_MAP_PREFIX_FLEET = jax.jit(_map_prefix_fleet, static_argnums=(0,))
+
+
+class ShardedServingEngine:
+    """Data-parallel fleet of ``cfg.shards`` serving shards behind one
+    queue: per-shard slot pools, page pools, and free stacks; fleet-wide
+    fused programs; shard-aware host scheduling. Requires the paged pool
+    and chunked prefill (``cfg.paged`` + ``cfg.prefill_chunk``) — the
+    quantum scheduler is what lets one program carry every shard's prefill
+    chunk and decode scan without per-shard phases. ``cfg.max_batch`` and
+    ``cfg.num_pages`` are PER SHARD ("4 shards of B", "equal per-device
+    pool bytes")."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 mesh=None):
+        if cfg.shards < 1:
+            raise ValueError("shards must be >= 1")
+        if not cfg.paged or cfg.prefill_chunk is None:
+            raise ValueError(
+                "mesh-sharded serving requires the paged pool + chunked "
+                "prefill (paged=True, prefill_chunk set): the quantum "
+                "scheduler is what packs every shard's prefill chunk and "
+                "decode scan into single fleet-wide programs")
+        # reuse the single-device engine's full validation (pool geometry,
+        # model capability gates) on a throwaway instance, then discard its
+        # device state — the fleet builds its own stacked arrays
+        probe = ServingEngine(model, params, cfg)
+        self.model, self.params_host, self.cfg = model, params, cfg
+        self.profile: HardwareProfile = get_profile(cfg.profile)
+        # the fleet provisions cfg.shards times the hardware: embodied
+        # amortization (Eq. 2-4) scales with installed devices
+        self.meter = CarbonMeter(self.profile, cfg.region,
+                                 lifetime_years=cfg.lifetime_years,
+                                 n_devices=cfg.n_devices * cfg.shards)
+        self.workload = workload_of(model.cfg)
+        S, B = cfg.shards, cfg.max_batch
+        self.S, self.B = S, B
+        self.max_pages_slot = probe.max_pages_slot
+        self.num_pages = probe.num_pages        # per shard
+        self.mesh = mesh if mesh is not None else make_serving_mesh(S)
+
+        # ---- device state: stack the single-shard tree S-wide and place
+        # every leaf leading-axis over the mesh (attention.py declares the
+        # logical axes; rules.py resolves them)
+        def stack(tree):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), tree)
+
+        caches = stack(probe.caches)
+        self.caches = jax.device_put(caches,
+                                     serving_shardings(self.mesh, caches))
+        self.params = jax.device_put(params, jax.tree_util.tree_map(
+            lambda _: NamedSharding(self.mesh, P()), params))
+        cur = stack(probe.cur_tokens)
+        self.cur_tokens = jax.device_put(
+            cur, serving_shardings(self.mesh, cur))
+        state = stack(probe.state)
+        self.state = jax.device_put(state,
+                                    serving_shardings(self.mesh, state))
+        del probe
+
+        # ---- host mirrors, one entry per shard
+        self.queue: deque = deque()
+        self.responses: Dict[int, Response] = {}
+        self.slot_rid = [[-1] * B for _ in range(S)]
+        self.slot_budget = [[0] * B for _ in range(S)]
+        self.slot_eos: List[List[Optional[int]]] = [[None] * B
+                                                    for _ in range(S)]
+        self._slot_ctx = [[0.0] * B for _ in range(S)]
+        self._slot_armed = [[False] * B for _ in range(S)]
+        self._slo: List[List[Optional[float]]] = [[None] * B
+                                                  for _ in range(S)]
+        self._req_slo: Dict[int, Optional[float]] = {}
+        self.free_pages = [self.num_pages] * S
+        self.peak_pages_reserved = [0] * S
+        self._slot_pages = [[0] * B for _ in range(S)]
+        self._prefilling: List[deque] = [deque() for _ in range(S)]
+        self._req_shard: Dict[int, int] = {}
+
+        self.sharing = cfg.prefix_sharing
+        if self.sharing:
+            # SHARD-LOCAL prefix index: one index per shard (the shard id
+            # is part of the key), so adoption never crosses shards and
+            # decref accounting stays local to the holder's free stack
+            self._prefix_index: List[Dict[bytes, int]] = [
+                {} for _ in range(S)]
+            self._page_key: List[Dict[int, bytes]] = [{} for _ in range(S)]
+            self._page_ref: List[Dict[int, int]] = [{} for _ in range(S)]
+            self._slot_shared_in: List[Dict[int, List[int]]] = [
+                {} for _ in range(S)]
+            self._slot_own_idx: List[Dict[int, List[int]]] = [
+                {} for _ in range(S)]
+            self.prefix_hit_tokens = 0
+            self.prefix_shared_requests = 0
+
+        self._key = jax.random.PRNGKey(0)
+        # step counting matches the single-device engine exactly: a fleet
+        # micro-step counts toward _steps only if SOME shard emitted, and
+        # shard_steps counts (micro-step, shard) pairs with >= 1 emission
+        # — the honest comparand for aggregate throughput claims
+        self._steps = 0
+        self.shard_steps = 0
+        self.decode_chunks = 0         # fleet-wide device->host syncs
+        self.prefill_batches = 0       # first-token syncs
+        self.prefill_chunks = 0        # fleet chunk launches
+        self.peak_active = 0
+
+    # ---------------------------------------------------------- small utils
+    def _next_keys(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.split(sub, self.S)
+
+    def free_slots(self, s: int) -> List[int]:
+        return [i for i, r in enumerate(self.slot_rid[s]) if r < 0]
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in range(self.S)
+                   for r in self.slot_rid[s] if r >= 0)
+
+    @property
+    def decoding(self) -> int:
+        return sum(1 for s in range(self.S)
+                   for a in self._slot_armed[s] if a)
+
+    # ------------------------------------------- borrowed host-side logic
+    # identical to the single-device engine (the fleet is S independent
+    # devices, so per-shard launches meter exactly like one device's, and
+    # queue/budget bookkeeping is device-count agnostic) — borrowed, not
+    # copied, so a fix there propagates here
+    _meter_prefill = ServingEngine._meter_prefill
+    _meter_decode = ServingEngine._meter_decode
+    _prompt_page_keys = ServingEngine._prompt_page_keys
+    _over_budget = ServingEngine._over_budget
+    _reject = ServingEngine._reject
+    submit = ServingEngine.submit
+
+    # ------------------------------------------------------- prefix sharing
+    def _match_prefix(self, req: Request, s: int) -> Tuple[int, List[int]]:
+        """Longest prefix of the prompt resident in SHARD ``s``'s index."""
+        phys: List[int] = []
+        for k in self._prompt_page_keys(req):
+            p = self._prefix_index[s].get(k)
+            if p is None:
+                break
+            phys.append(p)
+        return len(phys), phys
+
+    def _drop_index_page(self, s: int, p: int) -> None:
+        key = self._page_key[s].pop(p, None)
+        if key is not None:
+            self._prefix_index[s].pop(key, None)
+        self._page_ref[s].pop(p, None)
+
+    def _register_prefix(self, req: Request, s: int, slot: int,
+                         row: np.ndarray) -> None:
+        own = self._slot_own_idx[s].setdefault(slot, [])
+        for i, key in enumerate(self._prompt_page_keys(req)):
+            p = int(row[i])
+            if key not in self._prefix_index[s]:
+                self._prefix_index[s][key] = p
+                self._page_key[s][p] = key
+                self._page_ref[s][p] = self._page_ref[s].get(p, 0) + 1
+                own.append(p)
+
+    # -------------------------------------------------------------- release
+    def _release_slots(self, pairs: List[Tuple[int, int]]) -> None:
+        """Return finished (shard, slot) pairs' pages: ONE fleet-wide
+        release program + per-shard host reservation accounting (the same
+        popper-charges-once / last-holder-credits-once flows as the
+        single-device engine, applied within each shard)."""
+        if not pairs:
+            return
+        mask = np.zeros((self.S, self.B), bool)
+        for s, b in pairs:
+            mask[s, b] = True
+        self.caches = _RELEASE_FLEET(self.mesh, self.caches,
+                                     jnp.asarray(mask))
+        for s, b in pairs:
+            ret = self._slot_pages[s][b]
+            if self.sharing:
+                for p in self._slot_own_idx[s].pop(b, []):
+                    self._page_ref[s][p] -= 1
+                    if self._page_ref[s][p] <= 0:
+                        self._drop_index_page(s, p)
+                    else:
+                        ret -= 1       # survives under someone else's map
+                for p in self._slot_shared_in[s].pop(b, []):
+                    self._page_ref[s][p] -= 1
+                    if self._page_ref[s][p] <= 0:
+                        self._drop_index_page(s, p)
+                        ret += 1       # last holder frees the original
+            self.free_pages[s] += ret
+            self._slot_pages[s][b] = 0
+
+    # ------------------------------------------------------------ admission
+    def _place(self, req: Request):
+        """Placement policy: among shards with a free slot whose pool fits
+        the request's reservation, pick the one holding the longest
+        resident prefix of its prompt (sharing only), breaking ties by
+        most free pages then lowest shard id. Returns (shard, resv,
+        (n_pg, phys, first_tok)) or None if the head can't be placed."""
+        L = len(req.prompt)
+        ps = self.cfg.page_size
+        n_total = paged.pages_needed(L + max(req.max_new_tokens - 1, 0), ps)
+        best = None
+        for s in range(self.S):
+            if not self.free_slots(s):
+                continue
+            if self.sharing:
+                n_pg, phys = self._match_prefix(req, s)
+                first_tok = min(n_pg * ps, L - 1)
+                resv = n_total - first_tok // ps
+                share = (n_pg, phys, first_tok)
+            else:
+                resv, share = n_total, (0, [], 0)
+            if resv > self.free_pages[s]:
+                continue
+            key = (share[0], self.free_pages[s], -s)
+            if best is None or key > best[0]:
+                best = (key, s, resv, share)
+        return None if best is None else best[1:]
+
+    def _admit(self) -> int:
+        """FCFS head-of-queue admission onto the best shard: claim a slot
+        + a worst-case page reservation on that shard, queue the request
+        for chunked prefill there, and reset all newly claimed slots with
+        ONE fleet-wide begin program. Never-fits requests (prompt + budget
+        exceeding a shard's whole pool or block table) are rejected up
+        front — per-shard pools mean per-shard capacity limits."""
+        if self._over_budget() and self.active > 0:
+            return 0
+        admitted: List[Tuple[Request, int, int]] = []
+        adoptions: List[Tuple[Request, int, int, Tuple]] = []
+        while self.queue:
+            req = self.queue[0]
+            L = len(req.prompt)
+            n_total = paged.pages_needed(
+                L + max(req.max_new_tokens - 1, 0), self.cfg.page_size)
+            if n_total > self.max_pages_slot or n_total > self.num_pages:
+                self.queue.popleft()
+                self._reject(req)
+                continue
+            placed = self._place(req)
+            if placed is None:
+                break                  # keep waiting (FCFS, no overtaking)
+            s, resv, share = placed
+            self.queue.popleft()
+            slot = self.free_slots(s)[0]
+            self.free_pages[s] -= resv
+            self.peak_pages_reserved[s] = max(
+                self.peak_pages_reserved[s],
+                self.num_pages - self.free_pages[s])
+            self.slot_rid[s][slot] = req.rid
+            self.slot_budget[s][slot] = 0    # armed after the last chunk
+            self.slot_eos[s][slot] = req.eos_id
+            self._slot_ctx[s][slot] = 0.0
+            self._slo[s][slot] = req.slo_s
+            self._slot_pages[s][slot] = resv
+            self._req_shard[req.rid] = s
+            req.prefill_pos = 0
+            self._prefilling[s].append((req, slot))
+            admitted.append((req, s, slot))
+            if self.sharing:
+                adoptions.append((req, s, slot, share))
+        if not admitted:
+            return 0
+        # one fleet-wide slot-reset program: per-shard slot lists padded
+        # with the sentinel id B (out-of-range scatters drop -> idle lanes
+        # run the same program and write nothing)
+        per_shard: List[List[int]] = [[] for _ in range(self.S)]
+        for _, s, slot in admitted:
+            per_shard[s].append(slot)
+        k = max(len(v) for v in per_shard)
+        slots = np.full((self.S, k), self.B, np.int32)
+        for s, v in enumerate(per_shard):
+            slots[s, :len(v)] = v
+        self.caches = _BEGIN_FLEET(self.mesh, self.caches,
+                                   jnp.asarray(slots))
+        if self.sharing:
+            for req, s, slot, (n_pg, phys, first_tok) in adoptions:
+                self._adopt_prefix(req, s, slot, n_pg, phys, first_tok)
+        return len(admitted)
+
+    def _adopt_prefix(self, req: Request, s: int, slot: int, n_pg: int,
+                      phys: List[int], first_tok: int) -> None:
+        """Shard-local adoption: incref the matched run into the slot's
+        block table on shard ``s`` only — every other lane of the fleet
+        program sees the sentinel slot id and writes nothing."""
+        self._slot_shared_in[s][slot] = []
+        self._slot_own_idx[s][slot] = []
+        if n_pg == 0:
+            return
+        slot_a = np.full((self.S,), self.B, np.int32)
+        slot_a[s] = slot
+        pages = np.full((self.S, self.max_pages_slot), -1, np.int32)
+        pages[s, :n_pg] = phys
+        n_sh = np.zeros((self.S,), np.int32)
+        n_sh[s] = n_pg * self.cfg.page_size
+        st = np.zeros((self.S,), np.int32)
+        st[s] = first_tok
+        self.caches = _MAP_PREFIX_FLEET(
+            self.mesh, self.caches, jnp.asarray(slot_a), jnp.asarray(pages),
+            jnp.asarray(n_sh), jnp.asarray(st))
+        req.prefill_pos = first_tok
+        req.shared_prefix_tokens = first_tok
+        # whole prompt shared -> the first chunk will copy-on-write; the
+        # per-shard packer admits one such row per launch (pack_chunks)
+        req.cow_pending = first_tok < n_pg * self.cfg.page_size
+        for p in phys:
+            self._page_ref[s][p] += 1
+        self._slot_shared_in[s][slot] = list(phys)
+        self.prefix_hit_tokens += first_tok
+        self.prefix_shared_requests += 1
+
+    # ------------------------------------------------------ chunked prefill
+    def _prefill_quantum(self) -> int:
+        """One fleet-wide prefill launch per quantum: EVERY shard's FCFS
+        head chunk (packed up to ``prefill_pack`` requests per shard when
+        their combined tokens fit ``prefill_chunk``) rides one program.
+        Shards with nothing to prefill run sentinel lanes. Returns the
+        number of launches (0 or 1)."""
+        C = self.cfg.prefill_chunk
+        packs = [pack_chunks(self._prefilling[s], C, self.cfg.prefill_pack)
+                 for s in range(self.S)]
+        n = max(len(p) for p in packs)
+        if n == 0:
+            return 0
+        tokens = np.zeros((self.S, n, C), np.int32)
+        mask = np.zeros((self.S, n, C), np.int32)
+        slots = np.full((self.S, n), self.B, np.int32)
+        for s, pk in enumerate(packs):
+            for i, (_, slot, _, piece) in enumerate(pk):
+                tokens[s, i, :len(piece)] = piece
+                mask[s, i, :len(piece)] = 1
+                slots[s, i] = slot
+        first, rows, self.caches = _CHUNK_FLEET(
+            self.model, self.mesh, self.params, self.caches,
+            jnp.asarray(tokens), jnp.asarray(mask), jnp.asarray(slots),
+            self._next_keys(), vocab=self.model.cfg.vocab,
+            temperature=self.cfg.temperature,
+            page_size=self.cfg.page_size, sharing=self.sharing)
+        self.prefill_chunks += 1
+        finished: List[Tuple[int, int]] = []   # (shard, row)
+        for s, pk in enumerate(packs):
+            done = 0
+            for i, (req, slot, pos0, piece) in enumerate(pk):
+                req.prefill_pos += len(piece)
+                if self.sharing and piece:
+                    shared = self._slot_shared_in[s].get(slot) or []
+                    lp = pos0 // self.cfg.page_size
+                    if lp < len(shared) and self._page_ref[s][shared[lp]] > 1:
+                        self._page_ref[s][shared[lp]] -= 1
+                        self._slot_shared_in[s][slot] = shared[:lp]
+                    req.cow_pending = False   # its CoW (if any) just ran
+                if req.prefill_pos >= len(req.prompt):
+                    finished.append((s, i))
+                    done += 1
+            assert done in (0, len(pk)), "packed tail finished before head"
+            for _ in range(done):
+                self._prefilling[s].popleft()
+        if not finished:
+            return 1                   # intermediate chunks: no host sync
+        # ONE first-token fetch for every request finishing fleet-wide
+        first_h, rows_h = jax.device_get((first, rows))
+        first_h, rows_h = np.asarray(first_h), np.asarray(rows_h)
+        self.prefill_batches += 1
+        now = time.perf_counter()
+        arm: List[Tuple[int, int, int, int, int]] = []
+        released: List[Tuple[int, int]] = []
+        for s, i in finished:
+            req, slot, _, _ = packs[s][i]
+            if self.sharing:
+                self._register_prefix(req, s, slot, rows_h[s, i])
+            rep = self._meter_prefill(1, len(req.prompt),
+                                      skip=req.shared_prefix_tokens)
+            resp = self.responses[req.rid]
+            resp.prefill_s += rep.t_total
+            resp.energy_j += rep.energy_j
+            resp.tokens.append(int(first_h[s, i]))
+            resp.t_emit.append(now)
+            budget = req.max_new_tokens - 1
+            if budget <= 0:
+                resp.finished = True   # prefill token was the whole budget
+                self.slot_rid[s][slot] = -1
+                self._slo[s][slot] = None
+                released.append((s, slot))
+                continue
+            eos = -1 if req.eos_id is None else req.eos_id
+            arm.append((s, slot, int(first_h[s, i]), budget, eos))
+            self.slot_budget[s][slot] = budget
+            self._slot_ctx[s][slot] = float(len(req.prompt))
+            self._slot_armed[s][slot] = True
+        if arm:
+            k = max(sum(1 for a in arm if a[0] == s) for s in range(self.S))
+            slots_a = np.full((self.S, k), self.B, np.int32)
+            firsts = np.zeros((self.S, k), np.int32)
+            budgets = np.zeros((self.S, k), np.int32)
+            eos_ids = np.full((self.S, k), -1, np.int32)
+            fill = [0] * self.S
+            for s, slot, tok, budget, eos in arm:
+                slots_a[s, fill[s]] = slot
+                firsts[s, fill[s]] = tok
+                budgets[s, fill[s]] = budget
+                eos_ids[s, fill[s]] = eos
+                fill[s] += 1
+            self.cur_tokens, self.state = _ARM_FLEET(
+                self.mesh, self.cur_tokens, self.state,
+                jnp.asarray(slots_a), jnp.asarray(firsts),
+                jnp.asarray(budgets), jnp.asarray(eos_ids))
+        self._release_slots(released)
+        return 1
+
+    # --------------------------------------------------------------- decode
+    def _decode_chunk(self, max_steps: int) -> None:
+        """One fused chunk of up to ``sync_every`` micro-steps for EVERY
+        armed slot on EVERY shard — one program, one host sync on the
+        stacked (S, n, B) token/emission matrices for the whole fleet."""
+        budgets = [self.slot_budget[s][b]
+                   for s in range(self.S) for b in range(self.B)
+                   if self._slot_armed[s][b]]
+        n = min(self.cfg.sync_every, max(max(budgets), 1),
+                max(max_steps - self._steps, 1))
+        (self.caches, self.cur_tokens, self.state, tok_mat,
+         emit_mat) = _FUSED_FLEET(
+            self.model, self.mesh, self.params, self.caches,
+            self.cur_tokens, self.state, self._next_keys(), n_steps=n,
+            temperature=self.cfg.temperature,
+            page_size=self.cfg.page_size)
+        tok_h, emit_h = jax.device_get((tok_mat, emit_mat))
+        now = time.perf_counter()
+        self.decode_chunks += 1
+        self.peak_active = max(self.peak_active, self.active)
+        released: List[Tuple[int, int]] = []
+        for i in range(n):
+            emitted_any = False
+            for s in range(self.S):
+                act = emit_h[s, i]
+                n_active = int(act.sum())
+                if n_active == 0:
+                    continue           # this shard drained mid-chunk
+                emitted_any = True
+                self.shard_steps += 1
+                ctx = float(np.mean([self._slot_ctx[s][b]
+                                     for b in np.flatnonzero(act)]))
+                rep = self._meter_decode(n_active, max(ctx, 1.0))
+                per_tok_t = rep.t_total / n_active
+                per_tok_e = rep.energy_j / n_active
+                for b in np.flatnonzero(act):
+                    rid = self.slot_rid[s][b]
+                    resp = self.responses[rid]
+                    tok = int(tok_h[s, i, b])
+                    resp.tokens.append(tok)
+                    resp.t_emit.append(now)
+                    resp.decode_s += per_tok_t
+                    resp.energy_j += per_tok_e
+                    self._slot_ctx[s][b] += 1.0
+                    self.slot_budget[s][b] -= 1
+                    done = self.slot_budget[s][b] <= 0 or (
+                        self.slot_eos[s][b] is not None
+                        and tok == self.slot_eos[s][b])
+                    if done:
+                        resp.finished = True
+                        self.slot_rid[s][b] = -1
+                        self._slot_armed[s][b] = False
+                        self._slo[s][b] = None
+                        released.append((s, int(b)))
+            if emitted_any:
+                self._steps += 1
+        self._release_slots(released)
+
+    def run(self, max_steps: int = 10_000) -> List[Response]:
+        """Drive until the queue drains and every shard's slots finish.
+        Each loop iteration is one FLEET quantum: admission claims slots
+        and per-shard reservations, one chunk launch advances every
+        shard's prefilling head, one fused scan advances every armed slot
+        everywhere — still exactly one decode sync per quantum."""
+        while (self.queue or self.active) and self._steps < max_steps:
+            admitted = self._admit()
+            chunks = self._prefill_quantum()
+            if self.decoding:
+                self._decode_chunk(max_steps)
+            elif admitted or chunks:
+                continue               # prefill-only quantum
+            elif self.queue:
+                if all(f == self.num_pages for f in self.free_pages):
+                    # nothing running, every shard's whole pool free, and
+                    # placement still refused the head: it can never fit
+                    self._reject(self.queue.popleft())
+                else:
+                    raise RuntimeError(   # unreachable: release returns
+                        "admission stalled with no active work — leaked "
+                        "page reservation")
+        return list(self.responses.values())
+
+    # -------------------------------------------------------------- reports
+    def carbon_report(self) -> str:
+        return self.meter.report()
+
+    @property
+    def host_syncs(self) -> int:
+        """Fleet-wide device->host sync points: one per decode chunk plus
+        one per first-token fetch — S shards, the same sync count as ONE
+        fused engine (that is the scaling claim)."""
+        return self.decode_chunks + self.prefill_batches
+
+    def stats(self) -> Dict[str, float]:
+        t = self.meter.totals
+        pf = self.meter.phase("prefill")
+        dc = self.meter.phase("decode")
+        finished = [r for r in self.responses.values() if r.finished]
+        lat = [r.prefill_s + r.decode_s for r in finished]
+        p50 = float(np.median(lat)) if lat else 0.0
+        p99 = float(np.percentile(lat, 99)) if len(lat) > 1 else p50
+        out: Dict[str, float] = {
+            "shards": self.S,
+            "paged": 1.0,
+            "page_size": self.cfg.page_size,
+            "pages_total": self.num_pages * self.S,
+            "pages_per_shard": self.num_pages,
+            "peak_pages_reserved": sum(self.peak_pages_reserved),
+            "free_pages": sum(self.free_pages),
+            "peak_kv_rows_reserved":
+                sum(self.peak_pages_reserved) * self.cfg.page_size,
+            "chunked": 1.0,
+            "prefill_chunk": self.cfg.prefill_chunk,
+            "prefill_chunks": self.prefill_chunks,
+            "requests": len(self.responses),
+            "peak_active": self.peak_active,
+            "p50_latency_s": p50,
+            "p99_latency_s": p99,
+            "steps": self._steps,
+            "shard_steps": self.shard_steps,
+            "decode_chunks": self.decode_chunks,
+            "prefill_batches": self.prefill_batches,
+            "host_syncs": self.host_syncs,
+            "prefill_tokens": pf.tokens,
+            "decode_tokens": dc.tokens,
+            "prefill_j_per_token": pf.j_per_token,
+            "decode_j_per_token": dc.j_per_token,
+            "total_energy_j": t.energy_j,
+            "total_carbon_g": t.total_g,
+            "embodied_fraction":
+                (t.embodied_g / t.total_g) if t.total_g else 0.0,
+        }
+        if self.sharing:
+            out.update({
+                "prefix_sharing": 1.0,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_shared_requests": self.prefix_shared_requests,
+            })
+        return out

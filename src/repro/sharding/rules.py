@@ -170,3 +170,23 @@ def param_shardings(params, mesh: Mesh, fsdp: bool = False):
 
 
 FSDP_RULES = DEFAULT_RULES  # activations are unchanged under FSDP
+
+# --- serving rules ---------------------------------------------------------
+
+# Mesh-sharded serving (serving/sharded.py): every pool/state leaf gains a
+# LEADING fleet axis named "shard", mapped onto the 1-D serving mesh's data
+# axis; all other dims are shard-local (a shard owns whole page pools and
+# whole KV heads — the decode/chunk kernels' grids assume unsplit pools, and
+# the allocator's free stack must stay device-local for alloc-on-write).
+SERVING_RULES: Dict[str, AxisVal] = {"shard": "data"}
+
+
+def serving_shardings(mesh: Mesh, tree):
+    """NamedSharding pytree for a shard-stacked serving state tree: the
+    leading axis of every leaf is the fleet axis, resolved through
+    SERVING_RULES (the logical-axis declaration lives with the cache code:
+    repro.models.attention.serving_cache_axes)."""
+    from repro.models.attention import serving_cache_axes
+    ctx = ShardingContext(mesh=mesh, rules=SERVING_RULES)
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, ctx.spec(serving_cache_axes(x))), tree)

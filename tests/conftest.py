@@ -15,6 +15,27 @@ def rng():
     return np.random.default_rng(0)
 
 
+def require_host_devices(n: int) -> None:
+    """Skip (never vacuously pass) a test that needs ``n`` forced host
+    devices. XLA_FLAGS must be set before the FIRST jax import of the
+    process — an in-test os.environ write silently no-ops once jax is
+    initialized, which is exactly the failure mode this guard replaces —
+    so multi-device suites run in a dedicated invocation (`make sharded`,
+    the CI `sharded` step, or an 8-device subprocess)."""
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs {n} host devices, have {jax.device_count()}; run with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} set "
+            "before the first jax import (e.g. `make sharded`)")
+
+
+@pytest.fixture
+def host_devices():
+    """Fixture form of :func:`require_host_devices` — usage:
+    ``host_devices(4)`` at the top of a multi-device test."""
+    return require_host_devices
+
+
 def make_extras(cfg, batch, seq, key=None, dtype=jnp.float32):
     """Modality extras required by a config's family (stub frontends)."""
     from repro.models import frontend

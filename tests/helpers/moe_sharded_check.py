@@ -1,6 +1,17 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+"""Sharded-MoE parity check. Needs 8 host devices: the CALLER must set
+XLA_FLAGS=--xla_force_host_platform_device_count=8 in the subprocess
+environment (tests/test_moe_dispatch.py does) — setting os.environ here
+would silently no-op whenever jax was already initialized, so instead we
+fail loudly if the device count is wrong rather than pass vacuously."""
+import sys
+
 import jax, jax.numpy as jnp, numpy as np
+
+if jax.device_count() < 8:
+    sys.exit(f"moe_sharded_check needs 8 host devices, have "
+             f"{jax.device_count()}: set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8 in the environment "
+             "before launching this script")
 from repro.models import ModelConfig, MoEConfig
 from repro.models.config import repeat_pattern
 from repro.models import moe as MOE, moe_sharded as MOES, blocks as B

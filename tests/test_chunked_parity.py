@@ -167,6 +167,113 @@ def test_chunked_requires_paged_and_attention_only(parts):
                                            prefill_chunk=8))
 
 
+# ----------------------------------------------------------------- packing
+
+
+def test_chunk_packing_parity_fewer_launches(parts):
+    """prefill_pack > 1 packs several queued requests' chunks into ONE
+    quantum when their combined token count fits prefill_chunk: every
+    token stream, the FCFS completion order, and the metered prefill
+    totals are EXACTLY the K=1 schedule's (packing regroups launches, it
+    never re-chunks a request) — only the launch count drops."""
+    _, m, params = parts
+    rng = np.random.default_rng(9)
+    lens = (3, 2, 4, 6, 2, 3, 9, 5)    # mostly sub-chunk prompts
+    reqs = [dict(rid=i, prompt=list(rng.integers(0, 256, int(n))),
+                 max_new_tokens=5) for i, n in enumerate(lens)]
+    runs = {}
+    for pack in (1, 3):
+        resp, eng = run_engine(m, params, reqs, CH, prefill_pack=pack)
+        pf = eng.meter.phase("prefill")
+        runs[pack] = ({rid: r.tokens for rid, r in resp.items()},
+                      eng.prefill_chunks,
+                      (pf.steps, pf.tokens, pf.energy_j, pf.time_s))
+        assert_pool_clean(eng)
+    assert runs[1][0] == runs[3][0], "packing changed a token stream"
+    assert runs[3][1] < runs[1][1], "packing never merged a launch"
+    assert runs[1][2] == runs[3][2], "packing drifted the prefill meter"
+    # and the packed engine still matches the monolithic oracle
+    eng = assert_parity(m, params, reqs, prefill_chunk=CH, prefill_pack=3)
+    assert_pool_clean(eng)
+
+
+def test_packing_with_sharing_one_cow_per_launch(parts, monkeypatch):
+    """Regression: two whole-prompt-shared adopters of the SAME page must
+    not copy-on-write it inside one packed launch. The device CoWs every
+    row against a single pre-launch refcount snapshot — two rows at ref 2
+    would BOTH privatize and free the original — while the host mirror
+    decrefs sequentially (second row sees ref 1, keeps the page indexed):
+    a use-after-free window in the prefix index for the next adopter.
+    pack_chunks therefore packs at most one CoW-pending row per launch;
+    a spy on the packer pins that rule against the live schedule below.
+
+    Schedule: the donor registers its prefix and keeps decoding while a
+    long prompt occupies the prefill queue; two whole-prompt twins then
+    admit (adopting the resident pages), the donor releases (ref -> 2),
+    and the twins' recomputed-tail chunks reach the packer together."""
+    _, m, params = parts
+    rng = np.random.default_rng(21)
+    donor_prompt = list(rng.integers(0, 256, 2 * PS))    # two whole pages
+    long_prompt = list(rng.integers(0, 256, 6 * CH))
+
+    cow_rows: list = []
+    real_pack = engine_mod.pack_chunks
+
+    def spy(prefilling, chunk, pack):
+        out = real_pack(prefilling, chunk, pack)
+        cow_rows.append(sum(1 for req, _, _, _ in out if req.cow_pending))
+        return out
+
+    monkeypatch.setattr(engine_mod, "pack_chunks", spy)
+
+    def run(pack):
+        eng = ServingEngine(m, params, EngineConfig(
+            max_batch=4, max_len=64, sync_every=4, paged=True,
+            page_size=PS, prefill_chunk=CH, prefill_pack=pack,
+            prefix_sharing=True))
+        eng.submit(Request(rid=0, prompt=list(donor_prompt),
+                           max_new_tokens=6))
+        eng.submit(Request(rid=1, prompt=list(long_prompt),
+                           max_new_tokens=4))
+        eng.run(max_steps=2)           # donor registered + decoding
+        eng.submit(Request(rid=2, prompt=list(donor_prompt),
+                           max_new_tokens=3))
+        eng.submit(Request(rid=3, prompt=list(donor_prompt),
+                           max_new_tokens=3))
+        resps = {r.rid: r.tokens for r in eng.run()}
+        return resps, eng
+
+    base, beng = run(1)
+    assert beng.prefix_shared_requests >= 2   # the twins really adopted
+    cow_rows.clear()
+    packed, eng = run(3)
+    assert packed == base, "packed CoW launch changed a token stream"
+    assert eng.prefix_shared_requests >= 2
+    # both twins' CoW chunks flowed through the packer, never together
+    assert sum(cow_rows) >= 2
+    assert max(cow_rows) <= 1, \
+        "two CoW-pending rows packed into one launch"
+    assert_pool_clean(eng)
+    assert_pool_clean(beng)
+
+
+def test_packing_respects_chunk_budget(parts):
+    """Prompts of one full chunk or more leave no budget to pack behind
+    the head: the launch count (and everything else) must equal K=1 —
+    the knob can only merge launches the budget allows."""
+    _, m, params = parts
+    rng = np.random.default_rng(10)
+    reqs = [dict(rid=i, prompt=list(rng.integers(0, 256, int(n))),
+                 max_new_tokens=4)
+            for i, n in enumerate((CH, 2 * CH, 3 * CH))]
+    launches = {}
+    for pack in (1, 4):
+        resp, eng = run_engine(m, params, reqs, CH, prefill_pack=pack)
+        launches[pack] = (eng.prefill_chunks,
+                          {rid: r.tokens for rid, r in resp.items()})
+    assert launches[1] == launches[4]
+
+
 # ---------------------------------------------------------------- metering
 
 

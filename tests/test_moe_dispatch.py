@@ -78,6 +78,10 @@ def test_sharded_moe_parity_subprocess():
                           "moe_sharded_check.py")
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
+    # the flag must be in the environment BEFORE the subprocess's first
+    # jax import; the helper fails loudly (never passes vacuously) if the
+    # forced device count didn't take
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     r = subprocess.run([sys.executable, helper],
                        capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]

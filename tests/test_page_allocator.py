@@ -214,6 +214,147 @@ def test_sharing_interleavings_refcount_and_conserve(ops):
     assert sorted(np.asarray(a["free"]).tolist()) == list(range(P))
 
 
+# ------------------------------------------------------- per-shard stacks
+#
+# The mesh-sharded engine (serving/sharded.py) stacks the allocator with a
+# leading shard axis — free stacks (S, P), tables (S, B, M) — and runs the
+# SAME ops per shard inside one fleet program. The properties that make
+# that sound: every shard's stack obeys the single-shard invariants
+# independently, no op targeting one shard perturbs any other shard's
+# state (pages cannot cross shards), and writes routed to the trash page
+# land in the writing shard's pool only. Ops are vmapped here exactly as
+# the fleet program maps them per lane; idle lanes use the engine's
+# sentinel conventions (slot id B drops scatters, empty masks no-op).
+
+S = 3                                  # shards exercised in the suite
+
+_v_alloc_prefill = jax.jit(jax.vmap(paged.alloc_prefill_pages))
+_v_alloc_decode = jax.jit(jax.vmap(
+    lambda a, l, act: paged.alloc_decode_pages(a, l, act, PS)))
+_v_release = jax.jit(jax.vmap(paged.release_slots))
+
+
+def _stack_alloc():
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (S,) + x.shape),
+        paged.init_allocator(B, M, P))
+
+
+def _lane_alloc(a, s):
+    return {k: np.asarray(v)[s] for k, v in jax.device_get(a).items()}
+
+
+def _assert_other_lanes_frozen(before, after, target):
+    for s in range(S):
+        if s == target:
+            continue
+        for k in ("tbl", "free", "top", "ref"):
+            assert (np.asarray(before[k])[s]
+                    == np.asarray(after[k])[s]).all(), \
+                f"op on shard {target} perturbed shard {s}'s {k}"
+
+
+# op encoding: (shard, kind, slot, amount) — kinds as in the single-shard
+# interleaving suite, each applied to ONE shard via a vmapped fleet op
+shard_ops = st.lists(
+    st.tuples(st.integers(0, S - 1), st.integers(0, 2),
+              st.integers(0, B - 1), st.integers(0, M * PS - 1)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_ops)
+def test_per_shard_interleavings_conserve_and_isolate(ops):
+    """Random per-shard prefill/decode/release interleavings through
+    vmapped fleet ops: every shard independently satisfies conservation
+    (top + #mapped == num_pages) and no-aliasing, and the op's lane is the
+    ONLY lane whose allocator state changes."""
+    alloc = _stack_alloc()
+    live_len = [[0] * B for _ in range(S)]
+    for shard, kind, slot, amount in ops:
+        before = jax.device_get(alloc)
+        tops = np.asarray(before["top"])
+        if kind == 0 and live_len[shard][slot] == 0:
+            n_tok = amount + 1
+            n_pages = -(-n_tok // PS)
+            if n_pages > int(tops[shard]):
+                continue               # engine admits by reservation
+            # idle lanes pass the sentinel slot id B: the row rewrite is
+            # dropped, the empty need mask pops nothing
+            slots = np.full((S, 1), B, np.int32)
+            npg = np.zeros((S, 1), np.int32)
+            slots[shard, 0] = slot
+            npg[shard, 0] = n_pages
+            alloc = _v_alloc_prefill(alloc, jnp.asarray(slots),
+                                     jnp.asarray(npg))
+            live_len[shard][slot] = n_tok
+        elif kind == 1:
+            active = np.zeros((S, B), bool)
+            ok = True
+            grows = 0
+            for b in range(B):
+                if live_len[shard][b] > 0 and (amount >> b) & 1:
+                    if live_len[shard][b] % PS == 0:
+                        if live_len[shard][b] >= M * PS:
+                            continue
+                        grows += 1
+                    active[shard, b] = True
+            if grows > int(tops[shard]):
+                ok = False             # reservation forbids this
+            if not ok:
+                continue
+            lengths = jnp.asarray([live_len[s] for s in range(S)],
+                                  jnp.int32)
+            alloc = _v_alloc_decode(alloc, lengths, jnp.asarray(active))
+            for b in range(B):
+                if active[shard, b]:
+                    live_len[shard][b] += 1
+        elif kind == 2 and live_len[shard][slot] > 0:
+            mask = np.zeros((S, B), bool)
+            mask[shard, slot] = True
+            alloc = _v_release(alloc, jnp.asarray(mask))
+            live_len[shard][slot] = 0
+        else:
+            continue
+        after = jax.device_get(alloc)
+        _assert_other_lanes_frozen(before, after, shard)
+        for s in range(S):
+            check_invariants(_lane_alloc(alloc, s), live_len[s])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, min(M, P)), st.integers(0, S - 1))
+def test_no_page_crosses_shards(n_pages, shard):
+    """The same physical page id allocated on every shard maps into each
+    shard's OWN pool: concurrent full-fleet allocations all succeed with
+    per-shard LIFO ids, and releasing one shard returns pages to that
+    shard's stack only."""
+    alloc = _stack_alloc()
+    slots = np.zeros((S, 1), np.int32)
+    npg = np.full((S, 1), n_pages, np.int32)
+    alloc = _v_alloc_prefill(alloc, jnp.asarray(slots), jnp.asarray(npg))
+    a = jax.device_get(alloc)
+    rows = np.asarray(a["tbl"])[:, 0, :n_pages]
+    # every shard popped the SAME ids off its own stack (stacks started
+    # identical) — the ids collide by value, never by storage
+    assert (rows == rows[0]).all()
+    assert (np.asarray(a["top"]) == P - n_pages).all()
+    mask = np.zeros((S, B), bool)
+    mask[shard, 0] = True
+    before = jax.device_get(alloc)
+    alloc = _v_release(alloc, jnp.asarray(mask))
+    _assert_other_lanes_frozen(before, jax.device_get(alloc), shard)
+    a = jax.device_get(alloc)
+    assert int(np.asarray(a["top"])[shard]) == P
+    for s in range(S):
+        if s != shard:
+            assert int(np.asarray(a["top"])[s]) == P - n_pages
+
+
+# (the deterministic trash-page shard-locality check lives in
+# tests/test_paged_parity.py so it runs even without hypothesis)
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, P))
 def test_free_stack_is_lifo(n_pages):

@@ -197,3 +197,28 @@ def test_windowed_model_rejects_paged_mode(parts):
     with pytest.raises(ValueError, match="paged"):
         ServingEngine(m, params, EngineConfig(max_batch=2, max_len=64,
                                               paged=True, page_size=PS))
+
+
+def test_trash_page_writes_stay_shard_local():
+    """Shard-stacked pools (the mesh-sharded fleet's layout): a slot with
+    no mapped page (finished, coasting inside a fused chunk) writes its
+    garbage into ITS shard's trash page — no other shard's pool leaf
+    changes by a single byte. Lives here rather than the allocator
+    property suite so it runs even without hypothesis installed."""
+    import jax.numpy as jnp
+    from repro.models.attention import paged_decode_write
+
+    S, B, M, P, H, hd = 3, 4, 4, 10, 2, 4
+    cache = {
+        "k_pages": jnp.zeros((S, H, P + 1, PS, hd)),
+        "v_pages": jnp.zeros((S, H, P + 1, PS, hd)),
+        "pos_ids": jnp.full((S, B, M * PS), -1, jnp.int32),
+        "length": jnp.zeros((S, B), jnp.int32),
+    }
+    tbl = jnp.full((S, B, M), -1, jnp.int32)   # nobody owns pages
+    k1 = jnp.ones((S, B, 1, H, hd))
+    out = jax.jit(jax.vmap(paged_decode_write))(cache, tbl, k1, k1)
+    kp = np.asarray(out["k_pages"])
+    for s in range(S):
+        assert (kp[s, :, P] != 0).any(), "trash write missing on own shard"
+        assert (kp[s, :, :P] == 0).all(), "write leaked into a real page"
