@@ -1,8 +1,9 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test test-all kernels paged chunked prefix sharded check-clean \
-	verify bench-engine bench-engine-sharded bench-smoke bench
+.PHONY: test test-all kernels paged chunked prefix sharded server \
+	check-clean verify bench-engine bench-engine-sharded \
+	bench-engine-server bench-smoke bench
 
 test:               ## tier-1 suite (fail fast: local inner loop)
 	$(PY) -m pytest -x -q
@@ -28,7 +29,12 @@ prefix:             ## prefix-sharing parity + copy-on-write + refcount invarian
 # sharded suite gets its own pytest invocation with XLA_FLAGS on the recipe
 sharded:            ## mesh-sharded fleet parity + placement (4 forced host devices)
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-	    $(PY) -m pytest -q tests/test_sharded_parity.py
+	    $(PY) -m pytest -q tests/test_sharded_parity.py \
+	    tests/test_sharded_preemption.py
+
+server:             ## front door: async server + preemption + faults (plain asyncio)
+	$(PY) -m pytest -q tests/test_server.py tests/test_preemption.py \
+	    tests/test_faults.py
 
 check-clean:        ## fail if compiled artifacts are tracked by git
 	@bad=$$(git ls-files | grep -E '(\.pyc$$|__pycache__/)' || true); \
@@ -36,7 +42,7 @@ check-clean:        ## fail if compiled artifacts are tracked by git
 	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
 	fi
 
-verify: check-clean test kernels paged chunked prefix sharded ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded sweeps
+verify: check-clean test kernels paged chunked prefix sharded server ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py
@@ -47,6 +53,11 @@ bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 bench-engine-sharded: ## merge a 4-device sharded section into BENCH_engine.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) benchmarks/engine_bench.py --sharded-only
+
+# the open-loop server bench is wall-clock sensitive; refresh it alone on a
+# quiet machine without re-measuring the other sections
+bench-engine-server: ## merge an open-loop async-server section into BENCH_engine.json
+	$(PY) benchmarks/engine_bench.py --server-only
 
 bench-smoke:        ## CI: every bench code path once, reduced size -> BENCH_engine_smoke.json
 	$(PY) benchmarks/engine_bench.py --smoke

@@ -1,0 +1,159 @@
+"""Trace-driven open-loop load generator for the async serving front door.
+
+The engine benchmarks elsewhere in this directory are closed-loop: the
+whole workload is queued up front and ``run()`` drains it, so arrival
+pressure never interacts with scheduling. The robustness machinery this
+generator exists to measure — priority preemption, bounded-queue
+shedding, deadline cancellation — only shows up under OPEN-loop traffic:
+requests arrive on a wall-clock trace while earlier ones decode, each
+client streams its own tokens, and TTFT is measured from submission (not
+from admission, which is exactly what queueing delay corrupts).
+
+Three pieces:
+
+  * trace builders — ``poisson_trace`` (steady background arrivals) and
+    ``bursty_trace`` (clustered spikes), both returning arrival seconds;
+  * ``mixed_requests`` — turns a trace into request SPECS (plain dicts,
+    not ``Request`` objects: the engine mutates requests in place on
+    eviction, so every serve pass must build fresh ones);
+  * ``run_open_loop`` — serves one trace through an
+    ``AsyncServingServer``: one asyncio client per request sleeps until
+    its arrival time, submits, streams, and records per-request metrics
+    (TTFT, queue wait, finish reason, token count).
+
+``summarize`` folds the per-request records into per-priority-class
+latency percentiles and finish-reason counts — the shape the ``server``
+section of BENCH_engine.json reports.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving import AsyncServingServer, Request
+
+Spec = Dict          # Request kwargs + "arrival_s"
+
+
+# --------------------------------------------------------------- traces
+
+
+def poisson_trace(rate_per_s: float, n: int, rng) -> List[float]:
+    """n arrival times with exponential inter-arrival gaps (Poisson
+    process) — the steady background stream."""
+    if rate_per_s <= 0:
+        raise ValueError("rate_per_s must be positive")
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, n)).tolist()
+
+
+def bursty_trace(n_bursts: int, burst_size: int, gap_s: float,
+                 spread_s: float, rng, start_s: float = 0.0) -> List[float]:
+    """Clustered spikes: ``n_bursts`` groups of ``burst_size`` arrivals,
+    each group spread uniformly over ``spread_s`` seconds, groups
+    ``gap_s`` apart — the overload pattern that makes preemption and
+    shedding earn their keep."""
+    out: List[float] = []
+    for b in range(n_bursts):
+        t0 = start_s + b * gap_s
+        out.extend(sorted(t0 + rng.uniform(0.0, spread_s)
+                          for _ in range(burst_size)))
+    return out
+
+
+def mixed_requests(arrivals: Sequence[float], rng, *,
+                   prompt_len: Tuple[int, int] = (6, 16),
+                   max_new_tokens: int = 8, priority: int = 0,
+                   deadline_s: Optional[float] = None, rid0: int = 0,
+                   vocab: int = 256) -> List[Spec]:
+    """One request spec per arrival. Returns plain dicts (with an
+    ``arrival_s`` key) rather than ``Request`` objects: eviction folds
+    emitted tokens into ``req.prompt`` in place, so a trace served twice
+    (e.g. preemption off vs on) MUST rebuild its requests per pass."""
+    lo, hi = prompt_len
+    return [dict(arrival_s=float(t), rid=rid0 + i,
+                 prompt=[int(x) for x in
+                         rng.integers(1, vocab, int(rng.integers(lo, hi + 1)))],
+                 max_new_tokens=max_new_tokens, priority=priority,
+                 deadline_s=deadline_s)
+            for i, t in enumerate(arrivals)]
+
+
+# ------------------------------------------------------------ open loop
+
+
+async def _client(server: AsyncServingServer, t0: float, spec: Spec,
+                  records: Dict[int, Dict]) -> None:
+    spec = dict(spec)
+    at = spec.pop("arrival_s")
+    req = Request(**spec)
+    now = time.perf_counter() - t0
+    if at > now:
+        await asyncio.sleep(at - now)
+    rec = records[req.rid] = {"priority": req.priority, "arrival_s": at,
+                              "ttft_s": None, "n_tokens": 0,
+                              "finish_reason": None}
+    try:
+        await server.submit(req)
+    except ValueError:
+        rec["finish_reason"] = "rejected"
+        return
+    t_sub = time.perf_counter()
+    async for _tok in server.stream(req.rid):
+        if rec["ttft_s"] is None:
+            rec["ttft_s"] = time.perf_counter() - t_sub
+        rec["n_tokens"] += 1
+    resp = await server.result(req.rid)
+    rec["finish_reason"] = resp.finish_reason
+    rec["queue_wait_s"] = resp.queue_wait_s
+    rec["preemptions"] = resp.preemptions
+
+
+def run_open_loop(engine, specs: Sequence[Spec],
+                  max_steps: int = 500_000) -> Dict[int, Dict]:
+    """Serve one trace open-loop through an ``AsyncServingServer`` on a
+    fresh event loop; returns per-rid metric records."""
+
+    async def go():
+        server = AsyncServingServer(engine, max_steps=max_steps)
+        t0 = time.perf_counter()
+        records: Dict[int, Dict] = {}
+        await asyncio.gather(*(_client(server, t0, s, records)
+                               for s in specs))
+        await server.drain()
+        return records
+
+    return asyncio.run(go())
+
+
+# ------------------------------------------------------------- summary
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def summarize(records: Dict[int, Dict]) -> Dict:
+    """Per-priority-class TTFT percentiles + finish-reason counts."""
+    out: Dict = {"classes": {}, "n_requests": len(records)}
+    by_class: Dict[int, List[Dict]] = {}
+    for rec in records.values():
+        by_class.setdefault(rec["priority"], []).append(rec)
+    for prio, recs in sorted(by_class.items()):
+        ttfts = [r["ttft_s"] for r in recs if r["ttft_s"] is not None]
+        reasons: Dict[str, int] = {}
+        for r in recs:
+            reasons[str(r["finish_reason"])] = \
+                reasons.get(str(r["finish_reason"]), 0) + 1
+        out["classes"][str(prio)] = {
+            "n": len(recs),
+            "served": len(ttfts),
+            "ttft_p50_s": _pct(ttfts, 50),
+            "ttft_p99_s": _pct(ttfts, 99),
+            "finish_reasons": reasons,
+            "shed": reasons.get("shed", 0),
+            "tokens": int(sum(r["n_tokens"] for r in recs)),
+        }
+    return out

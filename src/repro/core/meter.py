@@ -6,6 +6,15 @@ component: every prefill/decode step the engine executes reports its
 region CI (optionally time-varying) and amortized embodied carbon via the
 device profile — giving the paper's per-token, per-phase breakdowns
 (Figures 2–6) live, per request class, in production.
+
+Phase names are open-ended (``phases`` is a defaultdict); the serving
+engines use three: ``"prefill"`` and ``"decode"`` for ordinary work, and
+``"recompute"`` for the resume prefill of a PREEMPTED request. Keeping
+recompute out of the prefill bucket makes the prefill/decode J-per-token
+figures — and every non-preempted request's attributed energy — invariant
+to the preemption policy, while the recompute phase totals the true
+energy price of preemption (the engine also surfaces it per request as
+``Response.recompute_j`` and fleet-wide as ``preempted_recompute_j``).
 """
 from __future__ import annotations
 

@@ -1,6 +1,10 @@
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import (FaultError, FaultInjector, FaultPlan,
+                                  InjectedFault)
 from repro.serving.request import Request, Response
+from repro.serving.server import AsyncServingServer
 from repro.serving.sharded import ShardedServingEngine
 
 __all__ = ["EngineConfig", "ServingEngine", "ShardedServingEngine",
-           "Request", "Response"]
+           "AsyncServingServer", "Request", "Response",
+           "FaultPlan", "FaultInjector", "FaultError", "InjectedFault"]

@@ -89,7 +89,8 @@ from repro.core.hardware import HardwareProfile, get_profile
 from repro.core.meter import CarbonMeter
 from repro.models import Model
 from repro.models.costing import workload_of
-from repro.serving import paged, sampling
+from repro.serving import paged, preempt, sampling
+from repro.serving.faults import FaultError, InjectedFault
 from repro.serving.request import Request, Response
 
 
@@ -154,6 +155,9 @@ _CHUNK_PREFILL = jax.jit(_chunk_prefill_fn, static_argnums=(0,),
 _BEGIN_CHUNKED = jax.jit(paged.begin_chunked_prefill)
 _MAP_PREFIX = jax.jit(paged.map_shared_prefix)
 _ARM = jax.jit(sampling.arm_slots)
+_RELEASE_KEEP = jax.jit(paged.release_slots_keep)
+_DECREF = jax.jit(paged.decref_pages)
+_DISARM = jax.jit(sampling.disarm_slots)
 
 
 def pack_chunks(prefilling, chunk: int, pack: int):
@@ -241,6 +245,36 @@ class EngineConfig:
     # mesh-sharded serving (ShardedServingEngine): data-parallel shard
     # count. The base ServingEngine is single-device and ignores it.
     shards: int = 1
+    # ---- front-door robustness (async server, PR 6) ----
+    # bounded admission queue: a submission arriving with the queue at
+    # max_queue is SHED per shed_policy instead of queued (the request's
+    # Response finishes immediately with finish_reason="shed"). None =
+    # unbounded (the pre-front-door behavior).
+    max_queue: Optional[int] = None
+    # "reject_newest": the incoming request is the one shed.
+    # "reject_lowest": the newest request of the LOWEST waiting priority
+    # class is shed to make room — unless the incoming request itself is
+    # at or below that class, in which case it is shed instead (a burst
+    # of high-priority traffic displaces queued low-priority work, never
+    # the reverse).
+    shed_policy: str = "reject_newest"
+    # graceful degradation: when the bounded queue is at least half full,
+    # requests admitted from a priority class strictly below the highest
+    # waiting class get max_new_tokens clamped to this value — shorter
+    # low-class answers free slots and pages for the classes the fleet is
+    # actually backed up on. None = never clamp.
+    pressure_clamp: Optional[int] = None
+    # priority preemption (requires prefill_chunk): a request that cannot
+    # be admitted for lack of a slot or pages may evict the lowest armed
+    # slot of a STRICTLY lower priority class; the victim's computed
+    # prefix stays resident via the prefix-index pin and the request
+    # resumes by re-admission (see serving/preempt.py for the contract).
+    preemption: bool = False
+    # fault recovery: a launch site (page_alloc / prefill_chunk /
+    # decode_scan) that keeps failing is retried with exponential backoff
+    # up to this many CONSECUTIVE failures, after which run() raises
+    # FaultError with engine state consistent (serving/faults.py).
+    max_retries: int = 3
     # page-level prefix sharing (requires prefill_chunk): requests whose
     # prompts repeat a page-aligned prefix already resident in the pool map
     # those pages into their block table by refcount instead of recomputing
@@ -285,6 +319,38 @@ class ServingEngine:
         # occupied (slot_rid >= 0) during its whole prefill but must not
         # trigger decode scans until its last chunk arms it
         self._slot_armed = [False] * B
+        # front-door mirrors: the Request occupying each slot (eviction
+        # and deadline cancellation mutate it in place), its priority
+        # class, and its absolute deadline
+        self._slot_req: List[Optional[Request]] = [None] * B
+        self._slot_prio = [0] * B
+        self._slot_deadline: List[Optional[float]] = [None] * B
+        self._has_deadlines = False    # skip the sweep when nobody set one
+        # scheduling-quantum counter (one per step()) — the fault
+        # injector's clock and the backoff schedule's time base
+        self._quantum = 0
+        self._run_q0 = 0               # quantum at the current run()'s start
+        self.faults = None             # Optional[faults.FaultInjector]
+        self._backoff: Dict[str, Tuple[int, int]] = {}   # site -> (fails, retry_at)
+        self.fault_retries = 0
+        # front-door counters (stats())
+        self.shed_count = 0
+        self._shed_by_class: Dict[int, int] = {}
+        self.preemption_count = 0
+        self.deadline_cancelled = 0
+        self.clamped_requests = 0
+        self.preempted_recompute_j = 0.0
+        self._wait_samples: Dict[int, List[float]] = {}  # class -> waits (s)
+        # preemption pins: rid -> physical pages whose refcounts were
+        # transferred out of the evicted slot (kept resident + indexed for
+        # the resume's prefix hit); dropped after re-adoption or cancel
+        self._pins: Dict[int, List[int]] = {}
+        if cfg.shed_policy not in ("reject_newest", "reject_lowest"):
+            raise ValueError(f"unknown shed_policy {cfg.shed_policy!r}")
+        if cfg.max_queue is not None and cfg.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if cfg.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
 
         self.paged = cfg.paged
         if cfg.paged:
@@ -328,6 +394,12 @@ class ServingEngine:
             # FCFS queue of (request, slot) mid-prefill; req.prefill_pos
             # tracks how many prompt tokens are already in the pool
             self._prefilling: deque = deque()
+        if cfg.preemption and not self.chunked:
+            raise ValueError(
+                "preemption requires chunked prefill (prefill_chunk set): "
+                "a preempted request resumes through the chunked admission "
+                "path, adopting its pinned prefix and recomputing only the "
+                "unshared tail")
 
         self.sharing = cfg.prefix_sharing
         if self.sharing:
@@ -356,14 +428,19 @@ class ServingEngine:
 
     # ------------------------------------------------------------- metering
     def _meter_prefill(self, batch: int, seq: int,
-                       useful_seq: Optional[float] = None, skip: int = 0):
+                       useful_seq: Optional[float] = None, skip: int = 0,
+                       phase: str = "prefill"):
         """Meter one prefill launch of ``batch`` sequences padded to
         ``seq``; ``useful_seq`` (mean real tokens per row) attributes only
         the real tokens while the energy covers the whole padded launch.
         ``skip`` > 0 (prefix sharing, batch 1) removes the cost of the
         first ``skip`` tokens — their compute and KV writes never ran;
         the difference prefill(seq) - prefill(skip) is exactly the cost
-        of computing the suffix with attention over the full prefix."""
+        of computing the suffix with attention over the full prefix.
+        ``phase`` names the meter bucket: a preempted request's resume
+        prefill is charged to ``"recompute"`` so the prefill phase's
+        J/token — and every non-preempted request's modeled energy — is
+        invariant to the preemption policy."""
         counts = prefill_counts(self.workload, batch, seq,
                                 useful_seq=useful_seq)
         if skip > 0:
@@ -376,7 +453,7 @@ class ServingEngine:
                 kv_bytes=counts.kv_bytes - base.kv_bytes,
                 compute_tokens=counts.compute_tokens - base.compute_tokens)
         rep = step_energy(self.profile, counts)
-        self.meter.record("prefill", rep.tokens, rep.t_total, rep.energy_j)
+        self.meter.record(phase, rep.tokens, rep.t_total, rep.energy_j)
         return rep
 
     def _meter_decode(self, batch: int, context: float):
@@ -387,9 +464,95 @@ class ServingEngine:
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        """Validate, register, and enqueue (or shed) a request. Raises
+        ValueError immediately for requests that are malformed rather than
+        merely unschedulable — failing here beats failing deep inside
+        bucketing or prefill with a shape error."""
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+        if self.cfg.paged and len(req.prompt) > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"exceeds max_len={self.cfg.max_len} — the paged block "
+                "table has no ring eviction, so the prompt can never be "
+                "represented (shorten it or raise max_len)")
+        if req.rid in self.responses:
+            raise ValueError(f"request {req.rid}: duplicate rid")
+        req.t_submit = time.perf_counter()
+        if req.deadline_s is not None:
+            self._has_deadlines = True
         self._req_slo[req.rid] = req.slo_s
-        self.responses[req.rid] = Response(rid=req.rid, tokens=[])
+        self.responses[req.rid] = Response(rid=req.rid, tokens=[],
+                                           priority=req.priority)
+        mq = self.cfg.max_queue
+        if mq is not None and len(self.queue) >= mq:
+            victim = self._pick_shed_victim(req)
+            if victim is req:
+                self._shed(req)
+                return
+            self.queue.remove(victim)
+            self._shed(victim)
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request, resume: bool = False) -> None:
+        """Priority-ordered insert, FCFS within a class (all-default
+        priorities degrade to the plain FCFS append the parity oracles
+        rely on). ``resume`` inserts at the FRONT of the request's class
+        band: a preempted request already waited its turn once."""
+        q = self.queue
+        if resume:
+            i = 0
+            while i < len(q) and q[i].priority > req.priority:
+                i += 1
+        else:
+            i = len(q)
+            while i > 0 and q[i - 1].priority < req.priority:
+                i -= 1
+        q.insert(i, req)
+
+    def _pick_shed_victim(self, incoming: Request) -> Request:
+        if self.cfg.shed_policy == "reject_newest":
+            return incoming
+        # reject_lowest: shed the NEWEST request of the LOWEST waiting
+        # class — unless the incoming request is at or below that class
+        lowest = min(r.priority for r in self.queue)
+        if incoming.priority <= lowest:
+            return incoming
+        for r in reversed(self.queue):
+            if r.priority == lowest:
+                return r
+        return incoming                # unreachable: lowest came from queue
+
+    def _shed(self, req: Request) -> None:
+        resp = self.responses[req.rid]
+        resp.finished = True
+        resp.finish_reason = "shed"
+        self.shed_count += 1
+        self._shed_by_class[req.priority] = (
+            self._shed_by_class.get(req.priority, 0) + 1)
+        self._drop_pin(req.rid)        # a shed resumee abandons its pin
+
+    def _drop_pin(self, rid: int) -> None:
+        """Release a preemption pin: decref the pinned pages on device and
+        mirror the last-holder-credits-once flow on the host (pins only
+        exist with prefix sharing — the pin IS an index residency)."""
+        pins = self._pins.pop(rid, None)
+        if not pins:
+            return
+        pages = np.full((self.max_pages_slot,), -1, np.int32)
+        pages[:len(pins)] = pins
+        self.caches = dict(self.caches)
+        self.caches["paged"] = _DECREF(self.caches["paged"],
+                                       jnp.asarray(pages))
+        for p in pins:
+            self._page_ref[p] -= 1
+            if self._page_ref[p] <= 0:
+                self._drop_index_page(p)
+                self.free_pages += 1   # the pin was the last holder
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_rid) if r < 0]
@@ -457,6 +620,7 @@ class ServingEngine:
         resp = self.responses[req.rid]
         resp.finished = True
         resp.rejected = True
+        resp.finish_reason = "rejected"
 
     def _release_slots(self, slots: List[int]) -> None:
         """Return finished slots' pages to the pool: device free stack
@@ -492,7 +656,212 @@ class ServingEngine:
             self.free_pages += ret
             self._slot_pages[s] = 0
 
+    # ---------------------------------------------------------------- faults
+    # The three injectable launch sites (serving/faults.py) all follow the
+    # same discipline: the injection point sits BEFORE any device mutation,
+    # so a fault means the launch never happened — the site's work stays
+    # queued (admission re-queues its takes explicitly; prefill/decode work
+    # was never dequeued) and is retried after an exponential backoff of
+    # 2**fails quanta. max_retries consecutive failures raise FaultError
+    # out of run() with every reservation returned.
+
+    def _inject(self, site: str) -> None:
+        if self.faults is not None:
+            self.faults.check(site, self._quantum, self._run_q0)
+
+    def _site_ready(self, site: str) -> bool:
+        return self._backoff.get(site, (0, 0))[1] <= self._quantum
+
+    def _site_failed(self, site: str) -> None:
+        fails = self._backoff.get(site, (0, 0))[0] + 1
+        self.fault_retries += 1
+        if fails > self.cfg.max_retries:
+            raise FaultError(
+                f"site {site!r} failed {fails} consecutive launches "
+                f"(max_retries={self.cfg.max_retries}); in-flight requests "
+                "are re-queued and reservations returned")
+        self._backoff[site] = (fails, self._quantum + 2 ** fails)
+
+    def _site_ok(self, site: str) -> None:
+        self._backoff.pop(site, None)
+
+    def _faults_pending(self) -> bool:
+        return bool(self._backoff)
+
+    # ------------------------------------------------------------ preemption
+    def _try_preempt(self, req: Request) -> bool:
+        """Evict ONE armed slot of a strictly lower priority class so
+        ``req`` (the queue head) can be admitted; True if a slot was
+        freed. Admission re-evaluates the head afterwards — repeated calls
+        evict at most one victim per shortfall, lowest class first."""
+        if not self.cfg.preemption:
+            return False
+        B = self.cfg.max_batch
+        progress = [
+            (self._slot_req[s].max_new_tokens - self.slot_budget[s])
+            if self._slot_req[s] is not None else 0
+            for s in range(B)]
+        victim = preempt.pick_victim(self._slot_armed, self._slot_prio,
+                                     progress, req.priority)
+        if victim is None:
+            return False
+        self._evict_slot(victim)
+        return True
+
+    def _evict_slot(self, slot: int) -> None:
+        """Evict the ARMED ``slot`` mid-decode (see serving/preempt.py for
+        the full contract): disarm its device state, release its pages
+        except the leading indexed run (refcounts transfer to a host pin,
+        keeping the computed prefix resident and adoptable), fold the
+        tokens generated so far into the request's prompt, and requeue it
+        at the front of its priority band. Resume is ordinary re-admission:
+        the folded prompt's leading pages hit the (pinned) prefix index, so
+        only the unshared tail is recomputed — metered as 'recompute'."""
+        req = self._slot_req[slot]
+        resp = self.responses[req.rid]
+        remaining = self.slot_budget[slot]
+        emitted = req.max_new_tokens - remaining   # since (re)admission
+        assert emitted > 0 and remaining > 0, "victim must be mid-decode"
+        # the last emitted token is cur_tokens (not yet in the KV cache):
+        # the resumed prefill recomputes it as the prompt's final token and
+        # samples the NEXT token — exactly what the oracle's decode does
+        req.prompt = list(req.prompt) + resp.tokens[-emitted:]
+        req.max_new_tokens = remaining
+        req.prefill_pos = 0
+        req.prefix_keys = None         # prompt changed: re-digest lazily
+        req.shared_prefix_tokens = 0
+        req.cow_pending = False
+        req.preemptions += 1
+        resp.preemptions += 1
+        pinned: List[int] = []
+        if self.sharing:
+            held = set(self._slot_shared_in.get(slot, []))
+            held |= set(self._slot_own_idx.get(slot, []))
+            pinned = preempt.pinned_run(self._prompt_page_keys(req),
+                                        self._prefix_index, held)
+        mask = np.zeros((self.cfg.max_batch,), bool)
+        mask[slot] = True
+        n_keep = np.zeros((self.cfg.max_batch,), np.int32)
+        n_keep[slot] = len(pinned)
+        self.caches = dict(self.caches)
+        self.caches["paged"] = _RELEASE_KEEP(self.caches["paged"],
+                                             jnp.asarray(mask),
+                                             jnp.asarray(n_keep))
+        self.state = _DISARM(self.state, jnp.asarray([slot], jnp.int32))
+        self._account_eviction(slot, pinned)
+        if pinned:
+            self._pins[req.rid] = pinned
+        self._clear_slot(slot)
+        self.preemption_count += 1
+        self._enqueue(req, resume=True)
+
+    def _account_eviction(self, slot: int, pinned: List[int]) -> None:
+        """Host mirror of ``release_slots_keep``: pinned pages' references
+        transfer to the pin (``_page_ref`` unchanged — the device refcount
+        didn't move either); everything else follows the ordinary
+        popper-charges-once / last-holder-credits-once release flows."""
+        ret = self._slot_pages[slot]
+        if self.sharing:
+            keep = set(pinned)
+            for p in self._slot_own_idx.pop(slot, []):
+                if p in keep:
+                    ret -= 1           # stays resident under the pin
+                    continue
+                self._page_ref[p] -= 1
+                if self._page_ref[p] <= 0:
+                    self._drop_index_page(p)
+                else:
+                    ret -= 1           # survives under someone else's map
+            for p in self._slot_shared_in.pop(slot, []):
+                if p in keep:
+                    continue           # adopted ref transferred to the pin
+                self._page_ref[p] -= 1
+                if self._page_ref[p] <= 0:
+                    self._drop_index_page(p)
+                    ret += 1           # last holder frees the original
+        self.free_pages += ret
+        self._slot_pages[slot] = 0
+
+    def _clear_slot(self, slot: int) -> None:
+        self.slot_rid[slot] = -1
+        self.slot_budget[slot] = 0
+        self.slot_eos[slot] = None
+        self._slot_ctx[slot] = 0.0
+        self._slot_armed[slot] = False
+        self._slo[slot] = None
+        self._slot_req[slot] = None
+        self._slot_prio[slot] = 0
+        self._slot_deadline[slot] = None
+
+    # ------------------------------------------------------------- deadlines
+    def _cancel(self, rid: int, reason: str) -> None:
+        resp = self.responses[rid]
+        resp.finished = True
+        resp.finish_reason = reason
+        if reason == "deadline":
+            self.deadline_cancelled += 1
+        self._drop_pin(rid)
+
+    def _sweep_deadlines(self) -> None:
+        """Cancel every request whose deadline expired, wherever it is:
+        queued (just dropped), mid-chunked-prefill (slot + reservation
+        released), or armed mid-decode (disarmed, pages reclaimed in this
+        same quantum). Runs at the top of each quantum, so a cancelled
+        slot's pages are reusable by this quantum's own admission."""
+        now = time.perf_counter()
+
+        def expired(r: Request) -> bool:
+            return (r.deadline_s is not None
+                    and now - r.t_submit > r.deadline_s)
+
+        for req in [r for r in self.queue if expired(r)]:
+            self.queue.remove(req)
+            self._cancel(req.rid, "deadline")
+        if self.chunked:
+            for req, slot in [p for p in self._prefilling
+                              if expired(p[0])]:
+                self._prefilling.remove((req, slot))
+                self._clear_slot(slot)
+                self._release_slots([slot])
+                self._cancel(req.rid, "deadline")
+        doomed = [s for s in range(self.cfg.max_batch)
+                  if self._slot_armed[s] and self._slot_req[s] is not None
+                  and expired(self._slot_req[s])]
+        for s in doomed:
+            self.state = _DISARM(self.state, jnp.asarray([s], jnp.int32))
+            rid = self.slot_rid[s]
+            self._clear_slot(s)
+            self._release_slots([s])
+            self._cancel(rid, "deadline")
+
     # ------------------------------------------------------------ admission
+    def _apply_pressure_clamp(self, req: Request) -> None:
+        """Graceful degradation under queue pressure: once the admission
+        queue is at least half full, clamp the decode budget of requests
+        BELOW the best waiting class to ``pressure_clamp`` tokens. Everyone
+        below the top class gets shorter answers so more requests get
+        served at all — applied at admission (not submit) so a queue that
+        drains before the request's turn leaves it unclamped."""
+        clamp = self.cfg.pressure_clamp
+        if (clamp is None or self.cfg.max_queue is None
+                or 2 * len(self.queue) < self.cfg.max_queue):
+            return
+        top = max(r.priority for r in self.queue)
+        if req.priority < top and req.max_new_tokens > clamp:
+            req.max_new_tokens = clamp
+            self.clamped_requests += 1
+
+    def _stamp_admit(self, req: Request) -> None:
+        """Record queue wait on FIRST admission only — a preempted
+        request's wait is its original submit->admit interval; re-admission
+        latency shows up in its end-to-end latency, not its queue wait."""
+        if req.t_admit is not None:
+            return
+        req.t_admit = time.perf_counter()
+        wait = req.t_admit - req.t_submit
+        self.responses[req.rid].queue_wait_s = wait
+        self._wait_samples.setdefault(req.priority, []).append(wait)
+
     def _admit(self) -> int:
         """Batch-prefill waiting requests into free slots (phase 1).
 
@@ -501,14 +870,31 @@ class ServingEngine:
         device stack): a request that doesn't fit the REMAINING pool keeps
         waiting; one whose prompt alone can never fit the TOTAL pool is
         rejected outright instead of admitted-and-failed mid-prefill.
-        Returns the number of requests admitted."""
+        Returns the number of requests admitted.
+
+        With ``preemption`` on, a shortfall (no free slot, or not enough
+        free pages) for the queue head triggers eviction of ONE armed
+        lower-priority slot per retry instead of waiting — highest-value
+        work overtakes by reclaiming, never by starving FCFS within a
+        class. The whole reservation pass sits behind the ``page_alloc``
+        fault site: an injected fault returns every reservation and puts
+        the takes back at the queue head, so a failed admission launch is
+        indistinguishable from one that never ran."""
         if self._over_budget() and self.active > 0:
             return 0                   # defer admissions; drain active work
+        if self.queue and self.paged and not self._site_ready("page_alloc"):
+            return 0                   # backing off a faulted reservation
         free = self.free_slots()
         take: List[Request] = []
         share: Dict[int, Tuple[int, List[int], int]] = {}
-        while len(take) < len(free) and self.queue:
+        while self.queue:
             req = self.queue[0]
+            if len(take) >= len(free):
+                if not self._try_preempt(req):
+                    break              # no slot and nobody to evict
+                free = self.free_slots()
+                continue
+            self._apply_pressure_clamp(req)
             if self.paged:
                 L = len(req.prompt)
                 ps = self.cfg.page_size
@@ -538,10 +924,26 @@ class ServingEngine:
                     resv = n_total - first_tok // ps
                     share[req.rid] = (n_pg, phys, first_tok)
                 if resv > self.free_pages:
+                    if self._try_preempt(req):
+                        free = self.free_slots()
+                        continue       # evicted pages now in the pool
                     break              # keep waiting (FCFS, no overtaking)
                 self.free_pages -= resv
                 self._resv[req.rid] = resv
             take.append(self.queue.popleft())
+        if take and self.paged:
+            try:
+                self._inject("page_alloc")
+            except InjectedFault:
+                # the reservation launch "failed": undo it exactly — give
+                # every page back and restore the takes at the queue head
+                # in order. Nothing device-side happened yet by design.
+                for req in reversed(take):
+                    self.free_pages += self._resv.pop(req.rid)
+                    self.queue.appendleft(req)
+                self._site_failed("page_alloc")
+                return 0
+            self._site_ok("page_alloc")
         if self.paged:
             self.peak_pages_reserved = max(self.peak_pages_reserved,
                                            self.num_pages - self.free_pages)
@@ -561,6 +963,10 @@ class ServingEngine:
                 self._slot_ctx[slot] = 0.0
                 self._slo[slot] = req.slo_s
                 self._slot_pages[slot] = self._resv.pop(req.rid)
+                self._slot_req[slot] = req
+                self._slot_prio[slot] = req.priority
+                self._slot_deadline[slot] = req.deadline_s
+                self._stamp_admit(req)
                 req.prefill_pos = 0
                 self._prefilling.append((req, slot))
                 slots.append(slot)
@@ -569,6 +975,12 @@ class ServingEngine:
             if self.sharing:
                 for req, slot in zip(take, slots):
                     self._adopt_prefix(req, slot, *share[req.rid])
+                    # the resumed request has re-adopted its pinned prefix
+                    # through the ordinary index path (increfs above) — the
+                    # pin's own references can go now, adopt-then-release
+                    # so the pages never transit refcount zero
+                    if req.rid in self._pins:
+                        self._drop_pin(req.rid)
             return len(take)
         # bucket prompts: padded power-of-two buckets when the model masks
         # pad tokens exactly; exact-length groups otherwise (rwkv/enc-dec).
@@ -637,6 +1049,7 @@ class ServingEngine:
         now = time.perf_counter()
         released: List[int] = []
         for i, (req, slot) in enumerate(zip(reqs, slots)):
+            self._stamp_admit(req)
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
             resp.energy_j += rep.energy_j * (len(req.prompt) / tot_real)
@@ -646,6 +1059,7 @@ class ServingEngine:
                 self._slot_pages[slot] = self._resv.pop(req.rid)
             if req.max_new_tokens <= 1:
                 resp.finished = True   # prefill token was the whole budget
+                resp.finish_reason = "length"
                 released.append(slot)  # return its prompt pages right away
                 continue               # slot stays free (device side agrees)
             self.slot_rid[slot] = req.rid
@@ -654,6 +1068,9 @@ class ServingEngine:
             self._slot_ctx[slot] = float(len(req.prompt))
             self._slo[slot] = req.slo_s
             self._slot_armed[slot] = True
+            self._slot_req[slot] = req
+            self._slot_prio[slot] = req.priority
+            self._slot_deadline[slot] = req.deadline_s
         self._release_slots(released)
 
     def _adopt_prefix(self, req: Request, slot: int, n_pg: int,
@@ -712,8 +1129,19 @@ class ServingEngine:
         small prompts are queued. Returns the number of launches (0 or 1)."""
         if not self._prefilling:
             return 0
+        if not self._site_ready("prefill_chunk"):
+            return 0                   # backing off a faulted chunk launch
         C = self.cfg.prefill_chunk
         packed = pack_chunks(self._prefilling, C, self.cfg.prefill_pack)
+        try:
+            self._inject("prefill_chunk")
+        except InjectedFault:
+            # the launch never ran: the packed requests are still at the
+            # head of ``_prefilling`` with their prefill_pos untouched —
+            # the SAME chunks relaunch after backoff, nothing is dropped
+            self._site_failed("prefill_chunk")
+            return 0
+        self._site_ok("prefill_chunk")
         n = len(packed)
         tokens = np.zeros((n, C), np.int32)
         mask = np.zeros((n, C), np.int32)
@@ -773,21 +1201,37 @@ class ServingEngine:
             # genuinely never ran — so their cost is subtracted while the
             # request still accounts its full prompt as served tokens
             # (operational J/prompt-token falls with every cache hit).
-            rep = self._meter_prefill(1, len(req.prompt),
-                                      skip=req.shared_prefix_tokens)
+            rep = self._meter_prefill(
+                1, len(req.prompt), skip=req.shared_prefix_tokens,
+                phase="recompute" if req.preemptions else "prefill")
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
             resp.energy_j += rep.energy_j
-            resp.tokens.append(int(first_h[i]))
+            if req.preemptions:
+                resp.recompute_j += rep.energy_j
+                self.preempted_recompute_j += rep.energy_j
+            tok = int(first_h[i])
+            resp.tokens.append(tok)
             resp.t_emit.append(now)
             budget = req.max_new_tokens - 1
-            if budget <= 0:
+            # a FRESH request's prefill-sampled token is never EOS-checked
+            # (seed semantics: EOS only terminates decode); but a RESUMED
+            # request's first token is logically a mid-decode emission of
+            # the original request, so it must honor EOS for parity with
+            # the unpreempted oracle
+            eos_hit = (req.preemptions > 0 and req.eos_id is not None
+                       and tok == req.eos_id)
+            if budget <= 0 or eos_hit:
                 resp.finished = True   # prefill token was the whole budget
+                resp.finish_reason = "eos" if eos_hit else "length"
                 self.slot_rid[slot] = -1
                 self._slo[slot] = None
+                self._slot_req[slot] = None
+                self._slot_prio[slot] = 0
+                self._slot_deadline[slot] = None
                 released.append(slot)
                 continue
-            arm.append((slot, int(first_h[i]), budget,
+            arm.append((slot, tok, budget,
                         -1 if req.eos_id is None else req.eos_id))
             self.slot_budget[slot] = budget
             self._slot_ctx[slot] = float(len(req.prompt))
@@ -805,11 +1249,24 @@ class ServingEngine:
         return 1
 
     # --------------------------------------------------------------- decode
-    def _decode_chunk(self, max_steps: int) -> None:
+    def _decode_chunk(self, max_steps: int) -> bool:
         """One fused on-device chunk of up to ``sync_every`` decode steps
         for all armed slots (phase 2); a single host sync at the end.
         Slots still mid-chunked-prefill ride along inert (device ``active``
-        false, cursors frozen by the fused step)."""
+        false, cursors frozen by the fused step). Returns whether a chunk
+        actually launched (False while the ``decode_scan`` site backs off
+        a fault — armed slots keep their state and relaunch later)."""
+        if not self._site_ready("decode_scan"):
+            return False               # backing off a faulted scan launch
+        try:
+            self._inject("decode_scan")
+        except InjectedFault:
+            # nothing launched: cur_tokens/state/caches are exactly the
+            # pre-chunk values, so the relaunch after backoff resamples
+            # the identical chunk — no token is lost or double-emitted
+            self._site_failed("decode_scan")
+            return False
+        self._site_ok("decode_scan")
         budgets = [self.slot_budget[s] for s in range(self.cfg.max_batch)
                    if self._slot_armed[s]]
         n = min(self.cfg.sync_every, max(max(budgets), 1),
@@ -846,19 +1303,57 @@ class ServingEngine:
                 resp.energy_j += per_tok_e
                 self._slot_ctx[slot] += 1.0
                 self.slot_budget[slot] -= 1
-                done = self.slot_budget[slot] <= 0 or (
-                    self.slot_eos[slot] is not None
-                    and tok == self.slot_eos[slot])
-                if done:
+                eos_hit = (self.slot_eos[slot] is not None
+                           and tok == self.slot_eos[slot])
+                if self.slot_budget[slot] <= 0 or eos_hit:
                     resp.finished = True
+                    resp.finish_reason = "eos" if eos_hit else "length"
                     self.slot_rid[slot] = -1
                     self._slot_armed[slot] = False
                     self._slo[slot] = None
+                    self._slot_req[slot] = None
+                    self._slot_prio[slot] = 0
+                    self._slot_deadline[slot] = None
                     released.append(int(slot))
             self._steps += 1
         # page reclamation at the chunk boundary (finished slots coasted on
         # the trash page since their done flag rose mid-chunk)
         self._release_slots(released)
+        return True
+
+    def step(self, max_steps: int = 10_000) -> bool:
+        """Run ONE scheduling quantum: deadline sweep (when any request
+        declared one), admission, at most one prefill chunk, one fused
+        decode scan. Returns whether anything progressed — the async
+        server drives this directly so it can interleave submissions and
+        stream tokens between quanta."""
+        self._quantum += 1
+        if self._has_deadlines:
+            self._sweep_deadlines()
+        admitted = self._admit()
+        chunks = self._prefill_quantum() if self.chunked else 0
+        decoded = self._decode_chunk(max_steps) if self.decoding else False
+        return bool(admitted or chunks or decoded)
+
+    def _resolve_stall(self) -> None:
+        """The quantum made no progress, nothing is armed, no fault site
+        is backing off, yet requests wait: either preemption pins hold the
+        missing pages (spill them — resume just recomputes more) or the
+        head request can never fit and must fail. Shared by run() and the
+        async server's drive loop."""
+        if self.paged and self._pins and self.free_pages < self.num_pages:
+            for rid in list(self._pins):
+                self._drop_pin(rid)
+            return
+        if not self.paged or self.free_pages == self.num_pages:
+            # nothing running and admission had the ENTIRE pool available
+            # yet still refused the head request: it can never fit — fail
+            # it rather than spin
+            self._reject(self.queue.popleft())
+        else:
+            raise RuntimeError(        # unreachable: release returns
+                "admission stalled with no active work — leaked "
+                "page reservation")
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and all slots finish.
@@ -867,24 +1362,24 @@ class ServingEngine:
         admission claims slots/pages (no prefill launch), at most one
         prefill chunk runs, then one fused decode scan advances every
         armed slot — so a long prompt costs each decode slot one chunk of
-        stall per quantum instead of its whole prefill."""
+        stall per quantum instead of its whole prefill.
+
+        Exhausting ``max_steps`` marks every unfinished response with the
+        ``"timeout"`` finish reason WITHOUT finishing it — the caller can
+        see exactly which requests the budget stranded, and a later run()
+        with more steps clears the mark by actually finishing them."""
+        self._run_q0 = self._quantum
         while (self.queue or self.active) and self._steps < max_steps:
-            admitted = self._admit()
-            chunks = self._prefill_quantum() if self.chunked else 0
-            if self.decoding:
-                self._decode_chunk(max_steps)
-            elif admitted or chunks:
-                continue               # prefill-only quantum
-            elif self.queue:
-                if not self.paged or self.free_pages == self.num_pages:
-                    # nothing running and admission had the ENTIRE pool
-                    # available yet still refused the head request: it can
-                    # never fit — fail it rather than spin
-                    self._reject(self.queue.popleft())
-                else:
-                    raise RuntimeError(   # unreachable: release returns
-                        "admission stalled with no active work — leaked "
-                        "page reservation")
+            if self.step(max_steps):
+                continue
+            if self.decoding or self._faults_pending():
+                continue               # armed slots or a site in backoff
+            if self.queue:
+                self._resolve_stall()
+        if self._steps >= max_steps:
+            for r in self.responses.values():
+                if not r.finished:
+                    r.finish_reason = "timeout"
         return list(self.responses.values())
 
     # -------------------------------------------------------------- reports
@@ -949,6 +1444,26 @@ class ServingEngine:
                 # input) falls under prefix-heavy traffic
                 "unique_pages": self.peak_pages_reserved,
             })
+        # front door: queueing, degradation, preemption, fault recovery
+        out.update({
+            "queue_depth": len(self.queue),
+            "shed_count": self.shed_count,
+            "preemption_count": self.preemption_count,
+            "deadline_cancelled": self.deadline_cancelled,
+            "clamped_requests": self.clamped_requests,
+            "fault_retries": self.fault_retries,
+            "preempted_recompute_j": self.preempted_recompute_j,
+            "timeout_requests": sum(
+                1 for r in self.responses.values()
+                if not r.finished and r.finish_reason == "timeout"),
+        })
+        for p, waits in sorted(self._wait_samples.items()):
+            out[f"queue_wait_p50_s_class_{p}"] = float(np.median(waits))
+            out[f"queue_wait_p99_s_class_{p}"] = (
+                float(np.percentile(waits, 99)) if len(waits) > 1
+                else float(np.median(waits)))
+        for p, n_shed in sorted(self._shed_by_class.items()):
+            out[f"shed_class_{p}"] = n_shed
         out.update({
             "requests": len(self.responses),
             "peak_active": self.peak_active,

@@ -1,0 +1,93 @@
+"""Fault injection for the serving engine's quantum loop.
+
+Robustness under partial failure is a sustainability lever, not just an
+ops nicety: a serving fleet that drops in-flight requests on a transient
+fault re-spends the full prefill + decode energy of every victim, and a
+fleet that wedges leaks provisioned HBM (embodied carbon, paper Eq. 2-4)
+until a human restarts it. The harness here lets tests and benches make
+any of the engine's three device-work launch sites raise at a chosen
+quantum, so the recovery contract — release the quantum's reservations,
+re-queue (never drop) the in-flight requests, retry with exponential
+backoff, keep every allocator invariant intact — is *asserted*, not
+assumed.
+
+Injectable sites (the strings ``ServingEngine._inject`` is called with):
+
+  * ``"page_alloc"``     — the admission pass's page reservation, before
+                           any slot is claimed for the quantum's takes.
+  * ``"prefill_chunk"``  — the chunked-prefill launch, before the chunk
+                           touches the device cache.
+  * ``"decode_scan"``    — the fused decode chunk launch.
+
+Each site is placed BEFORE the corresponding device mutation, modelling a
+launch failure (OOM, preempted device, lost worker): work that did not
+happen must be retried, work that already happened is never double-done.
+
+Usage::
+
+    eng.faults = FaultInjector([FaultPlan("decode_scan", at_quantum=3)])
+    eng.run()
+    assert eng.faults.fired == [("decode_scan", 3)]
+
+``FaultPlan(count=k)`` fires the site ``k`` consecutive times starting at
+``at_quantum`` (measured in engine quanta, ``engine._quantum``); with
+``count`` > ``EngineConfig.max_retries`` the engine gives up and raises
+``FaultError`` with its state still consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+SITES = ("page_alloc", "prefill_chunk", "decode_scan")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by FaultInjector.check at a planned (site, quantum)."""
+
+
+class FaultError(RuntimeError):
+    """Raised out of ``engine.run()`` when a site keeps faulting past
+    ``EngineConfig.max_retries`` consecutive attempts. Engine state is
+    consistent: reservations returned, requests back on the queue."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Fire ``site`` for ``count`` consecutive quanta starting at
+    ``at_quantum``. ``at_quantum`` counts the engine's scheduling quanta
+    from the start of the CURRENT ``run()`` unless ``absolute`` is set
+    (then it is the engine's lifetime quantum counter)."""
+    site: str
+    at_quantum: int
+    count: int = 1
+    absolute: bool = False
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r}; one of {SITES}")
+        if self.at_quantum < 0 or self.count < 1:
+            raise ValueError("at_quantum must be >= 0 and count >= 1")
+
+
+class FaultInjector:
+    """Holds the fault plans and a log of fired injections.
+
+    The engine calls ``check(site, quantum, run_start)`` right before each
+    launch; a matching live plan raises ``InjectedFault``. ``fired``
+    records ``(site, quantum)`` per injection so tests can assert the
+    exact fault schedule that actually executed.
+    """
+
+    def __init__(self, plans: Optional[List[FaultPlan]] = None):
+        self.plans: List[FaultPlan] = list(plans or [])
+        self.fired: List[Tuple[str, int]] = []
+
+    def check(self, site: str, quantum: int, run_start: int = 0) -> None:
+        for p in self.plans:
+            q0 = p.at_quantum if p.absolute else run_start + p.at_quantum
+            if p.site == site and q0 <= quantum < q0 + p.count:
+                self.fired.append((site, quantum))
+                raise InjectedFault(
+                    f"injected fault at site={site!r} quantum={quantum}")

@@ -203,6 +203,63 @@ def release_slots(alloc: Dict, released: jax.Array) -> Dict:
             "ref": jnp.maximum(ref, 0)}
 
 
+def release_slots_keep(alloc: Dict, released: jax.Array,
+                       n_keep: jax.Array) -> Dict:
+    """Release the ``released`` (B,) bool slots but KEEP the refcounts of
+    each slot's first ``n_keep[slot]`` logical pages — the
+    release-for-preemption primitive. The kept pages' references are
+    *transferred* to the engine's host-side pin (the evicted request's
+    indexed prefix run must stay resident and adoptable for resume), so
+    they are neither decrefed nor freed here; every later logical page
+    (decode tail, unindexed chunk remainder) decrefs normally and returns
+    to the stack at refcount zero. The whole block-table row is cleared
+    either way — the slot is gone; only the pin (released via
+    ``decref_pages`` after the resumed request re-adopts) still holds the
+    kept pages. ``n_keep``: (B,) int32, 0 for slots not being preempted or
+    with nothing indexed."""
+    tbl, free, top, ref = (alloc["tbl"], alloc["free"], alloc["top"],
+                           alloc["ref"])
+    M = tbl.shape[1]
+    P = free.shape[0]
+    logical = jnp.arange(M)[None, :]
+    rel = released[:, None] & (tbl >= 0) & (logical >= n_keep[:, None])
+    pages = jnp.where(rel, tbl, P)                      # P = dropped
+    drops = jnp.zeros((P,), jnp.int32).at[pages.reshape(-1)].add(
+        1, mode="drop")
+    ref = ref - drops
+    freed = (drops > 0) & (ref <= 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    dest = jnp.where(freed, top + rank, P)              # P = out of bounds
+    free = free.at[dest].set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+    tbl = jnp.where(released[:, None], -1, tbl)
+    return {"tbl": tbl, "free": free,
+            "top": top + freed.astype(jnp.int32).sum(),
+            "ref": jnp.maximum(ref, 0)}
+
+
+def decref_pages(alloc: Dict, pages: jax.Array) -> Dict:
+    """Drop one reference from each physical page in ``pages`` ((K,) int32,
+    -1 padded); pages reaching refcount zero return to the free stack.
+    This is how a preemption pin is released: the resumed request adopts
+    the pinned run first (incref via ``map_shared_pages``), then the pin's
+    transferred references are dropped here — or dropped without adoption
+    when the preempted request is cancelled outright."""
+    tbl, free, top, ref = (alloc["tbl"], alloc["free"], alloc["top"],
+                           alloc["ref"])
+    P = free.shape[0]
+    pg = jnp.where(pages >= 0, pages, P)                # P = dropped
+    drops = jnp.zeros((P,), jnp.int32).at[pg.reshape(-1)].add(
+        1, mode="drop")
+    ref = ref - drops
+    freed = (drops > 0) & (ref <= 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    dest = jnp.where(freed, top + rank, P)
+    free = free.at[dest].set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+    return {"tbl": tbl, "free": free,
+            "top": top + freed.astype(jnp.int32).sum(),
+            "ref": jnp.maximum(ref, 0)}
+
+
 def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 

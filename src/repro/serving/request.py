@@ -13,6 +13,13 @@ class Request:
     arrival_s: float = 0.0
     slo_s: Optional[float] = None
     eos_id: Optional[int] = None
+    # serving-class fields (the async front door): higher priority wins
+    # admission and may PREEMPT lower classes when the engine is configured
+    # for it; a deadline (wall-clock seconds from submit) past which the
+    # request is cancelled wherever it is — queued, mid-prefill, or
+    # mid-decode — with its pages reclaimed in the same quantum.
+    priority: int = 0
+    deadline_s: Optional[float] = None
     # chunked-prefill progress: prompt tokens already processed (the quantum
     # scheduler advances this one `prefill_chunk` slice at a time while
     # decode slots keep running)
@@ -31,6 +38,29 @@ class Request:
     # page would free it while the host's sequential mirror kept it
     # indexed (see pack_chunks).
     cow_pending: bool = False
+    # preemption bookkeeping: how many times this request was evicted
+    # mid-flight (each resume folds the tokens generated so far into the
+    # prompt and re-enters the queue), and wall-clock timestamps the engine
+    # stamps at submit()/first admission for queue-wait accounting.
+    preemptions: int = 0
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None
+    # fault recovery: consecutive failed launch attempts for this request's
+    # in-flight work (bounded by EngineConfig.max_retries)
+    retries: int = 0
+
+
+# Response.finish_reason values (None while the request is in flight):
+#   "eos"      — the model emitted the request's EOS token
+#   "length"   — the max_new_tokens budget was exhausted
+#   "rejected" — the request can never fit the KV pool
+#   "shed"     — dropped by the bounded admission queue under overload
+#   "deadline" — cancelled because its deadline expired
+#   "timeout"  — run(max_steps) ran out of steps with the request unfinished
+#                (the request is NOT finished; a later run() may clear this)
+#   "error"    — repeated faults exhausted the retry budget
+FINISH_REASONS = ("eos", "length", "rejected", "shed", "deadline",
+                  "timeout", "error")
 
 
 @dataclasses.dataclass
@@ -43,6 +73,17 @@ class Response:
     carbon_g: float = 0.0
     finished: bool = False
     rejected: bool = False             # could never fit the KV pool
+    finish_reason: Optional[str] = None
+    # serving-class observability: the request's priority class, how long
+    # it waited in the admission queue before its FIRST admission, how many
+    # times it was preempted, and the modeled energy spent RECOMPUTING
+    # context on resume (prefill of the folded prompt minus any prefix-index
+    # hit) — attributed here, and only here, so non-preempted requests'
+    # modeled J/token is invariant to the preemption policy.
+    priority: int = 0
+    queue_wait_s: float = 0.0
+    preemptions: int = 0
+    recompute_j: float = 0.0
     # host wall-clock (time.perf_counter) at which each token became
     # visible to the host — one entry per token; tokens landing in the same
     # fused chunk share a timestamp. Feeds TTFT / inter-token-latency

@@ -164,6 +164,21 @@ def arm_slots(cur_tokens: jax.Array, state: Dict[str, jax.Array],
     return cur_tokens, state
 
 
+def disarm_slots(state: Dict[str, jax.Array],
+                 slots: jax.Array) -> Dict[str, jax.Array]:
+    """Deactivate ``slots`` mid-decode (preemption eviction or deadline
+    cancellation): the inverse of ``arm_slots``. A disarmed slot stops
+    sampling at the next fused chunk exactly like a slot whose ``done``
+    flag fired — budget zeroed so any stale read sees a spent slot. The
+    caller snapshots the remaining budget from its host mirror BEFORE
+    disarming (resume needs it)."""
+    return {
+        "active": state["active"].at[slots].set(False),
+        "budget": state["budget"].at[slots].set(0),
+        "eos": state["eos"].at[slots].set(-1),
+    }
+
+
 def prefill_bucket(length: int, min_bucket: int = 8) -> int:
     """Power-of-two length bucket (>= min_bucket): bounds the number of
     distinct prefill trace shapes to log2(max prompt length)."""

@@ -63,9 +63,10 @@ from repro.launch.mesh import make_serving_mesh
 from repro.models import Model
 from repro.models.costing import workload_of
 from repro.models.moe_sharded import shard_map
-from repro.serving import paged, sampling
+from repro.serving import paged, preempt, sampling
 from repro.serving.engine import (EngineConfig, ServingEngine,
                                   _chunk_prefill_fn, pack_chunks)
+from repro.serving.faults import InjectedFault
 from repro.serving.request import Request, Response
 from repro.sharding.rules import serving_shardings
 
@@ -151,6 +152,38 @@ def _release_fleet(mesh, caches, released):
                      out_specs=_SHARD, check_vma=False)(caches, released)
 
 
+def _release_keep_fleet(mesh, caches, released, n_keep):
+    def body(caches, released, n_keep):
+        caches = _lane(caches)
+        caches = dict(caches)
+        caches["paged"] = paged.release_slots_keep(caches["paged"],
+                                                   released[0], n_keep[0])
+        return _unlane(caches)
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD,) * 3,
+                     out_specs=_SHARD, check_vma=False)(
+        caches, released, n_keep)
+
+
+def _decref_fleet(mesh, caches, pages):
+    def body(caches, pages):
+        caches = _lane(caches)
+        caches = dict(caches)
+        caches["paged"] = paged.decref_pages(caches["paged"], pages[0])
+        return _unlane(caches)
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(caches, pages)
+
+
+def _disarm_fleet(mesh, state, slots):
+    def body(state, slots):
+        return _unlane(sampling.disarm_slots(_lane(state), slots[0]))
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(state, slots)
+
+
 def _map_prefix_fleet(mesh, caches, slot, pages, n_shared, start_tok):
     def body(caches, slot, pages, n_shared, start_tok):
         return _unlane(paged.map_shared_prefix(
@@ -171,6 +204,9 @@ _BEGIN_FLEET = jax.jit(_begin_fleet, static_argnums=(0,))
 _ARM_FLEET = jax.jit(_arm_fleet, static_argnums=(0,))
 _RELEASE_FLEET = jax.jit(_release_fleet, static_argnums=(0,))
 _MAP_PREFIX_FLEET = jax.jit(_map_prefix_fleet, static_argnums=(0,))
+_RELEASE_KEEP_FLEET = jax.jit(_release_keep_fleet, static_argnums=(0,))
+_DECREF_FLEET = jax.jit(_decref_fleet, static_argnums=(0,))
+_DISARM_FLEET = jax.jit(_disarm_fleet, static_argnums=(0,))
 
 
 class ShardedServingEngine:
@@ -248,6 +284,27 @@ class ShardedServingEngine:
         self._slot_pages = [[0] * B for _ in range(S)]
         self._prefilling: List[deque] = [deque() for _ in range(S)]
         self._req_shard: Dict[int, int] = {}
+        # front-door mirrors + counters (see ServingEngine.__init__)
+        self._slot_req: List[List[Optional[Request]]] = [
+            [None] * B for _ in range(S)]
+        self._slot_prio = [[0] * B for _ in range(S)]
+        self._slot_deadline: List[List[Optional[float]]] = [
+            [None] * B for _ in range(S)]
+        self._has_deadlines = False
+        self._quantum = 0
+        self._run_q0 = 0
+        self.faults = None
+        self._backoff: Dict[str, Tuple[int, int]] = {}
+        self.fault_retries = 0
+        self.shed_count = 0
+        self._shed_by_class: Dict[int, int] = {}
+        self.preemption_count = 0
+        self.deadline_cancelled = 0
+        self.clamped_requests = 0
+        self.preempted_recompute_j = 0.0
+        self._wait_samples: Dict[int, List[float]] = {}
+        # preemption pins are shard-local: rid -> (shard, [phys pages])
+        self._pins: Dict[int, Tuple[int, List[int]]] = {}
 
         self.sharing = cfg.prefix_sharing
         if self.sharing:
@@ -306,6 +363,20 @@ class ShardedServingEngine:
     _over_budget = ServingEngine._over_budget
     _reject = ServingEngine._reject
     submit = ServingEngine.submit
+    # front door: queue ordering, shedding, degradation, admission
+    # stamping, fault-site bookkeeping, and cancellation are all pure
+    # host-side policy — device-count agnostic by construction
+    _enqueue = ServingEngine._enqueue
+    _pick_shed_victim = ServingEngine._pick_shed_victim
+    _shed = ServingEngine._shed
+    _apply_pressure_clamp = ServingEngine._apply_pressure_clamp
+    _stamp_admit = ServingEngine._stamp_admit
+    _cancel = ServingEngine._cancel
+    _inject = ServingEngine._inject
+    _site_ready = ServingEngine._site_ready
+    _site_failed = ServingEngine._site_failed
+    _site_ok = ServingEngine._site_ok
+    _faults_pending = ServingEngine._faults_pending
 
     # ------------------------------------------------------- prefix sharing
     def _match_prefix(self, req: Request, s: int) -> Tuple[int, List[int]]:
@@ -365,6 +436,161 @@ class ShardedServingEngine:
             self.free_pages[s] += ret
             self._slot_pages[s][b] = 0
 
+    # ------------------------------------------------------------ preemption
+    # same eviction/resume contract as the single-device engine
+    # (serving/preempt.py); pins and victims are SHARD-LOCAL, and _place's
+    # longest-resident-prefix preference automatically steers a resumed
+    # request back to the shard still holding its pinned pages.
+
+    def _drop_pin(self, rid: int) -> None:
+        pin = self._pins.pop(rid, None)
+        if pin is None:
+            return
+        s, pins = pin
+        pages = np.full((self.S, self.max_pages_slot), -1, np.int32)
+        pages[s, :len(pins)] = pins
+        self.caches = _DECREF_FLEET(self.mesh, self.caches,
+                                    jnp.asarray(pages))
+        for p in pins:
+            self._page_ref[s][p] -= 1
+            if self._page_ref[s][p] <= 0:
+                self._drop_index_page(s, p)
+                self.free_pages[s] += 1
+
+    def _try_preempt(self, req: Request) -> bool:
+        """Evict the fleet-wide best victim (lowest class, least progress,
+        shard-local page return) strictly below ``req``'s class; True if a
+        slot was freed somewhere. Placement re-runs afterwards — the freed
+        shard may or may not be the one ``req`` lands on, but the evicted
+        pages only help its own shard (pools are per shard)."""
+        if not self.cfg.preemption:
+            return False
+        best = None
+        for s in range(self.S):
+            progress = [
+                (self._slot_req[s][b].max_new_tokens
+                 - self.slot_budget[s][b])
+                if self._slot_req[s][b] is not None else 0
+                for b in range(self.B)]
+            b = preempt.pick_victim(self._slot_armed[s],
+                                    self._slot_prio[s], progress,
+                                    req.priority)
+            if b is None:
+                continue
+            key = (self._slot_prio[s][b], progress[b], -s)
+            if best is None or key < best[0]:
+                best = (key, s, b)
+        if best is None:
+            return False
+        self._evict_slot(best[1], best[2])
+        return True
+
+    def _evict_slot(self, s: int, slot: int) -> None:
+        req = self._slot_req[s][slot]
+        resp = self.responses[req.rid]
+        remaining = self.slot_budget[s][slot]
+        emitted = req.max_new_tokens - remaining
+        assert emitted > 0 and remaining > 0, "victim must be mid-decode"
+        req.prompt = list(req.prompt) + resp.tokens[-emitted:]
+        req.max_new_tokens = remaining
+        req.prefill_pos = 0
+        req.prefix_keys = None
+        req.shared_prefix_tokens = 0
+        req.cow_pending = False
+        req.preemptions += 1
+        resp.preemptions += 1
+        pinned: List[int] = []
+        if self.sharing:
+            held = set(self._slot_shared_in[s].get(slot, []))
+            held |= set(self._slot_own_idx[s].get(slot, []))
+            pinned = preempt.pinned_run(self._prompt_page_keys(req),
+                                        self._prefix_index[s], held)
+        mask = np.zeros((self.S, self.B), bool)
+        mask[s, slot] = True
+        n_keep = np.zeros((self.S, self.B), np.int32)
+        n_keep[s, slot] = len(pinned)
+        self.caches = _RELEASE_KEEP_FLEET(self.mesh, self.caches,
+                                          jnp.asarray(mask),
+                                          jnp.asarray(n_keep))
+        slots = np.full((self.S, 1), self.B, np.int32)
+        slots[s, 0] = slot
+        self.state = _DISARM_FLEET(self.mesh, self.state,
+                                   jnp.asarray(slots))
+        self._account_eviction(s, slot, pinned)
+        if pinned:
+            self._pins[req.rid] = (s, pinned)
+        self._clear_slot(s, slot)
+        self._req_shard.pop(req.rid, None)
+        self.preemption_count += 1
+        self._enqueue(req, resume=True)
+
+    def _account_eviction(self, s: int, slot: int,
+                          pinned: List[int]) -> None:
+        ret = self._slot_pages[s][slot]
+        if self.sharing:
+            keep = set(pinned)
+            for p in self._slot_own_idx[s].pop(slot, []):
+                if p in keep:
+                    ret -= 1           # stays resident under the pin
+                    continue
+                self._page_ref[s][p] -= 1
+                if self._page_ref[s][p] <= 0:
+                    self._drop_index_page(s, p)
+                else:
+                    ret -= 1           # survives under someone else's map
+            for p in self._slot_shared_in[s].pop(slot, []):
+                if p in keep:
+                    continue           # adopted ref transferred to the pin
+                self._page_ref[s][p] -= 1
+                if self._page_ref[s][p] <= 0:
+                    self._drop_index_page(s, p)
+                    ret += 1           # last holder frees the original
+        self.free_pages[s] += ret
+        self._slot_pages[s][slot] = 0
+
+    def _clear_slot(self, s: int, slot: int) -> None:
+        self.slot_rid[s][slot] = -1
+        self.slot_budget[s][slot] = 0
+        self.slot_eos[s][slot] = None
+        self._slot_ctx[s][slot] = 0.0
+        self._slot_armed[s][slot] = False
+        self._slo[s][slot] = None
+        self._slot_req[s][slot] = None
+        self._slot_prio[s][slot] = 0
+        self._slot_deadline[s][slot] = None
+
+    # ------------------------------------------------------------- deadlines
+    def _sweep_deadlines(self) -> None:
+        now = time.perf_counter()
+
+        def expired(r: Request) -> bool:
+            return (r.deadline_s is not None
+                    and now - r.t_submit > r.deadline_s)
+
+        for req in [r for r in self.queue if expired(r)]:
+            self.queue.remove(req)
+            self._cancel(req.rid, "deadline")
+        for s in range(self.S):
+            for req, slot in [p for p in self._prefilling[s]
+                              if expired(p[0])]:
+                self._prefilling[s].remove((req, slot))
+                self._clear_slot(s, slot)
+                self._release_slots([(s, slot)])
+                self._cancel(req.rid, "deadline")
+        doomed = [(s, b) for s in range(self.S) for b in range(self.B)
+                  if self._slot_armed[s][b]
+                  and self._slot_req[s][b] is not None
+                  and expired(self._slot_req[s][b])]
+        for s, b in doomed:
+            slots = np.full((self.S, 1), self.B, np.int32)
+            slots[s, 0] = b
+            self.state = _DISARM_FLEET(self.mesh, self.state,
+                                       jnp.asarray(slots))
+            rid = self.slot_rid[s][b]
+            self._clear_slot(s, b)
+            self._release_slots([(s, b)])
+            self._cancel(rid, "deadline")
+
     # ------------------------------------------------------------ admission
     def _place(self, req: Request):
         """Placement policy: among shards with a free slot whose pool fits
@@ -402,6 +628,19 @@ class ShardedServingEngine:
         front — per-shard pools mean per-shard capacity limits."""
         if self._over_budget() and self.active > 0:
             return 0
+        if self.queue:
+            # the fleet's reservation pass sits behind the same
+            # ``page_alloc`` fault site as the single-device engine's; the
+            # injection point is BEFORE any claim, so a fault needs no
+            # rollback — the whole pass simply didn't run this quantum
+            if not self._site_ready("page_alloc"):
+                return 0
+            try:
+                self._inject("page_alloc")
+            except InjectedFault:
+                self._site_failed("page_alloc")
+                return 0
+            self._site_ok("page_alloc")
         admitted: List[Tuple[Request, int, int]] = []
         adoptions: List[Tuple[Request, int, int, Tuple]] = []
         while self.queue:
@@ -413,8 +652,11 @@ class ShardedServingEngine:
                 self.queue.popleft()
                 self._reject(req)
                 continue
+            self._apply_pressure_clamp(req)
             placed = self._place(req)
             if placed is None:
+                if self._try_preempt(req):
+                    continue           # a lower-class slot just yielded
                 break                  # keep waiting (FCFS, no overtaking)
             s, resv, share = placed
             self.queue.popleft()
@@ -429,6 +671,10 @@ class ShardedServingEngine:
             self._slot_ctx[s][slot] = 0.0
             self._slo[s][slot] = req.slo_s
             self._slot_pages[s][slot] = resv
+            self._slot_req[s][slot] = req
+            self._slot_prio[s][slot] = req.priority
+            self._slot_deadline[s][slot] = req.deadline_s
+            self._stamp_admit(req)
             self._req_shard[req.rid] = s
             req.prefill_pos = 0
             self._prefilling[s].append((req, slot))
@@ -452,6 +698,10 @@ class ShardedServingEngine:
         if self.sharing:
             for req, s, slot, (n_pg, phys, first_tok) in adoptions:
                 self._adopt_prefix(req, s, slot, n_pg, phys, first_tok)
+                # adopt-then-release: the resumed request now holds its
+                # pinned prefix through the ordinary index increfs
+                if req.rid in self._pins:
+                    self._drop_pin(req.rid)
         return len(admitted)
 
     def _adopt_prefix(self, req: Request, s: int, slot: int, n_pg: int,
@@ -492,12 +742,22 @@ class ShardedServingEngine:
         their combined tokens fit ``prefill_chunk``) rides one program.
         Shards with nothing to prefill run sentinel lanes. Returns the
         number of launches (0 or 1)."""
+        if not self._site_ready("prefill_chunk"):
+            return 0                   # backing off a faulted chunk launch
         C = self.cfg.prefill_chunk
         packs = [pack_chunks(self._prefilling[s], C, self.cfg.prefill_pack)
                  for s in range(self.S)]
         n = max(len(p) for p in packs)
         if n == 0:
             return 0
+        try:
+            self._inject("prefill_chunk")
+        except InjectedFault:
+            # nothing launched: every shard's packed requests are still at
+            # the head of its _prefilling deque, prefill_pos untouched
+            self._site_failed("prefill_chunk")
+            return 0
+        self._site_ok("prefill_chunk")
         tokens = np.zeros((self.S, n, C), np.int32)
         mask = np.zeros((self.S, n, C), np.int32)
         slots = np.full((self.S, n), self.B, np.int32)
@@ -544,22 +804,35 @@ class ShardedServingEngine:
             req, slot, _, _ = packs[s][i]
             if self.sharing:
                 self._register_prefix(req, s, slot, rows_h[s, i])
-            rep = self._meter_prefill(1, len(req.prompt),
-                                      skip=req.shared_prefix_tokens)
+            rep = self._meter_prefill(
+                1, len(req.prompt), skip=req.shared_prefix_tokens,
+                phase="recompute" if req.preemptions else "prefill")
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
             resp.energy_j += rep.energy_j
-            resp.tokens.append(int(first_h[s, i]))
+            if req.preemptions:
+                resp.recompute_j += rep.energy_j
+                self.preempted_recompute_j += rep.energy_j
+            tok = int(first_h[s, i])
+            resp.tokens.append(tok)
             resp.t_emit.append(now)
             budget = req.max_new_tokens - 1
-            if budget <= 0:
+            # resumed requests EOS-check their recomputed first token —
+            # it is logically a mid-decode emission (engine.py comment)
+            eos_hit = (req.preemptions > 0 and req.eos_id is not None
+                       and tok == req.eos_id)
+            if budget <= 0 or eos_hit:
                 resp.finished = True   # prefill token was the whole budget
+                resp.finish_reason = "eos" if eos_hit else "length"
                 self.slot_rid[s][slot] = -1
                 self._slo[s][slot] = None
+                self._slot_req[s][slot] = None
+                self._slot_prio[s][slot] = 0
+                self._slot_deadline[s][slot] = None
                 released.append((s, slot))
                 continue
             eos = -1 if req.eos_id is None else req.eos_id
-            arm.append((s, slot, int(first_h[s, i]), budget, eos))
+            arm.append((s, slot, tok, budget, eos))
             self.slot_budget[s][slot] = budget
             self._slot_ctx[s][slot] = float(len(req.prompt))
             self._slot_armed[s][slot] = True
@@ -584,10 +857,20 @@ class ShardedServingEngine:
         return 1
 
     # --------------------------------------------------------------- decode
-    def _decode_chunk(self, max_steps: int) -> None:
+    def _decode_chunk(self, max_steps: int) -> bool:
         """One fused chunk of up to ``sync_every`` micro-steps for EVERY
         armed slot on EVERY shard — one program, one host sync on the
-        stacked (S, n, B) token/emission matrices for the whole fleet."""
+        stacked (S, n, B) token/emission matrices for the whole fleet.
+        Returns whether a chunk actually launched (False while the
+        ``decode_scan`` site backs off a fault)."""
+        if not self._site_ready("decode_scan"):
+            return False
+        try:
+            self._inject("decode_scan")
+        except InjectedFault:
+            self._site_failed("decode_scan")
+            return False
+        self._site_ok("decode_scan")
         budgets = [self.slot_budget[s][b]
                    for s in range(self.S) for b in range(self.B)
                    if self._slot_armed[s][b]]
@@ -628,18 +911,50 @@ class ShardedServingEngine:
                     resp.energy_j += per_tok_e
                     self._slot_ctx[s][b] += 1.0
                     self.slot_budget[s][b] -= 1
-                    done = self.slot_budget[s][b] <= 0 or (
-                        self.slot_eos[s][b] is not None
-                        and tok == self.slot_eos[s][b])
-                    if done:
+                    eos_hit = (self.slot_eos[s][b] is not None
+                               and tok == self.slot_eos[s][b])
+                    if self.slot_budget[s][b] <= 0 or eos_hit:
                         resp.finished = True
+                        resp.finish_reason = "eos" if eos_hit else "length"
                         self.slot_rid[s][b] = -1
                         self._slot_armed[s][b] = False
                         self._slo[s][b] = None
+                        self._slot_req[s][b] = None
+                        self._slot_prio[s][b] = 0
+                        self._slot_deadline[s][b] = None
                         released.append((s, int(b)))
             if emitted_any:
                 self._steps += 1
         self._release_slots(released)
+        return True
+
+    def _resolve_stall(self) -> None:
+        """Fleet twin of ``ServingEngine._resolve_stall``: spill pins or
+        fail the unplaceable head."""
+        if self._pins and any(f < self.num_pages for f in self.free_pages):
+            for rid in list(self._pins):
+                self._drop_pin(rid)
+            return
+        if all(f == self.num_pages for f in self.free_pages):
+            # nothing running, every shard's whole pool free, and
+            # placement still refused the head: it can never fit
+            self._reject(self.queue.popleft())
+        else:
+            raise RuntimeError(        # unreachable: release returns
+                "admission stalled with no active work — leaked "
+                "page reservation")
+
+    def step(self, max_steps: int = 10_000) -> bool:
+        """One FLEET scheduling quantum (same contract as the single-
+        device ``ServingEngine.step``): deadline sweep, admission, one
+        fleet-wide chunk launch, one fused scan."""
+        self._quantum += 1
+        if self._has_deadlines:
+            self._sweep_deadlines()
+        admitted = self._admit()
+        chunks = self._prefill_quantum()
+        decoded = self._decode_chunk(max_steps) if self.decoding else False
+        return bool(admitted or chunks or decoded)
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and every shard's slots finish.
@@ -647,22 +962,18 @@ class ShardedServingEngine:
         and per-shard reservations, one chunk launch advances every
         shard's prefilling head, one fused scan advances every armed slot
         everywhere — still exactly one decode sync per quantum."""
+        self._run_q0 = self._quantum
         while (self.queue or self.active) and self._steps < max_steps:
-            admitted = self._admit()
-            chunks = self._prefill_quantum()
-            if self.decoding:
-                self._decode_chunk(max_steps)
-            elif admitted or chunks:
-                continue               # prefill-only quantum
-            elif self.queue:
-                if all(f == self.num_pages for f in self.free_pages):
-                    # nothing running, every shard's whole pool free, and
-                    # placement still refused the head: it can never fit
-                    self._reject(self.queue.popleft())
-                else:
-                    raise RuntimeError(   # unreachable: release returns
-                        "admission stalled with no active work — leaked "
-                        "page reservation")
+            if self.step(max_steps):
+                continue
+            if self.decoding or self._faults_pending():
+                continue               # armed slots or a site in backoff
+            if self.queue:
+                self._resolve_stall()
+        if self._steps >= max_steps:
+            for r in self.responses.values():
+                if not r.finished:
+                    r.finish_reason = "timeout"
         return list(self.responses.values())
 
     # -------------------------------------------------------------- reports
@@ -721,4 +1032,24 @@ class ShardedServingEngine:
                 "prefix_hit_tokens": self.prefix_hit_tokens,
                 "prefix_shared_requests": self.prefix_shared_requests,
             })
+        # front door (same keys as the single-device engine)
+        out.update({
+            "queue_depth": len(self.queue),
+            "shed_count": self.shed_count,
+            "preemption_count": self.preemption_count,
+            "deadline_cancelled": self.deadline_cancelled,
+            "clamped_requests": self.clamped_requests,
+            "fault_retries": self.fault_retries,
+            "preempted_recompute_j": self.preempted_recompute_j,
+            "timeout_requests": sum(
+                1 for r in self.responses.values()
+                if not r.finished and r.finish_reason == "timeout"),
+        })
+        for p, waits in sorted(self._wait_samples.items()):
+            out[f"queue_wait_p50_s_class_{p}"] = float(np.median(waits))
+            out[f"queue_wait_p99_s_class_{p}"] = (
+                float(np.percentile(waits, 99)) if len(waits) > 1
+                else float(np.median(waits)))
+        for p, n_shed in sorted(self._shed_by_class.items()):
+            out[f"shed_class_{p}"] = n_shed
         return out

@@ -138,13 +138,20 @@ def test_pool_pressure_queues_and_completes(parts):
 
 
 def test_oversized_and_never_fitting_rejected(parts):
-    """Reservation rules are unchanged by chunking: never-fits prompts are
-    rejected up front, fitting ones complete."""
+    """Reservation rules are unchanged by chunking: a prompt + decode
+    budget that can never fit the block table is rejected up front,
+    fitting ones complete. A prompt that alone exceeds max_len doesn't
+    even enqueue — submit() refuses it immediately."""
     _, m, params = parts
-    reqs = [dict(rid=0, prompt=list(range(1, 70)), max_new_tokens=5),
+    # 62 prompt + 4 decode = 66 > max_len=64 -> needs 9 of 8 table slots
+    reqs = [dict(rid=0, prompt=list(range(1, 63)), max_new_tokens=5),
             dict(rid=1, prompt=[1, 2, 3], max_new_tokens=5)]
-    eng = assert_parity(m, params, reqs)   # 69 + 4 > max_len=64 -> reject
+    eng = assert_parity(m, params, reqs)
+    assert eng.responses[0].finish_reason == "rejected"
     assert_pool_clean(eng)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(rid=9, prompt=list(range(1, 70)),
+                           max_new_tokens=5))
 
 
 def test_chunked_requires_paged_and_attention_only(parts):

@@ -1,0 +1,241 @@
+"""Fault injection and recovery: every launch site, rollback exactness,
+exponential backoff, retry exhaustion, and allocator invariants under
+faults.
+
+The recovery contract (serving/faults.py): a faulted launch never ran, so
+the engine must release that quantum's reservations, keep (or re-queue)
+the in-flight requests, retry after exponential backoff, and end with the
+SAME tokens as a fault-free run — faults may only cost time, never
+correctness, and never leak a page."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.serving import (EngineConfig, FaultError, FaultInjector,
+                           FaultPlan, Request, ServingEngine)
+
+PS = 4
+CH = 8
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = ModelConfig(
+        name="tiny-faults", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=2, d_ff=128, vocab=256, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def make_engine(m, params, **kw):
+    args = dict(max_batch=2, max_len=64, sync_every=4, paged=True,
+                page_size=PS, prefill_chunk=CH)
+    args.update(kw)
+    return ServingEngine(m, params, EngineConfig(**args))
+
+
+def _reqs(n=3, max_new=8):
+    return [dict(rid=i, prompt=list(RNG.integers(0, 256, 6 + 2 * i)),
+                 max_new_tokens=max_new) for i in range(n)]
+
+
+def run_with_faults(m, params, reqs, plans, **kw):
+    eng = make_engine(m, params, **kw)
+    eng.faults = FaultInjector(plans)
+    for r in reqs:
+        eng.submit(Request(**r))
+    got = {r.rid: r for r in eng.run()}
+    return got, eng
+
+
+def assert_pool_clean(eng):
+    alloc = jax.device_get(eng.caches["paged"])
+    P = alloc["free"].shape[0]
+    assert int(alloc["top"]) == P
+    assert (np.asarray(alloc["tbl"]) == -1).all()
+    assert (np.asarray(alloc["ref"]) == 0).all()
+    assert eng.free_pages == eng.num_pages
+
+
+# ----------------------------------------------------------- site-by-site
+
+
+@pytest.mark.parametrize("site,at", [
+    ("page_alloc", 1),      # first admission pass
+    ("prefill_chunk", 2),   # mid-prefill
+    ("prefill_chunk", 1),   # the very first chunk
+    ("decode_scan", 4),     # mid-decode
+])
+def test_single_fault_full_recovery(parts, site, at):
+    """One injected fault at each site: the run completes with tokens
+    identical to the fault-free run, the fault actually fired, at least
+    one retry was burned, and the pool drains clean."""
+    _, m, params = parts
+    reqs = _reqs()
+    want, _ = run_with_faults(m, params, reqs, [])
+    got, eng = run_with_faults(m, params, reqs,
+                               [FaultPlan(site, at_quantum=at)])
+    assert eng.faults.fired, f"planned fault at {site} q{at} never fired"
+    assert eng.fault_retries >= 1
+    assert not eng._backoff            # recovered, nothing backing off
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+        assert got[rid].finished
+    assert_pool_clean(eng)
+
+
+def test_page_alloc_rollback_exact(parts):
+    """An admission fault returns EVERY page of the quantum's reservations
+    and restores the takes at the queue head in order."""
+    _, m, params = parts
+    eng = make_engine(m, params)
+    eng.faults = FaultInjector([FaultPlan("page_alloc", at_quantum=1)])
+    reqs = _reqs(2)
+    for r in reqs:
+        eng.submit(Request(**r))
+    free0 = eng.free_pages
+    order0 = [r.rid for r in eng.queue]
+    assert eng.step() == 0             # the faulted quantum: no progress
+    assert eng.free_pages == free0, "rollback leaked reservation pages"
+    assert [r.rid for r in eng.queue] == order0, "rollback reordered queue"
+    assert not eng._resv
+    assert eng.peak_pages_reserved == 0, \
+        "faulted reservations must not count as provisioned peak"
+    got = {r.rid: r for r in eng.run()}
+    assert all(r.finished for r in got.values())
+    assert_pool_clean(eng)
+
+
+def test_consecutive_faults_backoff_schedule(parts):
+    """Consecutive faults retry at exponentially growing quantum gaps
+    (2**fails); the retry past max_retries is the straw that raises."""
+    _, m, params = parts
+    eng = make_engine(m, params, max_retries=3)
+    eng.faults = FaultInjector(
+        [FaultPlan("prefill_chunk", at_quantum=1, count=30)])
+    for r in _reqs(1):
+        eng.submit(Request(**r))
+    with pytest.raises(FaultError, match="prefill_chunk"):
+        eng.run()
+    fired = [q for s, q in eng.faults.fired]
+    assert len(fired) == 3 + 1         # max_retries retries + final straw
+    gaps = np.diff(fired)
+    assert gaps.tolist() == [2, 4, 8], f"backoff gaps {gaps}"
+    # a transient window shorter than the cumulative backoff recovers:
+    # fires at rel q 1, 3, 7 — the retry at 15 lands past the window
+    got, eng2 = run_with_faults(
+        m, params, _reqs(1),
+        [FaultPlan("prefill_chunk", at_quantum=1, count=7)],
+        max_retries=3)
+    assert len(eng2.faults.fired) == 3
+    assert all(r.finished for r in got.values())
+    assert_pool_clean(eng2)
+
+
+def test_retry_exhaustion_raises_fault_error_state_consistent(parts):
+    """A permanently failing site raises FaultError out of run(); the
+    engine state is still consistent (reservations returned for the
+    admission site, nothing double-freed) and — the recovery guarantee —
+    clearing the injector lets the SAME engine finish correctly."""
+    _, m, params = parts
+    reqs = _reqs(2)
+    want, _ = run_with_faults(m, params, reqs, [])
+    eng = make_engine(m, params, max_retries=2)
+    eng.faults = FaultInjector([FaultPlan("page_alloc", at_quantum=0,
+                                          count=100)])
+    for r in reqs:
+        eng.submit(Request(**r))
+    with pytest.raises(FaultError, match="page_alloc"):
+        eng.run()
+    assert eng.free_pages == eng.num_pages   # reservations all returned
+    assert len(eng.queue) == len(reqs)       # nothing dropped
+    eng.faults = None                        # "the device came back"
+    eng._backoff.clear()
+    got = {r.rid: r for r in eng.run()}
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens
+    assert_pool_clean(eng)
+
+
+def test_decode_fault_never_double_emits(parts):
+    """A decode-scan fault relaunches the identical chunk: no token is
+    lost or emitted twice even with EOS terminations mid-chunk."""
+    _, m, params = parts
+    probe, _ = run_with_faults(m, params, [dict(rid=0, prompt=[9, 8, 7],
+                                                max_new_tokens=12)], [])
+    eos = probe[0].tokens[5]
+    reqs = [dict(rid=0, prompt=[9, 8, 7], max_new_tokens=12, eos_id=eos),
+            dict(rid=1, prompt=[1, 2, 3, 4], max_new_tokens=10)]
+    want, _ = run_with_faults(m, params, reqs, [])
+    got, eng = run_with_faults(
+        m, params, reqs,
+        [FaultPlan("decode_scan", at_quantum=3, count=3)])
+    # fires at rel q 3, then the backoff retry at rel q 5 (still inside
+    # the 3-quantum window) fires again; the next retry at rel 9 succeeds
+    assert len(eng.faults.fired) == 2
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens
+    assert_pool_clean(eng)
+
+
+def test_faults_at_every_site_same_run(parts):
+    """All three sites fault in one run (disjoint quanta): recovery
+    composes."""
+    _, m, params = parts
+    reqs = _reqs(3, max_new=10)
+    want, _ = run_with_faults(m, params, reqs, [])
+    got, eng = run_with_faults(m, params, reqs, [
+        FaultPlan("page_alloc", at_quantum=1),
+        FaultPlan("prefill_chunk", at_quantum=4),
+        FaultPlan("decode_scan", at_quantum=8),
+    ])
+    sites = {s for s, _ in eng.faults.fired}
+    assert sites == {"page_alloc", "prefill_chunk", "decode_scan"}
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens
+    assert_pool_clean(eng)
+    assert eng.stats()["fault_retries"] == eng.fault_retries >= 3
+
+
+def test_faults_with_sharing_and_preemption(parts):
+    """Faults during a preemption-heavy sharing run: the composed
+    machinery (pins, CoW, rollback) still ends token-exact and clean."""
+    _, m, params = parts
+    common = list(RNG.integers(0, 256, 8))
+    reqs = [dict(rid=0, prompt=common + [3, 1], max_new_tokens=24),
+            dict(rid=1, prompt=common + [4, 1, 5], max_new_tokens=24)]
+    high = dict(rid=2, prompt=[6, 2, 8], max_new_tokens=4, priority=1)
+    want_all, _ = run_with_faults(
+        m, params, reqs + [dict(**high)], [], max_batch=4,
+        prefix_sharing=True)
+    eng = make_engine(m, params, prefix_sharing=True, preemption=True)
+    eng.faults = FaultInjector([
+        FaultPlan("decode_scan", at_quantum=5),
+        FaultPlan("prefill_chunk", at_quantum=8),
+    ])
+    for r in reqs:
+        eng.submit(Request(**r))
+    for _ in range(6):
+        eng.step()
+    eng.submit(Request(**high))
+    got = {r.rid: r for r in eng.run()}
+    assert eng.faults.fired
+    for rid in want_all:
+        assert got[rid].tokens == want_all[rid].tokens, \
+            f"request {rid} diverged"
+    assert_pool_clean(eng)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan("warp_core", at_quantum=0)
+    with pytest.raises(ValueError, match="at_quantum"):
+        FaultPlan("decode_scan", at_quantum=-1)
+    with pytest.raises(ValueError, match="count"):
+        FaultPlan("decode_scan", at_quantum=0, count=0)

@@ -96,8 +96,9 @@ class CheckedEngine(ServingEngine):
                     if p >= 0:
                         assert ref[p] <= 1, \
                             "decode would append into a shared page"
-        super()._decode_chunk(max_steps)
+        ran = super()._decode_chunk(max_steps)
         self.check_alloc()
+        return ran
 
 
 def run_engine(m, params, reqs, sharing, checked=True, **kw):

@@ -1,0 +1,314 @@
+"""AsyncServingServer: the asyncio streaming front door.
+
+Plain-pytest async tests (``asyncio.run`` per test — no pytest-asyncio
+dependency). The server contract under test: tokens stream at quantum
+boundaries (not at the end), open-loop submissions land between quanta
+with token-for-token parity against the batch ``run()`` oracle, malformed
+requests raise out of ``submit()``, shed/deadline/timeout requests
+resolve their streams and results instead of hanging, and a retry-
+exhausted fault fails loudly out of ``drain()``/``result()``."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.serving import (AsyncServingServer, EngineConfig, FaultError,
+                           FaultInjector, FaultPlan, Request, ServingEngine)
+
+PS = 4
+CH = 8
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = ModelConfig(
+        name="tiny-server", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=2, d_ff=128, vocab=256, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def make_server(m, params, max_steps=100_000, **kw):
+    args = dict(max_batch=2, max_len=64, sync_every=4, paged=True,
+                page_size=PS, prefill_chunk=CH, preemption=True,
+                prefix_sharing=True)
+    args.update(kw)
+    eng = ServingEngine(m, params, EngineConfig(**args))
+    return AsyncServingServer(eng, max_steps=max_steps)
+
+
+def oracle(m, params, reqs, **kw):
+    args = dict(max_batch=max(4, len(reqs)), max_len=64, sync_every=4,
+                paged=True, page_size=PS, prefill_chunk=CH)
+    args.update(kw)
+    eng = ServingEngine(m, params, EngineConfig(**args))
+    for r in reqs:
+        eng.submit(Request(**r))
+    return {r.rid: r for r in eng.run()}
+
+
+def _reqs(rids, lens, max_new=16, **kw):
+    return [dict(rid=rid, prompt=list(RNG.integers(0, 256, int(n))),
+                 max_new_tokens=max_new, **kw)
+            for rid, n in zip(rids, lens)]
+
+
+# ------------------------------------------------------------------ streaming
+
+
+def test_tokens_stream_before_finish(parts):
+    """stream() yields tokens while the request is still decoding —
+    true streaming, not a buffered dump — and the full stream equals the
+    batch-run oracle's tokens."""
+    _, m, params = parts
+    req = _reqs((0,), (10,), max_new=24)[0]
+    want = oracle(m, params, [dict(req)])
+
+    async def go():
+        srv = make_server(m, params)
+        await srv.submit(Request(**req))
+        streamed, unfinished_when_first = [], None
+        async for tok in srv.stream(0):
+            if unfinished_when_first is None:
+                unfinished_when_first = not srv.engine.responses[0].finished
+            streamed.append(tok)
+        resp = await srv.result(0)
+        await srv.drain()
+        return streamed, unfinished_when_first, resp
+
+    streamed, live, resp = asyncio.run(go())
+    assert streamed == want[0].tokens
+    assert live, "first token only surfaced after the request finished"
+    assert resp.finished and resp.finish_reason in ("eos", "length")
+
+
+def test_open_loop_submissions_token_parity(parts):
+    """Requests submitted WHILE earlier ones decode land between quanta
+    and every stream matches the closed-loop oracle token for token."""
+    _, m, params = parts
+    reqs = _reqs((0, 1, 2), (8, 11, 6), max_new=16)
+    want = oracle(m, params, [dict(r) for r in reqs])
+
+    async def go():
+        srv = make_server(m, params)
+        await srv.submit(Request(**reqs[0]))
+
+        async def late(req, delay):
+            await asyncio.sleep(delay)
+            await srv.submit(Request(**req))
+            return [t async for t in srv.stream(req["rid"])]
+
+        first = [t async for t in srv.stream(0)]
+        # rid 0 streams while 1 and 2 arrive mid-flight
+        got1, got2 = await asyncio.gather(late(reqs[1], 0.01),
+                                          late(reqs[2], 0.03))
+        await srv.drain()
+        return {0: first, 1: got1, 2: got2}
+
+    got = asyncio.run(go())
+    for rid in want:
+        assert got[rid] == want[rid].tokens, f"request {rid} diverged"
+
+
+def test_priority_preemption_through_server(parts):
+    """A high-priority arrival through the async door evicts a decoding
+    low-priority request; both still match the unpreempted oracle."""
+    _, m, params = parts
+    low = _reqs((0, 1), (10, 13), max_new=24)
+    high = _reqs((2,), (6,), max_new=6, priority=1)
+    want = oracle(m, params, [dict(r) for r in low + high])
+
+    async def go():
+        srv = make_server(m, params)
+        for r in low:
+            await srv.submit(Request(**r))
+        # let the victims get armed and decoding before the burst
+        while srv.engine.decoding == 0:
+            await asyncio.sleep(0.01)
+        await srv.submit(Request(**high[0]))
+        await srv.drain()
+        return {rid: await srv.result(rid) for rid in (0, 1, 2)}, srv
+
+    got, srv = asyncio.run(go())
+    assert srv.engine.preemption_count >= 1
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+    assert srv.stats()["preemption_count"] >= 1
+
+
+# ----------------------------------------------------------------- admission
+
+
+def test_submit_validation_raises(parts):
+    _, m, params = parts
+
+    async def go():
+        srv = make_server(m, params)
+        with pytest.raises(ValueError, match="empty prompt"):
+            await srv.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            await srv.submit(Request(rid=1, prompt=[1], max_new_tokens=0))
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            await srv.submit(Request(rid=2, prompt=[1] * 70,
+                                     max_new_tokens=4))
+        await srv.drain()
+
+    asyncio.run(go())
+
+
+def test_overload_shed_resolves_immediately(parts):
+    """With a full bounded queue the shed victim's result() resolves with
+    reason 'shed' without waiting for the backlog to drain."""
+    _, m, params = parts
+
+    async def go():
+        srv = make_server(m, params, max_queue=2, shed_policy="reject_newest")
+        reqs = _reqs(range(6), [8] * 6, max_new=16)
+        shed = []
+        for r in reqs:
+            await srv.submit(Request(**r))
+            resp = srv.engine.responses[r["rid"]]
+            if resp.finish_reason == "shed":
+                shed.append(r["rid"])
+                done = await srv.result(r["rid"])   # resolves NOW
+                assert done.finish_reason == "shed"
+                assert [t async for t in srv.stream(r["rid"])] == []
+        await srv.drain()
+        return shed, srv
+
+    shed, srv = asyncio.run(go())
+    assert shed, "queue bound never triggered a shed"
+    st = srv.stats()
+    assert st["shed_count"] == len(shed)
+    assert st["queue_depth"] == 0
+    survivors = [r for r in srv.engine.responses.values()
+                 if r.finish_reason != "shed"]
+    assert survivors and all(r.finished for r in survivors)
+
+
+def test_deadline_expiry_cancels_queued_request(parts):
+    """A queued request whose deadline lapses is cancelled with reason
+    'deadline'; its stream ends empty instead of hanging."""
+    _, m, params = parts
+
+    async def go():
+        srv = make_server(m, params)
+        blockers = _reqs((0, 1), (10, 12), max_new=24)
+        for r in blockers:
+            await srv.submit(Request(**r))
+        await srv.submit(Request(rid=2, prompt=[1, 2, 3], max_new_tokens=8,
+                                 deadline_s=1e-4))
+        doomed = await srv.result(2)
+        toks = [t async for t in srv.stream(2)]
+        await srv.drain()
+        return doomed, toks, srv
+
+    doomed, toks, srv = asyncio.run(go())
+    assert doomed.finish_reason == "deadline"
+    assert toks == []
+    assert srv.stats()["deadline_cancelled"] == 1
+    assert srv.engine.responses[0].finished
+    assert srv.engine.responses[1].finished
+
+
+def test_max_steps_timeout_marks_survivors(parts):
+    """Driver exhaustion marks every unfinished request 'timeout' and
+    ends its stream — clients are never stranded on a stopped loop."""
+    _, m, params = parts
+
+    async def go():
+        srv = make_server(m, params, max_steps=3)
+        for r in _reqs((0, 1), (10, 40), max_new=48):
+            await srv.submit(Request(**r))
+        r0, r1 = await srv.result(0), await srv.result(1)
+        await srv.drain()
+        return r0, r1
+
+    r0, r1 = asyncio.run(go())
+    stranded = [r for r in (r0, r1) if r.finish_reason == "timeout"]
+    assert stranded, "max_steps never stranded anything"
+    for r in stranded:
+        assert not r.finished       # timeout is a mark, not a completion
+
+
+# -------------------------------------------------------------------- faults
+
+
+def test_transient_fault_invisible_to_clients(parts):
+    """A recovered fault costs quanta, not tokens: streams are identical
+    to the fault-free run."""
+    _, m, params = parts
+    req = _reqs((0,), (8,), max_new=12)[0]
+    want = oracle(m, params, [dict(req)])
+
+    async def go():
+        srv = make_server(m, params)
+        srv.engine.faults = FaultInjector(
+            [FaultPlan("decode_scan", at_quantum=3, absolute=True)])
+        await srv.submit(Request(**req))
+        toks = [t async for t in srv.stream(0)]
+        await srv.drain()
+        return toks, srv
+
+    toks, srv = asyncio.run(go())
+    assert srv.engine.faults.fired
+    assert toks == want[0].tokens
+
+
+def test_retry_exhaustion_fails_loudly(parts):
+    """Permanent fault: drain()/result() raise FaultError, unfinished
+    responses are marked 'error', streams end instead of hanging."""
+    _, m, params = parts
+
+    async def go():
+        srv = make_server(m, params, max_retries=1)
+        srv.engine.faults = FaultInjector(
+            [FaultPlan("page_alloc", at_quantum=0, count=1000,
+                       absolute=True)])
+        await srv.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+        with pytest.raises(FaultError):
+            await srv.drain()
+        with pytest.raises(FaultError):
+            await srv.result(0)
+        toks = []
+        with pytest.raises(FaultError):
+            async for t in srv.stream(0):
+                toks.append(t)
+        assert srv.engine.responses[0].finish_reason == "error"
+        assert toks == []
+        # a wedged server refuses new work with the same error
+        with pytest.raises(FaultError):
+            await srv.submit(Request(rid=1, prompt=[4], max_new_tokens=4))
+
+    asyncio.run(go())
+
+
+# --------------------------------------------------------------------- stats
+
+
+def test_stats_expose_front_door_counters(parts):
+    _, m, params = parts
+
+    async def go():
+        srv = make_server(m, params)
+        for r in _reqs((0, 1, 2), (6, 9, 12), max_new=8):
+            await srv.submit(Request(**r))
+        await srv.drain()
+        return srv.stats()
+
+    st = asyncio.run(go())
+    for key in ("queue_depth", "shed_count", "preemption_count",
+                "deadline_cancelled", "clamped_requests", "fault_retries",
+                "timeout_requests", "preempted_recompute_j"):
+        assert key in st, f"stats() missing {key}"
+    assert st["queue_depth"] == 0
+    assert "queue_wait_p50_s_class_0" in st
+    assert "queue_wait_p99_s_class_0" in st
+    assert st["queue_wait_p99_s_class_0"] >= 0.0

@@ -150,10 +150,14 @@ def test_never_fits_rejected_fitting_complete(parts):
     span shards) and is rejected up front, exactly like the single-device
     engine rejects against its one pool."""
     _, m, params = parts
-    reqs = [dict(rid=0, prompt=list(range(1, 70)), max_new_tokens=5),
+    # 62 prompt + 4 decode = 66 > max_len=64 -> 9 of 8 table slots: reject
+    reqs = [dict(rid=0, prompt=list(range(1, 63)), max_new_tokens=5),
             dict(rid=1, prompt=[1, 2, 3], max_new_tokens=5)]
-    eng = assert_parity(m, params, reqs)   # 69 + 4 > max_len=64 -> reject
+    eng = assert_parity(m, params, reqs)
     assert_fleet_pool_clean(eng)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(rid=9, prompt=list(range(1, 70)),
+                           max_new_tokens=5))
 
 
 # --------------------------------------------------------- fleet structure

@@ -1,0 +1,243 @@
+"""Sharded preemption and fault injection: the fleet twin of
+tests/test_preemption.py and tests/test_faults.py.
+
+The sharded engine must preserve the same contracts the single-device
+engine proved: an evicted-and-resumed request emits EXACTLY the tokens of
+the unpreempted oracle (pins are shard-local and resume steers back to
+the pinned shard), and an injected fault at any launch site costs time
+but never tokens or pages — on every shard.
+
+Needs 4 forced host devices (same guard as test_sharded_parity.py);
+skips under plain tier-1.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.serving import (EngineConfig, FaultInjector, FaultPlan, Request,
+                           ServingEngine, ShardedServingEngine)
+
+PS = 4
+CH = 8
+S = 2                                  # small fleet -> evictions are cheap
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(autouse=True)
+def _fleet_devices(host_devices):
+    host_devices(4)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = ModelConfig(
+        name="tiny-shpre", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=2, d_ff=128, vocab=256, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+class CheckedFleet(ShardedServingEngine):
+    """Pin-aware allocator invariants on EVERY shard, every quantum."""
+
+    def check_alloc(self):
+        a = jax.device_get(self.caches["paged"])
+        tbl, top = np.asarray(a["tbl"]), np.asarray(a["top"])
+        ref = np.asarray(a["ref"])
+        P = ref.shape[1]
+        for s in range(self.S):
+            counts = np.zeros((P,), int)
+            for row in tbl[s]:
+                for p in row[row >= 0]:
+                    counts[p] += 1
+            for pin_s, pages in self._pins.values():
+                if pin_s == s:
+                    for p in pages:
+                        counts[p] += 1
+            assert (ref[s] == counts).all(), \
+                f"shard {s}: refcounts != mappings + pins"
+            assert int(top[s]) + int((counts > 0).sum()) == P, \
+                f"shard {s}: page conservation"
+
+    def step(self, max_steps=10_000):
+        ran = super().step(max_steps)
+        self.check_alloc()
+        return ran
+
+
+def make_fleet(m, params, checked=True, **kw):
+    args = dict(max_batch=2, max_len=64, sync_every=4, paged=True,
+                page_size=PS, prefill_chunk=CH, shards=S, preemption=True,
+                prefix_sharing=True)
+    args.update(kw)
+    cls = CheckedFleet if checked else ShardedServingEngine
+    return cls(m, params, EngineConfig(**args))
+
+
+def oracle(m, params, reqs):
+    eng = ServingEngine(m, params, EngineConfig(
+        max_batch=max(8, len(reqs)), max_len=64, sync_every=4, paged=True,
+        page_size=PS, prefill_chunk=CH))
+    for r in reqs:
+        eng.submit(Request(**r))
+    return {r.rid: r for r in eng.run()}
+
+
+def _reqs(rids, lens, max_new=16, **kw):
+    return [dict(rid=rid, prompt=list(RNG.integers(0, 256, int(n))),
+                 max_new_tokens=max_new, **kw)
+            for rid, n in zip(rids, lens)]
+
+
+def assert_fleet_pool_clean(eng):
+    alloc = jax.device_get(eng.caches["paged"])
+    P = alloc["free"].shape[1]
+    for s in range(eng.S):
+        assert int(np.asarray(alloc["top"])[s]) == P
+        assert (np.asarray(alloc["tbl"])[s] == -1).all()
+        assert (np.asarray(alloc["ref"])[s] == 0).all()
+    assert eng.free_pages == [eng.num_pages] * eng.S
+    assert not eng._pins
+
+
+def preempted_fleet_run(m, params, low, high, warmup=6, **kw):
+    """Fill all S*B fleet slots with ``low``, then burst ``high`` at
+    priority 1 and drain."""
+    eng = make_fleet(m, params, **kw)
+    for r in low:
+        eng.submit(Request(**r))
+    for _ in range(warmup):
+        eng.step()
+    assert eng.decoding > 0, "warmup must leave victims mid-decode"
+    for r in high:
+        eng.submit(Request(**{"priority": 1, **r}))
+    got = {r.rid: r for r in eng.run()}
+    return got, eng
+
+
+# ------------------------------------------------------------------ parity
+
+
+def test_sharded_preemption_parity_and_invariants(parts):
+    """All four fleet slots held by long low-priority decodes; two
+    high-priority arrivals evict. Token-for-token vs the unpreempted
+    oracle, pin invariants every quantum on every shard, pools drain."""
+    _, m, params = parts
+    low = _reqs((0, 1, 2, 3), (10, 13, 9, 11), max_new=24)
+    high = _reqs((4, 5), (6, 5), max_new=6)
+    got, eng = preempted_fleet_run(m, params, low, high)
+    want = oracle(m, params, low + high)
+    assert eng.preemption_count >= 1, "no eviction happened"
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+        assert got[rid].finished
+    preempted = [r for r in got.values() if r.preemptions > 0]
+    assert preempted
+    for r in preempted:
+        assert len(r.tokens) == 24
+        assert r.recompute_j > 0.0
+    assert_fleet_pool_clean(eng)
+    st = eng.stats()
+    assert st["preemption_count"] == eng.preemption_count
+    assert st["preempted_recompute_j"] > 0
+
+
+def test_sharded_partially_shared_victim_parity(parts):
+    """Victims share a prefix with a shard sibling: eviction keeps the
+    shared run for the survivor, pins shard-locally, resume steers back
+    to the pinned shard and re-adopts."""
+    _, m, params = parts
+    common = list(RNG.integers(0, 256, 8))
+    low = [dict(rid=0, prompt=common + [7, 8, 9], max_new_tokens=40),
+           dict(rid=1, prompt=common + [1, 2, 3, 4], max_new_tokens=40),
+           dict(rid=2, prompt=common + [5, 6], max_new_tokens=40),
+           dict(rid=3, prompt=common + [2, 2, 2], max_new_tokens=40)]
+    high = _reqs((4,), (6,), max_new=6)
+    got, eng = preempted_fleet_run(m, params, low, high, warmup=6)
+    want = oracle(m, params, low + high)
+    assert eng.preemption_count >= 1
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+    assert eng.prefix_hit_tokens > 0
+    assert_fleet_pool_clean(eng)
+
+
+def test_sharded_no_cross_shard_victim_when_local_idle(parts):
+    """A high-priority arrival lands on an idle slot when one exists —
+    fleet-wide preemption only fires with every slot armed."""
+    _, m, params = parts
+    low = _reqs((0, 1), (8, 9), max_new=16)   # 2 of 4 slots
+    eng = make_fleet(m, params)
+    for r in low:
+        eng.submit(Request(**r))
+    for _ in range(5):
+        eng.step()
+    eng.submit(Request(rid=2, prompt=[1, 2, 3], max_new_tokens=4,
+                       priority=1))
+    got = {r.rid: r for r in eng.run()}
+    assert eng.preemption_count == 0
+    want = oracle(m, params, low + [dict(rid=2, prompt=[1, 2, 3],
+                                         max_new_tokens=4)])
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens
+
+
+# ------------------------------------------------------------------ faults
+
+
+@pytest.mark.parametrize("site,at", [
+    ("page_alloc", 1),
+    ("prefill_chunk", 2),
+    ("decode_scan", 4),
+])
+def test_sharded_fault_recovery(parts, site, at):
+    """One injected fault at each fleet launch site: run completes with
+    tokens identical to the fault-free fleet run, every shard pool
+    drains."""
+    _, m, params = parts
+    reqs = _reqs((0, 1, 2), (6, 9, 12), max_new=8)
+
+    def run(plans):
+        eng = make_fleet(m, params, checked=False, preemption=False)
+        eng.faults = FaultInjector(plans)
+        for r in reqs:
+            eng.submit(Request(**r))
+        return {r.rid: r for r in eng.run()}, eng
+
+    want, _ = run([])
+    got, eng = run([FaultPlan(site, at_quantum=at)])
+    assert eng.faults.fired, f"planned fault at {site} q{at} never fired"
+    assert eng.fault_retries >= 1
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+        assert got[rid].finished
+    assert_fleet_pool_clean(eng)
+
+
+def test_sharded_fault_during_preemption(parts):
+    """Fault + preemption composed on the fleet: still token-exact."""
+    _, m, params = parts
+    low = _reqs((0, 1, 2, 3), (10, 8, 11, 9), max_new=24)
+    high = _reqs((4,), (5,), max_new=4)
+    eng = make_fleet(m, params)
+    # run-relative: drain() starts after the warmup, decode is live two
+    # quanta in
+    eng.faults = FaultInjector([FaultPlan("decode_scan", at_quantum=2)])
+    for r in low:
+        eng.submit(Request(**r))
+    for _ in range(6):
+        eng.step()
+    for r in high:
+        eng.submit(Request(**{"priority": 1, **r}))
+    got = {r.rid: r for r in eng.run()}
+    assert eng.faults.fired
+    assert eng.preemption_count >= 1
+    want = oracle(m, params, low + [dict(priority=1, **h) for h in high])
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+    assert_fleet_pool_clean(eng)
