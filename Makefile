@@ -1,9 +1,9 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test test-all kernels paged chunked prefix sharded server \
+.PHONY: test test-all kernels paged chunked prefix sharded server hetero \
 	check-clean verify bench-engine bench-engine-sharded \
-	bench-engine-server bench-smoke bench
+	bench-engine-server bench-engine-hetero bench-smoke bench
 
 test:               ## tier-1 suite (fail fast: local inner loop)
 	$(PY) -m pytest -x -q
@@ -36,13 +36,20 @@ server:             ## front door: async server + preemption + faults (plain asy
 	$(PY) -m pytest -q tests/test_server.py tests/test_preemption.py \
 	    tests/test_faults.py
 
+# like `sharded`, the routing suite needs 4 forced host devices on its own
+# invocation; the deferral + load-gen suites ride along (device-agnostic)
+hetero:             ## heterogeneous-fleet carbon routing + deferral queue + traces
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest -q tests/test_hetero_routing.py \
+	    tests/test_defer_queue.py tests/test_load_gen.py
+
 check-clean:        ## fail if compiled artifacts are tracked by git
 	@bad=$$(git ls-files | grep -E '(\.pyc$$|__pycache__/)' || true); \
 	if [ -n "$$bad" ]; then \
 	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
 	fi
 
-verify: check-clean test kernels paged chunked prefix sharded server ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server sweeps
+verify: check-clean test kernels paged chunked prefix sharded server hetero ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py
@@ -58,6 +65,10 @@ bench-engine-sharded: ## merge a 4-device sharded section into BENCH_engine.json
 # quiet machine without re-measuring the other sections
 bench-engine-server: ## merge an open-loop async-server section into BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py --server-only
+
+bench-engine-hetero: ## merge a 4-device hetero carbon-routing section into BENCH_engine.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) benchmarks/engine_bench.py --hetero-only
 
 bench-smoke:        ## CI: every bench code path once, reduced size -> BENCH_engine_smoke.json
 	$(PY) benchmarks/engine_bench.py --smoke

@@ -9,7 +9,11 @@ shared-system-prompt workload (max concurrent requests at equal pool
 bytes; follower TTFT). Every variant also reports measured TTFT and
 inter-token latency p50/p99 from per-token host emission timestamps —
 chunked prefill's win is a tail-latency claim, so it has to be measured,
-not modeled. Writes ``BENCH_engine.json``; ``--smoke`` (CI) runs every
+not modeled. The ``hetero`` section serves one diurnal mixed trace
+through a heterogeneous 4-shard fleet (two hardware generations, three
+grid regions) twice — carbon-aware routing + low-CI deferral vs
+capacity-greedy free-pages placement — and compares fleet gCO2/token at
+fixed aggregate pool bytes. Writes ``BENCH_engine.json``; ``--smoke`` (CI) runs every
 code path once at reduced size and writes ``BENCH_engine_smoke.json``
 instead, so the committed numbers are never clobbered by a shared runner.
 
@@ -668,6 +672,174 @@ def _bench_server(model, params, smoke: bool = False) -> Dict:
     }
 
 
+def _bench_hetero(model, params, smoke: bool = False) -> Dict:
+    """Carbon-aware routing over a heterogeneous fleet vs free-pages
+    placement: the SAME diurnal mixed trace (interactive priority-1 work
+    plus a deferrable priority-0 batch class) served twice through a
+    4-shard fleet spanning two hardware generations (rtx6000ada, t4) and
+    three grid regions (PACE 647 g/kWh, CISO 262, QC 31), at FIXED
+    aggregate pool bytes — only the placement policy and the deferral
+    knob change between passes.
+
+    The claims (measured at --xla_force_host_platform_device_count=4):
+
+    * fleet gCO2/token with ``routing="carbon"`` + batch deferral is
+      >= 1.3x LOWER than capacity-greedy ``free_pages`` routing on the
+      identical trace — free_pages spreads load onto the dirty-grid
+      shards it has no reason to avoid, while the marginal-gCO2 score
+      (phase-specific operational J at the shard's current CI plus the
+      Eq. 2-4 embodied rent on reserved pages) concentrates work on the
+      green slices and parks batch work for the CI valley;
+    * p99 TTFT of the NON-deferred interactive class stays within 10%
+      of the free_pages pass — carbon placement only reorders among
+      eligible shards (free slot + pages), so latency work is never
+      queued behind a greener-but-full shard;
+    * ZERO deferred requests finish by deadline — the forced-release
+      path (``defer_deadline_frac`` of the budget) fires before the
+      deadline can, so chasing the green window never costs correctness.
+    """
+    shards = 4
+    if jax.device_count() < shards:
+        return {"skipped":
+                f"needs {shards} host devices, have {jax.device_count()}: "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{shards} before the first jax import"}
+    from benchmarks.load_gen import diurnal_trace, mixed_requests
+    profiles = ["rtx6000ada", "rtx6000ada", "t4", "t4"]
+    regions = ["PACE", "CISO", "QC", "QC"]
+    # slots/pages per shard sized so the GREEN shards can absorb the whole
+    # released batch wave (admission is work-conserving FCFS: a wave
+    # larger than green capacity spills onto PACE and the comparison
+    # measures capacity, not routing); pool fixed both passes
+    ps = 8
+    B = 4 if smoke else 8
+    pages = 32 if smoke else 64
+    max_len = 128
+    n_batch = 8 if smoke else 16         # <= the 2 QC shards' slot count
+    n_live = 6 if smoke else 12
+    batch_new = 8 if smoke else 24
+    live_new = 4 if smoke else 8
+
+    def reqs() -> List[Request]:
+        # rebuilt per pass (the engine mutates requests in place); the
+        # arrival trace is diurnal — rate phase-locked to the CISO CI
+        # curve — and interleaves the two classes by arrival time
+        rng = np.random.default_rng(99)
+        batch = mixed_requests(
+            diurnal_trace(4.0, n_batch, rng, region="CISO", depth=0.8),
+            rng, prompt_len=(6, 18), max_new_tokens=batch_new,
+            priority=0, deadline_s=120.0)
+        live = mixed_requests(
+            diurnal_trace(2.0, n_live, rng, region="CISO", depth=0.8),
+            rng, prompt_len=(4, 10), max_new_tokens=live_new,
+            priority=1, rid0=1000)
+        out = []
+        for s in sorted(batch + live, key=lambda s: s["arrival_s"]):
+            s = dict(s)
+            s.pop("arrival_s")
+            if s["rid"] >= 1000:
+                # the interactive class is SLO-PINNED: under carbon
+                # routing it keeps load-first placement (greener shard
+                # only as tie-break), so chasing green slices never
+                # queues its prefills — that is the p99-within-10% claim
+                s["slo_s"] = 1.0
+            out.append(Request(**s))
+        return out
+
+    def serve(routing: str) -> Dict:
+        eng = ShardedServingEngine(model, params, EngineConfig(
+            max_batch=B, max_len=max_len, sync_every=8, paged=True,
+            page_size=ps, num_pages=pages, prefill_chunk=16, shards=shards,
+            shard_profiles=profiles, shard_regions=regions, routing=routing,
+            use_diurnal_ci=True,
+            defer_below_priority=(1 if routing == "carbon" else None)))
+        for r in reqs():
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        tot = eng.meter.totals
+        live_resps = [r for r in eng.responses.values() if r.rid >= 1000]
+        batch_resps = [r for r in eng.responses.values() if r.rid < 1000]
+        return {
+            "wall_s": dt,
+            "tokens": tot.tokens,
+            "energy_j": tot.energy_j,
+            "operational_g": tot.operational_g,
+            "embodied_g": tot.embodied_g,
+            "carbon_g": tot.total_g,
+            "g_per_token": tot.g_per_token,
+            "j_per_token": tot.j_per_token,
+            "live_ttft_p50_s": _latency_stats(
+                [r.t_emit for r in live_resps], t0)["ttft_p50_s"],
+            "live_ttft_p99_s": _latency_stats(
+                [r.t_emit for r in live_resps], t0)["ttft_p99_s"],
+            "deferred_requests": st["deferred_requests"],
+            "deferred_released": st["deferred_released"],
+            "deferred_forced_releases": st["deferred_forced_releases"],
+            "deferred_deadline_violations": sum(
+                1 for r in batch_resps if r.finish_reason == "deadline"),
+            "shard_requests": [int(st[f"shard{s}_requests"])
+                               for s in range(shards)],
+            "shard_carbon_g": [st[f"shard{s}_carbon_g"]
+                               for s in range(shards)],
+            "final_clock_hours": float(eng.clock.hours),
+        }
+
+    serve("free_pages")                  # compile: each policy concentrates
+    serve("carbon")                      # work differently -> own shapes
+    # placement and modeled carbon are deterministic across runs; the
+    # wall-clock TTFT tail is not (same 20-40ms scheduler spikes the
+    # chunked section de-noises), so the latency comparison takes the
+    # MINIMUM over repeats for both policies alike
+    reps = 1 if smoke else TAIL_RUNS
+    runs_free = [serve("free_pages") for _ in range(reps)]
+    runs_carbon = [serve("carbon") for _ in range(reps)]
+    free, carbon = runs_free[-1], runs_carbon[-1]
+    for out_d, runs in ((free, runs_free), (carbon, runs_carbon)):
+        for k in ("live_ttft_p50_s", "live_ttft_p99_s"):
+            out_d[k] = min(r[k] for r in runs)
+    return {
+        "shards": shards,
+        "shard_profiles": profiles,
+        "shard_regions": regions,
+        "per_shard_pool_kv_rows": pages * ps,
+        "n_batch": n_batch, "n_live": n_live,
+        "free_pages": free,
+        "carbon": carbon,
+        "g_per_token_improvement":
+            free["g_per_token"] / max(carbon["g_per_token"], 1e-12),
+        "live_ttft_p99_ratio":
+            carbon["live_ttft_p99_s"] / max(free["live_ttft_p99_s"], 1e-9),
+        "j_per_token_ratio":
+            carbon["j_per_token"] / max(free["j_per_token"], 1e-12),
+    }
+
+
+def _hetero_criteria(hetero: Dict) -> Dict:
+    if "skipped" in hetero:
+        return {}
+    return {
+        # the tentpole claim: marginal-gCO2 placement + low-CI deferral
+        # cut fleet carbon per token >= 1.3x vs capacity-greedy routing
+        # on the identical trace at equal aggregate pool bytes
+        "hetero_carbon_ge_1_3x_lower_g_per_token":
+            hetero["g_per_token_improvement"] >= 1.3,
+        # chasing green shards must not tax the latency class: p99 TTFT
+        # of the non-deferred interactive work within 10%
+        "hetero_live_ttft_p99_within_10pct":
+            hetero["live_ttft_p99_ratio"] <= 1.10,
+        # the deferral queue is SLO-safe: every parked request released
+        # in time (forced by deadline pressure if the window never came)
+        "hetero_zero_deferred_deadline_violations":
+            hetero["carbon"]["deferred_deadline_violations"] == 0,
+        # and the batch class really was parked, not trivially admitted
+        "hetero_batch_class_deferred":
+            hetero["carbon"]["deferred_requests"] == hetero["n_batch"],
+    }
+
+
 def _server_criteria(server: Dict) -> Dict:
     return {
         # preemption turns queueing delay into eviction: high-priority
@@ -705,12 +877,14 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     prefix = _bench_prefix(model, params, smoke=smoke)
     sharded = _bench_sharded(model, params, max_len, smoke=smoke)
     server = _bench_server(model, params, smoke=smoke)
+    hetero = _bench_hetero(model, params, smoke=smoke)
     speedup = fused["decode_steps_per_s"] / seed["decode_steps_per_s"]
     out = {
         "config": cfg.name, "variant": variant, "batch": BATCH,
         "requests": n_requests, "max_new_tokens": max_new,
         "seed": seed, "fused": fused, "paged": paged, "chunked": chunked,
         "prefix": prefix, "sharded": sharded, "server": server,
+        "hetero": hetero,
         "decode_steps_per_s_speedup": speedup,
         "criteria": {
             "fused_ge_2x_decode_steps_per_s": speedup >= 2.0,
@@ -749,6 +923,7 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     }
     out["criteria"].update(_sharded_criteria(sharded))
     out["criteria"].update(_server_criteria(server))
+    out["criteria"].update(_hetero_criteria(hetero))
     return out
 
 
@@ -815,6 +990,14 @@ def main():
                          "JSON — the server bench is wall-clock "
                          "sensitive, so it can be refreshed on a quiet "
                          "machine without re-running everything else")
+    ap.add_argument("--hetero-only", action="store_true",
+                    help="re-measure ONLY the heterogeneous-fleet carbon "
+                         "routing section (run under XLA_FLAGS=--xla_"
+                         "force_host_platform_device_count=4) and merge "
+                         "it into the existing output JSON — same "
+                         "two-pass flow as --sharded-only, and for the "
+                         "same reason: forcing host devices degrades the "
+                         "single-device sections' timings")
     args = ap.parse_args()
     if args.smoke:
         REPEATS, TAIL_RUNS = 1, 1
@@ -843,6 +1026,25 @@ def main():
         res["criteria"] = {k: v for k, v in res["criteria"].items()
                            if not k.startswith("sharded_")}
         res["criteria"].update(_sharded_criteria(res["sharded"]))
+    elif args.hetero_only:
+        with open(args.out) as f:
+            res = json.load(f)
+        if res.get("variant") != args.variant:
+            raise SystemExit(
+                f"--hetero-only: {args.out} holds variant "
+                f"{res.get('variant')!r}, refusing to merge a "
+                f"{args.variant!r} hetero section into it")
+        cfg = llama_paper.make(args.variant, "llama-paper-1b")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        hetero = _bench_hetero(model, params, smoke=args.smoke)
+        if "skipped" in hetero:
+            # never clobber committed measurements with a skip stub
+            raise SystemExit(f"--hetero-only: {hetero['skipped']}")
+        res["hetero"] = hetero
+        res["criteria"] = {k: v for k, v in res["criteria"].items()
+                           if not k.startswith("hetero_")}
+        res["criteria"].update(_hetero_criteria(res["hetero"]))
     elif args.server_only:
         with open(args.out) as f:
             res = json.load(f)
@@ -861,21 +1063,26 @@ def main():
     else:
         res = bench(args.variant, args.requests, args.max_new_tokens,
                     smoke=args.smoke)
-        if "skipped" in res["sharded"]:
+        if "skipped" in res["sharded"] or "skipped" in res["hetero"]:
             # pass 1 of the two-pass flow runs without forced host devices:
-            # keep an existing MEASURED sharded section (and its criteria)
-            # rather than clobbering it with a skip stub — pass 2
-            # (`make bench-engine-sharded`) is what refreshes it
+            # keep existing MEASURED 4-device sections (and their criteria)
+            # rather than clobbering them with skip stubs — pass 2
+            # (`make bench-engine-sharded` / `make bench-engine-hetero`)
+            # is what refreshes them
             try:
                 with open(args.out) as f:
                     prev = json.load(f)
             except (OSError, ValueError):
                 prev = {}
-            old = prev.get("sharded", {})
-            if "skipped" not in old and old and \
-                    prev.get("variant") == args.variant:
-                res["sharded"] = old
-                res["criteria"].update(_sharded_criteria(old))
+            for section, crit in (("sharded", _sharded_criteria),
+                                  ("hetero", _hetero_criteria)):
+                if "skipped" not in res[section]:
+                    continue
+                old = prev.get(section, {})
+                if "skipped" not in old and old and \
+                        prev.get("variant") == args.variant:
+                    res[section] = old
+                    res["criteria"].update(crit(old))
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     s, fu = res["seed"], res["fused"]
@@ -965,6 +1172,29 @@ def main():
               f"{on['preempted_recompute_j']:.1f}")
         print(f"decode J/token on/off ratio: "
               f"{sv['decode_j_per_token_ratio']:.4f}")
+    ht = res.get("hetero")
+    if ht and "skipped" in ht:
+        print(f"\n== hetero carbon routing: SKIPPED ({ht['skipped']}) ==")
+    elif ht:
+        fp, cb = ht["free_pages"], ht["carbon"]
+        fleet = ", ".join(f"{p}@{r}" for p, r in
+                          zip(ht["shard_profiles"], ht["shard_regions"]))
+        print(f"\n== hetero carbon routing ({fleet}; {ht['n_live']} "
+              f"interactive + {ht['n_batch']} deferrable batch, "
+              f"{ht['per_shard_pool_kv_rows']} KV rows/shard) ==")
+        print(f"fleet gCO2/token: free_pages {fp['g_per_token']:.3e} -> "
+              f"carbon {cb['g_per_token']:.3e} "
+              f"({ht['g_per_token_improvement']:.2f}x lower)")
+        print(f"requests per shard: free_pages {fp['shard_requests']} -> "
+              f"carbon {cb['shard_requests']}")
+        print(f"interactive TTFT p99: free_pages "
+              f"{1e3 * fp['live_ttft_p99_s']:.1f}ms -> carbon "
+              f"{1e3 * cb['live_ttft_p99_s']:.1f}ms "
+              f"(ratio {ht['live_ttft_p99_ratio']:.2f})")
+        print(f"deferral: {cb['deferred_requests']} parked, "
+              f"{cb['deferred_released']} released "
+              f"({cb['deferred_forced_releases']} deadline-forced), "
+              f"{cb['deferred_deadline_violations']} deadline violations")
     print(f"criteria: {res['criteria']}")
     print(f"wrote {args.out}")
 

@@ -11,8 +11,10 @@ from admission, which is exactly what queueing delay corrupts).
 
 Three pieces:
 
-  * trace builders — ``poisson_trace`` (steady background arrivals) and
-    ``bursty_trace`` (clustered spikes), both returning arrival seconds;
+  * trace builders — ``poisson_trace`` (steady background arrivals),
+    ``bursty_trace`` (clustered spikes), and ``diurnal_trace`` (arrival
+    rate phase-locked to a region's CI trace), all returning arrival
+    seconds, all deterministic under a seeded rng;
   * ``mixed_requests`` — turns a trace into request SPECS (plain dicts,
     not ``Request`` objects: the engine mutates requests in place on
     eviction, so every serve pass must build fresh ones);
@@ -33,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.intensity import ci_at_hour, get_region
 from repro.serving import AsyncServingServer, Request
 
 Spec = Dict          # Request kwargs + "arrival_s"
@@ -60,6 +63,39 @@ def bursty_trace(n_bursts: int, burst_size: int, gap_s: float,
         t0 = start_s + b * gap_s
         out.extend(sorted(t0 + rng.uniform(0.0, spread_s)
                           for _ in range(burst_size)))
+    return out
+
+
+def diurnal_trace(rate_per_s: float, n: int, rng, *, region: str = "CISO",
+                  depth: float = 0.8, start_hour: float = 0.0,
+                  hours_per_s: float = 1.0) -> List[float]:
+    """n arrivals from an inhomogeneous Poisson process whose rate is
+    phase-locked to ``region``'s diurnal CI trace: arrival rate peaks
+    when the grid is dirtiest (demand drives both load and CI — the
+    realistic worst case for carbon routing, and the trace shape under
+    which deferral to the green valley pays most). ``depth`` scales the
+    swing (rate = rate_per_s * (1 ± depth) at the CI extremes);
+    ``hours_per_s`` maps trace seconds onto CI-trace hours (benches
+    compress a day into seconds of wall clock). Thinning construction:
+    candidates at the peak rate, accepted with probability lam(t)/peak —
+    exact, and deterministic under a seeded ``rng``."""
+    if rate_per_s <= 0:
+        raise ValueError("rate_per_s must be positive")
+    if not (0.0 <= depth <= 1.0):
+        raise ValueError("depth must be in [0, 1]")
+    reg = get_region(region)
+    peak = rate_per_s * (1.0 + depth)
+    amp = max(reg.diurnal_amplitude, 1e-9)
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        t += float(rng.exponential(1.0 / peak))
+        h = (start_hour + t * hours_per_s) % 24.0
+        # CI relative position in [-1, 1] across its diurnal swing
+        rel = (ci_at_hour(reg, h) / reg.ci_g_per_kwh - 1.0) / amp
+        lam = rate_per_s * (1.0 + depth * rel)
+        if rng.uniform() < lam / peak:
+            out.append(t)
     return out
 
 

@@ -20,10 +20,12 @@ from repro.core.energy import (LLAMA_1B, LLAMA_3B, LLAMA_7B, EnergyReport,
 from repro.core.hardware import (REGISTRY, HardwareProfile, get_profile,
                                  register_profile)
 from repro.core.intensity import REGIONS, Region, ci_at_hour, get_region
-from repro.core.meter import CarbonMeter, PhaseStats
+from repro.core.meter import (CarbonMeter, FleetMeterView, PhaseStats,
+                              SharedClock)
 from repro.core.scheduler import (CIDirectedScheduler, FleetSlice, Placement,
                                   carbon_optimal_batch, evaluate,
-                                  place_request_class, plan_disaggregated,
+                                  marginal_request_g, place_request_class,
+                                  plan_disaggregated,
                                   throughput_optimal_batch)
 
 __all__ = [
@@ -34,8 +36,9 @@ __all__ = [
     "prefill_counts", "prefill_report", "prompt_report", "step_energy",
     "step_time", "REGISTRY", "HardwareProfile", "get_profile",
     "register_profile", "REGIONS", "Region", "ci_at_hour", "get_region",
-    "CarbonMeter", "PhaseStats", "CIDirectedScheduler", "FleetSlice",
-    "Placement", "carbon_optimal_batch", "evaluate", "place_request_class",
+    "CarbonMeter", "FleetMeterView", "PhaseStats", "SharedClock",
+    "CIDirectedScheduler", "FleetSlice", "Placement", "carbon_optimal_batch",
+    "evaluate", "marginal_request_g", "place_request_class",
     "plan_disaggregated", "throughput_optimal_batch",
 ]
 from repro.core.forecast import CIForecaster, mape  # noqa: E402

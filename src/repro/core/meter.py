@@ -15,12 +15,19 @@ figures — and every non-preempted request's attributed energy — invariant
 to the preemption policy, while the recompute phase totals the true
 energy price of preemption (the engine also surfaces it per request as
 ``Response.recompute_j`` and fleet-wide as ``preempted_recompute_j``).
+
+Heterogeneous fleets meter PER SHARD: one CarbonMeter per shard at that
+shard's hardware profile × region CI, all sharing one ``SharedClock``
+(fleet wall time — shards run in parallel, so the diurnal clock advances
+by the slowest shard's modeled time per quantum, not the sum), aggregated
+through ``FleetMeterView`` so the fleet totals are by construction the
+exact sum of the per-shard attribution.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, Optional, Union
+from typing import Dict, Optional, Sequence, Union
 
 from repro.core.carbon import (CarbonBreakdown, DEFAULT_LIFETIME_YEARS,
                                total_carbon)
@@ -53,20 +60,53 @@ class PhaseStats:
     def tokens_per_s(self) -> float:
         return self.tokens / max(self.time_s, 1e-12)
 
+    def add(self, other: "PhaseStats") -> "PhaseStats":
+        self.steps += other.steps
+        self.tokens += other.tokens
+        self.time_s += other.time_s
+        self.energy_j += other.energy_j
+        self.operational_g += other.operational_g
+        self.embodied_g += other.embodied_g
+        return self
+
+
+@dataclasses.dataclass
+class SharedClock:
+    """Mutable virtual-hours clock shared by several CarbonMeters — a
+    fleet of shard meters advances ONE clock (fleet wall time) instead of
+    each meter privately summing its own device time."""
+
+    hours: float = 0.0
+
 
 class CarbonMeter:
     """Accumulates per-phase energy/carbon for one device (group)."""
 
     def __init__(self, profile: HardwareProfile, region: Union[str, Region],
                  lifetime_years: float = DEFAULT_LIFETIME_YEARS,
-                 n_devices: int = 1, use_diurnal_ci: bool = False):
+                 n_devices: int = 1, use_diurnal_ci: bool = False,
+                 clock: Optional[SharedClock] = None,
+                 advances_clock: bool = True):
         self.profile = profile
         self.region = get_region(region) if isinstance(region, str) else region
         self.lifetime_years = lifetime_years
         self.n_devices = n_devices
         self.use_diurnal_ci = use_diurnal_ci
         self.phases: Dict[str, PhaseStats] = defaultdict(PhaseStats)
-        self.clock_hours = 0.0          # wall clock for diurnal CI
+        # wall clock for diurnal CI: private by default; a fleet passes one
+        # SharedClock to every shard meter (and advances it ITSELF, once
+        # per quantum, with advances_clock=False here — S parallel shards
+        # recording the same quantum must not advance the day S times)
+        self._clock = clock if clock is not None else SharedClock()
+        self.advances_clock = advances_clock
+
+    @property
+    def clock_hours(self) -> float:
+        return self._clock.hours
+
+    @clock_hours.setter
+    def clock_hours(self, hours: float) -> None:
+        self._clock.hours = hours
 
     def record(self, phase: str, tokens: float, time_s: float,
                energy_j: float) -> CarbonBreakdown:
@@ -86,7 +126,8 @@ class CarbonMeter:
         st.energy_j += energy_j
         st.operational_g += cb.operational_g
         st.embodied_g += cb.embodied_g
-        self.clock_hours += time_s / 3600.0
+        if self.advances_clock:
+            self._clock.hours += time_s / 3600.0
         return cb
 
     def phase(self, name: str) -> PhaseStats:
@@ -96,12 +137,7 @@ class CarbonMeter:
     def totals(self) -> PhaseStats:
         t = PhaseStats()
         for st in self.phases.values():
-            t.steps += st.steps
-            t.tokens += st.tokens
-            t.time_s += st.time_s
-            t.energy_j += st.energy_j
-            t.operational_g += st.operational_g
-            t.embodied_g += st.embodied_g
+            t.add(st)
         return t
 
     def report(self) -> str:
@@ -121,3 +157,42 @@ class CarbonMeter:
                 f"  g/tok={st.g_per_token:.3e}  J/tok={st.j_per_token:.3e}"
             )
         return "\n".join(lines)
+
+
+class FleetMeterView:
+    """Read-only aggregate over per-shard CarbonMeters.
+
+    Exposes the same ``totals``/``phase``/``phases``/``report`` surface as
+    one CarbonMeter, computed by summing the shard meters — so fleet-level
+    accounting (carbon budgets, stats, benches) IS the sum of the
+    per-shard attribution, with no second ledger that could drift."""
+
+    def __init__(self, meters: Sequence[CarbonMeter]):
+        if not meters:
+            raise ValueError("FleetMeterView needs at least one meter")
+        self.meters = list(meters)
+
+    @property
+    def phases(self) -> Dict[str, PhaseStats]:
+        out: Dict[str, PhaseStats] = {}
+        for m in self.meters:
+            for name, st in m.phases.items():
+                out.setdefault(name, PhaseStats()).add(st)
+        return out
+
+    def phase(self, name: str) -> PhaseStats:
+        return self.phases.get(name, PhaseStats())
+
+    @property
+    def totals(self) -> PhaseStats:
+        t = PhaseStats()
+        for m in self.meters:
+            t.add(m.totals)
+        return t
+
+    @property
+    def clock_hours(self) -> float:
+        return self.meters[0].clock_hours
+
+    def report(self) -> str:
+        return "\n".join(m.report() for m in self.meters)

@@ -21,7 +21,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.carbon import DEFAULT_LIFETIME_YEARS, total_carbon
+from repro.core.carbon import (DEFAULT_LIFETIME_YEARS, amortized_embodied_g,
+                               operational_carbon_g, total_carbon)
 from repro.core.energy import (EnergyReport, LLMWorkload, decode_report,
                                prefill_report, prompt_report)
 from repro.core.hardware import HardwareProfile
@@ -87,6 +88,48 @@ def evaluate(sl: FleetSlice, w: LLMWorkload, phase: str, batch: int,
         feasible, reason = False, f"latency {rep.t_total:.3f}s > SLO {slo_s:.3f}s"
     return Placement(sl.key, batch, phase, rep.t_total, rep.energy_j,
                      cb.total_g, cb.g_per_token, feasible, reason)
+
+
+def marginal_request_g(sl: FleetSlice, w: LLMWorkload, prefill_tokens: float,
+                       decode_tokens: float, resv_frac: float,
+                       ci: Optional[float] = None,
+                       n_devices: int = 1) -> Tuple[float, float]:
+    """Marginal gCO2 of serving ONE request on slice ``sl`` — the live
+    placement score of the sharded engine's carbon routing.
+
+    Operational: batch-1 per-token J of each phase (the marginal unit of
+    work at this slice's profile, via the same ``_phase_report`` that
+    backs :func:`evaluate`) × the request's phase mix, priced at the
+    CURRENT carbon intensity ``ci`` (default: the region's flat mean).
+    ``prefill_tokens`` arrives already discounted by resident-prefix hits
+    — adopted pages cost this request nothing to recompute.
+
+    Embodied: Eq. 2-4 amortized over the request's estimated service
+    time, scaled by ``resv_frac`` — the fraction of the shard's page pool
+    the request would reserve. The request rents its share of the device
+    for its service window; prefix hits shrink the reservation and with
+    it the rent, which is what steers decode-heavy requests toward
+    memory-rich amortized shards (GreenLLM's disaggregation).
+
+    Returns ``(carbon_g, est_time_s)``; ``(inf, inf)`` when either phase
+    OOMs the slice."""
+    ci_val = sl.region.ci_g_per_kwh if ci is None else ci
+    op_g = 0.0
+    t_est = 0.0
+    for phase, toks in (("prefill", prefill_tokens),
+                        ("decode", decode_tokens)):
+        if toks <= 0:
+            continue
+        rep = _phase_report(phase, sl.profile, w, 1)
+        if math.isinf(rep.t_total):
+            return math.inf, math.inf
+        scale = toks / max(rep.tokens, 1e-12)
+        op_g += operational_carbon_g(rep.energy_j * scale, ci_val)
+        t_est += rep.t_total * scale
+    em_g = (n_devices * amortized_embodied_g(sl.profile, t_est,
+                                             sl.lifetime_years)
+            * max(min(resv_frac, 1.0), 0.0))
+    return op_g + em_g, t_est
 
 
 def carbon_optimal_batch(sl: FleetSlice, w: LLMWorkload, phase: str,

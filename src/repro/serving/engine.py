@@ -78,14 +78,16 @@ import dataclasses
 import hashlib
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import decode_counts, prefill_counts, step_energy
+from repro.core.forecast import CIForecaster
 from repro.core.hardware import HardwareProfile, get_profile
+from repro.core.intensity import Region, ci_trace
 from repro.core.meter import CarbonMeter
 from repro.models import Model
 from repro.models.costing import workload_of
@@ -205,6 +207,28 @@ def pack_chunks(prefilling, chunk: int, pack: int):
     return take
 
 
+def _prefill_phase_counts(workload, batch: int, seq: int,
+                          useful_seq: Optional[float] = None, skip: int = 0):
+    """Step counts for one prefill launch of ``batch`` sequences padded to
+    ``seq``, with ``skip`` leading tokens already resident (prefix sharing:
+    their compute and KV writes never ran — the difference
+    prefill(seq) - prefill(skip) is exactly the cost of computing the
+    suffix with attention over the full prefix). Shared by the single
+    engine and every shard of a heterogeneous fleet, which price the SAME
+    counts at their own profiles."""
+    counts = prefill_counts(workload, batch, seq, useful_seq=useful_seq)
+    if skip > 0:
+        base = prefill_counts(workload, batch, skip)
+        counts = dataclasses.replace(
+            counts, flops=counts.flops - base.flops,
+            # the suffix launch still streams the weights once
+            hbm_bytes=(counts.hbm_bytes - base.hbm_bytes
+                       + workload.params_bytes),
+            kv_bytes=counts.kv_bytes - base.kv_bytes,
+            compute_tokens=counts.compute_tokens - base.compute_tokens)
+    return counts
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8                 # decode slot count
@@ -283,6 +307,39 @@ class EngineConfig:
     # shared pages go through copy-on-write. Off by default: the unshared
     # paged engine is the token-for-token parity oracle.
     prefix_sharing: bool = False
+    # ---- heterogeneous fleet + carbon routing (PR 7) ----
+    # per-shard hardware profile / grid region names for the
+    # ShardedServingEngine (length must equal `shards`; None = every shard
+    # uses `profile` / `region`). The model runs identically everywhere —
+    # heterogeneity lives in the energy/carbon attribution and in
+    # placement, never in the token streams.
+    shard_profiles: Optional[Sequence[str]] = None
+    shard_regions: Optional[Sequence[str]] = None
+    # fleet placement policy: "free_pages" (PR 5 baseline — longest
+    # resident prefix, then most free pages) or "carbon" (marginal gCO2:
+    # phase-specific operational J at each shard's profile and CURRENT CI
+    # plus embodied rent over the pages the request would reserve,
+    # core/scheduler.marginal_request_g). Eligibility (free slot, fitting
+    # reservation, FCFS head-only) is IDENTICAL under both policies, and
+    # on a homogeneous fleet every shard scores equal so "carbon" degrades
+    # to the exact "free_pages" order — routing regroups placement, never
+    # chunk boundaries or greedy token streams.
+    routing: str = "free_pages"
+    # meter operational carbon (and score carbon routing) at the region's
+    # synthetic diurnal CI trace as the engine's virtual clock advances,
+    # instead of the flat Table 2 mean.
+    use_diurnal_ci: bool = False
+    # temporal deferral: requests with priority STRICTLY below this are
+    # held OUT of the admission queue (no slot, no reservation, exempt
+    # from max_queue — they own nothing) until the CI forecaster's
+    # greenest window opens at the engine's virtual clock, or until
+    # defer_deadline_frac of their wall-clock deadline budget has elapsed
+    # (forced release: the remaining budget is reserved for service, so
+    # deferral never violates deadline_s). None = never defer.
+    defer_below_priority: Optional[int] = None
+    # look-ahead horizon (virtual hours) for the greenest-window search
+    defer_horizon_h: int = 24
+    defer_deadline_frac: float = 0.5
 
 
 class ServingEngine:
@@ -293,7 +350,8 @@ class ServingEngine:
         self.profile: HardwareProfile = get_profile(cfg.profile)
         self.meter = CarbonMeter(self.profile, cfg.region,
                                  lifetime_years=cfg.lifetime_years,
-                                 n_devices=cfg.n_devices)
+                                 n_devices=cfg.n_devices,
+                                 use_diurnal_ci=cfg.use_diurnal_ci)
         self.workload = workload_of(model.cfg)
         self.queue: deque = deque()
         self.responses: Dict[int, Response] = {}
@@ -351,6 +409,22 @@ class ServingEngine:
             raise ValueError("max_queue must be >= 1")
         if cfg.max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if cfg.routing not in ("free_pages", "carbon"):
+            raise ValueError(f"unknown routing {cfg.routing!r}")
+        if cfg.defer_horizon_h < 1:
+            raise ValueError("defer_horizon_h must be >= 1")
+        if not (0.0 < cfg.defer_deadline_frac < 1.0):
+            raise ValueError("defer_deadline_frac must be in (0, 1)")
+        # temporal deferral: held requests own NOTHING (no slot, no pages,
+        # no queue position) until the CI forecaster's greenest window
+        # opens at the virtual clock, or deadline pressure forces release
+        self.deferred: deque = deque()
+        self.deferred_rids: set = set()
+        self._defer_release_h: Dict[int, float] = {}
+        self._forecasters: Dict[str, CIForecaster] = {}
+        self.deferred_total = 0
+        self.deferred_released = 0
+        self.deferred_forced = 0
 
         self.paged = cfg.paged
         if cfg.paged:
@@ -441,17 +515,8 @@ class ServingEngine:
         prefill is charged to ``"recompute"`` so the prefill phase's
         J/token — and every non-preempted request's modeled energy — is
         invariant to the preemption policy."""
-        counts = prefill_counts(self.workload, batch, seq,
-                                useful_seq=useful_seq)
-        if skip > 0:
-            base = prefill_counts(self.workload, batch, skip)
-            counts = dataclasses.replace(
-                counts, flops=counts.flops - base.flops,
-                # the suffix launch still streams the weights once
-                hbm_bytes=(counts.hbm_bytes - base.hbm_bytes
-                           + self.workload.params_bytes),
-                kv_bytes=counts.kv_bytes - base.kv_bytes,
-                compute_tokens=counts.compute_tokens - base.compute_tokens)
+        counts = _prefill_phase_counts(self.workload, batch, seq,
+                                       useful_seq=useful_seq, skip=skip)
         rep = step_energy(self.profile, counts)
         self.meter.record(phase, rep.tokens, rep.t_total, rep.energy_j)
         return rep
@@ -488,6 +553,12 @@ class ServingEngine:
         self._req_slo[req.rid] = req.slo_s
         self.responses[req.rid] = Response(rid=req.rid, tokens=[],
                                            priority=req.priority)
+        dbp = self.cfg.defer_below_priority
+        if dbp is not None and req.priority < dbp:
+            # batch-class work waits for the low-CI window; held requests
+            # own nothing, so they bypass the bounded admission queue
+            self._defer(req)
+            return
         mq = self.cfg.max_queue
         if mq is not None and len(self.queue) >= mq:
             victim = self._pick_shed_victim(req)
@@ -578,6 +649,100 @@ class ServingEngine:
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    # ---------------------------------------------------- temporal deferral
+    # Batch-class requests wait for the grid's greenest window (paper §4's
+    # temporal lever): the CI forecaster picks the lowest-mean-CI window in
+    # the look-ahead horizon at submit time, the request is parked owning
+    # nothing, and it re-enters the FCFS queue when the engine's virtual
+    # clock reaches that window — or earlier, when defer_deadline_frac of
+    # its deadline budget has elapsed (the rest is reserved for service).
+
+    def _clock_hours(self) -> float:
+        """Virtual fleet time in hours — the deferral time base."""
+        return self.meter.clock_hours
+
+    def _advance_clock_to(self, hours: float) -> None:
+        self.meter.clock_hours = max(self.meter.clock_hours, hours)
+
+    def _defer_regions(self) -> List[Region]:
+        return [self.meter.region]
+
+    def _forecaster(self, region: Region) -> CIForecaster:
+        fc = self._forecasters.get(region.name)
+        if fc is None:
+            # fit on two synthetic days of the region's diurnal trace —
+            # the stand-in for yesterday's telemetry feed
+            hours = np.arange(0.0, 48.0)
+            fc = CIForecaster().fit(hours, ci_trace(region, hours))
+            self._forecasters[region.name] = fc
+        return fc
+
+    def _defer(self, req: Request) -> None:
+        """Park ``req`` until the greenest forecast window across the
+        fleet's regions opens (fixed at submit — a day-ahead commitment,
+        so release order within a class stays FCFS)."""
+        now_h = self._clock_hours()
+        best = now_h
+        best_ci = None
+        for region in self._defer_regions():
+            start, mean_ci = self._forecaster(region).greenest_window(
+                now_h, horizon_h=self.cfg.defer_horizon_h)
+            if best_ci is None or mean_ci < best_ci:
+                best, best_ci = start, mean_ci
+        self._defer_release_h[req.rid] = best
+        self.deferred.append(req)
+        self.deferred_rids.add(req.rid)
+        self.deferred_total += 1
+
+    def _release_deferred(self) -> int:
+        """Move due (window open) or forced (deadline pressure) requests
+        from the deferral queue into the admission queue. Releases are
+        prefix-closed per priority class: if request i of a class is
+        released, everything of that class ahead of it is too — deferral
+        can never reorder same-class FCFS."""
+        if not self.deferred:
+            return 0
+        now_h = self._clock_hours()
+        now_s = time.perf_counter()
+        frac = self.cfg.defer_deadline_frac
+        last_eligible: Dict[int, int] = {}
+        forced_rids: set = set()
+        for i, req in enumerate(self.deferred):
+            due = now_h >= self._defer_release_h[req.rid]
+            forced = (req.deadline_s is not None
+                      and now_s - req.t_submit >= frac * req.deadline_s)
+            if due or forced:
+                last_eligible[req.priority] = i
+                if forced and not due:
+                    forced_rids.add(req.rid)
+        if not last_eligible:
+            return 0
+        kept: deque = deque()
+        released = 0
+        for i, req in enumerate(self.deferred):
+            cut = last_eligible.get(req.priority, -1)
+            if i <= cut:
+                self.deferred_rids.discard(req.rid)
+                self._defer_release_h.pop(req.rid, None)
+                self.deferred_released += 1
+                if req.rid in forced_rids:
+                    self.deferred_forced += 1
+                self._enqueue(req)
+                released += 1
+            else:
+                kept.append(req)
+        self.deferred = kept
+        return released
+
+    def _fast_forward_deferred(self) -> None:
+        """Nothing runnable remains but deferred work is parked: sleep the
+        virtual clock forward to the earliest release window and release.
+        (The modeled clock only advances with work, so an otherwise-idle
+        engine must jump to the window rather than busy-wait toward it.)"""
+        h = min(self._defer_release_h[r.rid] for r in self.deferred)
+        self._advance_clock_to(h)
+        self._release_deferred()
 
     # ------------------------------------------------------- prefix sharing
     def _prompt_page_keys(self, req: Request) -> List[bytes]:
@@ -1328,12 +1493,13 @@ class ServingEngine:
         server drives this directly so it can interleave submissions and
         stream tokens between quanta."""
         self._quantum += 1
+        released = self._release_deferred() if self.deferred else 0
         if self._has_deadlines:
             self._sweep_deadlines()
         admitted = self._admit()
         chunks = self._prefill_quantum() if self.chunked else 0
         decoded = self._decode_chunk(max_steps) if self.decoding else False
-        return bool(admitted or chunks or decoded)
+        return bool(released or admitted or chunks or decoded)
 
     def _resolve_stall(self) -> None:
         """The quantum made no progress, nothing is armed, no fault site
@@ -1369,13 +1535,17 @@ class ServingEngine:
         see exactly which requests the budget stranded, and a later run()
         with more steps clears the mark by actually finishing them."""
         self._run_q0 = self._quantum
-        while (self.queue or self.active) and self._steps < max_steps:
+        while ((self.queue or self.active or self.deferred)
+               and self._steps < max_steps):
             if self.step(max_steps):
                 continue
             if self.decoding or self._faults_pending():
                 continue               # armed slots or a site in backoff
             if self.queue:
                 self._resolve_stall()
+            elif self.deferred:
+                # only parked work remains: sleep to the greenest window
+                self._fast_forward_deferred()
         if self._steps >= max_steps:
             for r in self.responses.values():
                 if not r.finished:
@@ -1447,6 +1617,10 @@ class ServingEngine:
         # front door: queueing, degradation, preemption, fault recovery
         out.update({
             "queue_depth": len(self.queue),
+            "deferred_depth": len(self.deferred),
+            "deferred_requests": self.deferred_total,
+            "deferred_released": self.deferred_released,
+            "deferred_forced_releases": self.deferred_forced,
             "shed_count": self.shed_count,
             "preemption_count": self.preemption_count,
             "deadline_cancelled": self.deadline_cancelled,

@@ -47,8 +47,12 @@ _END = object()                        # per-stream end-of-tokens sentinel
 
 class AsyncServingServer:
     """Wrap a ``ServingEngine`` or ``ShardedServingEngine`` (anything with
-    ``submit``/``step``/``queue``/``active``/``decoding``/``responses``
-    and the stall/fault helpers) behind an asyncio streaming API."""
+    ``submit``/``step``/``queue``/``active``/``decoding``/``deferred``/
+    ``responses`` and the stall/fault/deferral helpers) behind an asyncio
+    streaming API. Deferred (low-CI-window) work keeps the driver alive:
+    when ONLY parked requests remain the driver fast-forwards the virtual
+    clock to the release window instead of going idle, so open-loop
+    clients awaiting a deferred result never hang."""
 
     def __init__(self, engine, max_steps: int = 100_000):
         self.engine = engine
@@ -120,7 +124,7 @@ class AsyncServingServer:
             while True:
                 async with self._lock:
                     eng = self.engine
-                    if not (eng.queue or eng.active
+                    if not (eng.queue or eng.active or eng.deferred
                             or eng._faults_pending()):
                         self._pump()
                         return         # idle; next submit restarts us
@@ -135,8 +139,13 @@ class AsyncServingServer:
                     progressed = await loop.run_in_executor(
                         None, eng.step, self.max_steps)
                     if (not progressed and not eng.decoding
-                            and not eng._faults_pending() and eng.queue):
-                        eng._resolve_stall()
+                            and not eng._faults_pending()):
+                        if eng.queue:
+                            eng._resolve_stall()
+                        elif eng.deferred:
+                            # only parked work remains: jump the virtual
+                            # clock to the greenest window and release
+                            eng._fast_forward_deferred()
                     self._pump()
                 # cooperative point: queued submit()s take the lock here
                 await asyncio.sleep(0)

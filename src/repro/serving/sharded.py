@@ -57,15 +57,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.energy import decode_counts, step_energy
 from repro.core.hardware import HardwareProfile, get_profile
-from repro.core.meter import CarbonMeter
+from repro.core.intensity import Region, ci_at_hour, get_region
+from repro.core.meter import CarbonMeter, FleetMeterView, SharedClock
+from repro.core.scheduler import FleetSlice, marginal_request_g
 from repro.launch.mesh import make_serving_mesh
 from repro.models import Model
 from repro.models.costing import workload_of
 from repro.models.moe_sharded import shard_map
 from repro.serving import paged, preempt, sampling
 from repro.serving.engine import (EngineConfig, ServingEngine,
-                                  _chunk_prefill_fn, pack_chunks)
+                                  _chunk_prefill_fn, _prefill_phase_counts,
+                                  pack_chunks)
 from repro.serving.faults import InjectedFault
 from repro.serving.request import Request, Response
 from repro.sharding.rules import serving_shardings
@@ -235,14 +239,53 @@ class ShardedServingEngine:
         probe = ServingEngine(model, params, cfg)
         self.model, self.params_host, self.cfg = model, params, cfg
         self.profile: HardwareProfile = get_profile(cfg.profile)
-        # the fleet provisions cfg.shards times the hardware: embodied
-        # amortization (Eq. 2-4) scales with installed devices
-        self.meter = CarbonMeter(self.profile, cfg.region,
-                                 lifetime_years=cfg.lifetime_years,
-                                 n_devices=cfg.n_devices * cfg.shards)
         self.workload = workload_of(model.cfg)
         S, B = cfg.shards, cfg.max_batch
         self.S, self.B = S, B
+        # ---- heterogeneous fleet: per-shard hardware profile + region.
+        # The MODEL runs identically on every shard (one SPMD program);
+        # heterogeneity lives entirely in attribution and placement.
+        prof_names = (list(cfg.shard_profiles) if cfg.shard_profiles
+                      is not None else [cfg.profile] * S)
+        region_names = (list(cfg.shard_regions) if cfg.shard_regions
+                        is not None else [cfg.region] * S)
+        if len(prof_names) != S:
+            raise ValueError(
+                f"shard_profiles has {len(prof_names)} entries for "
+                f"{S} shards")
+        if len(region_names) != S:
+            raise ValueError(
+                f"shard_regions has {len(region_names)} entries for "
+                f"{S} shards")
+        self.shard_profile: List[HardwareProfile] = [
+            get_profile(n) for n in prof_names]
+        self.shard_region: List[Region] = [
+            get_region(r) for r in region_names]
+        # one meter PER SHARD at that shard's profile × region CI, all on
+        # one fleet clock (shards run in parallel — the engine advances the
+        # clock once per quantum by the slowest shard's modeled time, so
+        # advances_clock=False here). Fleet totals are the exact sum of the
+        # per-shard attribution via FleetMeterView; each shard's embodied
+        # amortization covers ITS cfg.n_devices devices, so the fleet's
+        # installed hardware is charged exactly once across the S meters.
+        self.clock = SharedClock()
+        self.meters: List[CarbonMeter] = [
+            CarbonMeter(self.shard_profile[s], self.shard_region[s],
+                        lifetime_years=cfg.lifetime_years,
+                        n_devices=cfg.n_devices,
+                        use_diurnal_ci=cfg.use_diurnal_ci,
+                        clock=self.clock, advances_clock=False)
+            for s in range(S)]
+        self.meter = FleetMeterView(self.meters)
+        # the carbon router scores shards through the SAME FleetSlice /
+        # marginal-g machinery as the offline CIDirectedScheduler — one
+        # scoring core, no drift between the table and the serving loop
+        self._slices: List[FleetSlice] = [
+            FleetSlice(self.shard_profile[s], self.shard_region[s],
+                       lifetime_years=cfg.lifetime_years)
+            for s in range(S)]
+        self._q_time = [0.0] * S       # per-shard modeled time this quantum
+        self.shard_requests = [0] * S  # placements per shard (stats)
         self.max_pages_slot = probe.max_pages_slot
         self.num_pages = probe.num_pages        # per shard
         self.mesh = mesh if mesh is not None else make_serving_mesh(S)
@@ -305,6 +348,14 @@ class ShardedServingEngine:
         self._wait_samples: Dict[int, List[float]] = {}
         # preemption pins are shard-local: rid -> (shard, [phys pages])
         self._pins: Dict[int, Tuple[int, List[int]]] = {}
+        # temporal deferral (borrowed policy; the clock is the fleet's)
+        self.deferred: deque = deque()
+        self.deferred_rids: set = set()
+        self._defer_release_h: Dict[int, float] = {}
+        self._forecasters: Dict[str, object] = {}
+        self.deferred_total = 0
+        self.deferred_released = 0
+        self.deferred_forced = 0
 
         self.sharing = cfg.prefix_sharing
         if self.sharing:
@@ -353,12 +404,9 @@ class ShardedServingEngine:
                    for a in self._slot_armed[s] if a)
 
     # ------------------------------------------- borrowed host-side logic
-    # identical to the single-device engine (the fleet is S independent
-    # devices, so per-shard launches meter exactly like one device's, and
-    # queue/budget bookkeeping is device-count agnostic) — borrowed, not
-    # copied, so a fix there propagates here
-    _meter_prefill = ServingEngine._meter_prefill
-    _meter_decode = ServingEngine._meter_decode
+    # identical to the single-device engine — borrowed, not copied, so a
+    # fix there propagates here. Queue/budget bookkeeping is device-count
+    # agnostic by construction.
     _prompt_page_keys = ServingEngine._prompt_page_keys
     _over_budget = ServingEngine._over_budget
     _reject = ServingEngine._reject
@@ -377,6 +425,48 @@ class ShardedServingEngine:
     _site_failed = ServingEngine._site_failed
     _site_ok = ServingEngine._site_ok
     _faults_pending = ServingEngine._faults_pending
+    # temporal deferral is pure host-side policy too; only the TIME BASE
+    # differs (the fleet's shared clock) — see the overrides below
+    _defer = ServingEngine._defer
+    _release_deferred = ServingEngine._release_deferred
+    _fast_forward_deferred = ServingEngine._fast_forward_deferred
+    _forecaster = ServingEngine._forecaster
+
+    def _clock_hours(self) -> float:
+        return self.clock.hours
+
+    def _advance_clock_to(self, hours: float) -> None:
+        self.clock.hours = max(self.clock.hours, hours)
+
+    def _defer_regions(self) -> List[Region]:
+        # dedup preserving order: S shards usually span few regions
+        seen: Dict[str, Region] = {}
+        for r in self.shard_region:
+            seen.setdefault(r.name, r)
+        return list(seen.values())
+
+    # ---------------------------------------------------- per-shard metering
+    # Same step counts as the single-device engine, priced at THIS shard's
+    # profile and recorded on its meter; the per-quantum max of the shard
+    # times advances the fleet clock (shards run in parallel).
+    def _meter_prefill(self, batch: int, seq: int,
+                       useful_seq: Optional[float] = None, skip: int = 0,
+                       phase: str = "prefill", shard: int = 0):
+        counts = _prefill_phase_counts(self.workload, batch, seq,
+                                       useful_seq=useful_seq, skip=skip)
+        rep = step_energy(self.shard_profile[shard], counts)
+        self.meters[shard].record(phase, rep.tokens, rep.t_total,
+                                  rep.energy_j)
+        self._q_time[shard] += rep.t_total
+        return rep
+
+    def _meter_decode(self, batch: int, context: float, shard: int = 0):
+        counts = decode_counts(self.workload, batch, context)
+        rep = step_energy(self.shard_profile[shard], counts)
+        self.meters[shard].record("decode", rep.tokens, rep.t_total,
+                                  rep.energy_j)
+        self._q_time[shard] += rep.t_total
+        return rep
 
     # ------------------------------------------------------- prefix sharing
     def _match_prefix(self, req: Request, s: int) -> Tuple[int, List[int]]:
@@ -592,15 +682,59 @@ class ShardedServingEngine:
             self._cancel(rid, "deadline")
 
     # ------------------------------------------------------------ admission
+    def _shard_score(self, req: Request, s: int, resv: int,
+                     shared_tokens: int) -> Tuple[bool, float]:
+        """Marginal gCO2 of serving ``req`` on shard ``s`` right now:
+        phase-specific operational J at the shard's profile priced at its
+        region's CURRENT CI, plus embodied rent over the request's page
+        reservation (prefix hits discount both the recomputed prefill
+        tokens and the reserved pages). Returns (slo_ok, grams)."""
+        region = self.shard_region[s]
+        ci = (ci_at_hour(region, self._clock_hours() % 24.0)
+              if self.cfg.use_diurnal_ci else region.ci_g_per_kwh)
+        g, t_est = marginal_request_g(
+            self._slices[s], self.workload,
+            prefill_tokens=max(len(req.prompt) - shared_tokens, 0),
+            decode_tokens=max(req.max_new_tokens, 1),
+            resv_frac=resv / self.num_pages, ci=ci,
+            n_devices=self.cfg.n_devices)
+        slo_ok = req.slo_s is None or t_est <= req.slo_s
+        return slo_ok, g
+
     def _place(self, req: Request):
-        """Placement policy: among shards with a free slot whose pool fits
-        the request's reservation, pick the one holding the longest
-        resident prefix of its prompt (sharing only), breaking ties by
-        most free pages then lowest shard id. Returns (shard, resv,
-        (n_pg, phys, first_tok)) or None if the head can't be placed."""
+        """Placement policy. Eligibility is policy-INDEPENDENT: shards
+        with a free slot whose pool fits the request's reservation.
+
+        ``routing="free_pages"`` (baseline): longest resident prefix of
+        the prompt (sharing only), then most free pages, then lowest
+        shard id.
+
+        ``routing="carbon"``: lowest marginal gCO2 (``_shard_score``),
+        SLO-feasible shards strictly first; exact carbon ties fall back
+        to the free_pages key — so a homogeneous fleet (equal profiles,
+        regions, and prefix state score identically) reproduces the
+        baseline's placement bit-for-bit, which is the parity oracle's
+        lever. Compute-rich shards win prefill-heavy requests (their
+        marginal prefill J is lower), memory-rich amortized shards win
+        decode-heavy ones (lower TDP × longer residency beats idle-power
+        burn), and low-CI regions discount everything — GreenLLM's
+        disaggregation as a one-line scoring rule.
+
+        SLO-PINNED requests (``req.slo_s`` set) are the exception: they
+        keep the baseline's load-first ordering among SLO-feasible
+        shards, with marginal gCO2 demoted to a tie-break below free
+        pages. Chasing the greenest shard concentrates work, and
+        concentration queues prefills — a latency tax the pinned class
+        by definition cannot pay — so only flexible (unpinned) work
+        follows carbon, which is where nearly all the grams are anyway
+        once the deferral queue batches it into the CI valley.
+
+        Returns (shard, resv, (n_pg, phys, first_tok)) or None if the
+        head can't be placed."""
         L = len(req.prompt)
         ps = self.cfg.page_size
         n_total = paged.pages_needed(L + max(req.max_new_tokens - 1, 0), ps)
+        carbon = self.cfg.routing == "carbon"
         best = None
         for s in range(self.S):
             if not self.free_slots(s):
@@ -615,6 +749,14 @@ class ShardedServingEngine:
             if resv > self.free_pages[s]:
                 continue
             key = (share[0], self.free_pages[s], -s)
+            if carbon:
+                slo_ok, g = self._shard_score(req, s, resv, share[2])
+                if req.slo_s is None:
+                    key = (slo_ok, -g) + key
+                else:
+                    # latency-pinned: load-first among SLO-feasible
+                    # shards, greener shard only breaks free-page ties
+                    key = (slo_ok, share[0], self.free_pages[s], -g, -s)
             if best is None or key > best[0]:
                 best = (key, s, resv, share)
         return None if best is None else best[1:]
@@ -676,6 +818,7 @@ class ShardedServingEngine:
             self._slot_deadline[s][slot] = req.deadline_s
             self._stamp_admit(req)
             self._req_shard[req.rid] = s
+            self.shard_requests[s] += 1
             req.prefill_pos = 0
             self._prefilling[s].append((req, slot))
             admitted.append((req, s, slot))
@@ -806,7 +949,8 @@ class ShardedServingEngine:
                 self._register_prefix(req, s, slot, rows_h[s, i])
             rep = self._meter_prefill(
                 1, len(req.prompt), skip=req.shared_prefix_tokens,
-                phase="recompute" if req.preemptions else "prefill")
+                phase="recompute" if req.preemptions else "prefill",
+                shard=s)
             resp = self.responses[req.rid]
             resp.prefill_s += rep.t_total
             resp.energy_j += rep.energy_j
@@ -898,7 +1042,7 @@ class ShardedServingEngine:
                 self.shard_steps += 1
                 ctx = float(np.mean([self._slot_ctx[s][b]
                                      for b in np.flatnonzero(act)]))
-                rep = self._meter_decode(n_active, max(ctx, 1.0))
+                rep = self._meter_decode(n_active, max(ctx, 1.0), shard=s)
                 per_tok_t = rep.t_total / n_active
                 per_tok_e = rep.energy_j / n_active
                 for b in np.flatnonzero(act):
@@ -946,15 +1090,24 @@ class ShardedServingEngine:
 
     def step(self, max_steps: int = 10_000) -> bool:
         """One FLEET scheduling quantum (same contract as the single-
-        device ``ServingEngine.step``): deadline sweep, admission, one
-        fleet-wide chunk launch, one fused scan."""
+        device ``ServingEngine.step``): deferral release, deadline sweep,
+        admission, one fleet-wide chunk launch, one fused scan. The fleet
+        clock then advances by the SLOWEST shard's modeled time this
+        quantum — shards run in parallel, so that max is the quantum's
+        wall time (summing per-shard times would run the diurnal day S
+        times too fast)."""
         self._quantum += 1
+        released = self._release_deferred() if self.deferred else 0
         if self._has_deadlines:
             self._sweep_deadlines()
         admitted = self._admit()
         chunks = self._prefill_quantum()
         decoded = self._decode_chunk(max_steps) if self.decoding else False
-        return bool(admitted or chunks or decoded)
+        dt = max(self._q_time)
+        if dt > 0.0:
+            self.clock.hours += dt / 3600.0
+            self._q_time = [0.0] * self.S
+        return bool(released or admitted or chunks or decoded)
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and every shard's slots finish.
@@ -963,13 +1116,17 @@ class ShardedServingEngine:
         shard's prefilling head, one fused scan advances every armed slot
         everywhere — still exactly one decode sync per quantum."""
         self._run_q0 = self._quantum
-        while (self.queue or self.active) and self._steps < max_steps:
+        while ((self.queue or self.active or self.deferred)
+               and self._steps < max_steps):
             if self.step(max_steps):
                 continue
             if self.decoding or self._faults_pending():
                 continue               # armed slots or a site in backoff
             if self.queue:
                 self._resolve_stall()
+            elif self.deferred:
+                # only parked work remains: sleep to the greenest window
+                self._fast_forward_deferred()
         if self._steps >= max_steps:
             for r in self.responses.values():
                 if not r.finished:
@@ -1032,9 +1189,24 @@ class ShardedServingEngine:
                 "prefix_hit_tokens": self.prefix_hit_tokens,
                 "prefix_shared_requests": self.prefix_shared_requests,
             })
+        # heterogeneous fleet: routing policy + per-shard attribution
+        # (each shard metered at its own profile × region CI; the fleet
+        # totals above are the exact sum of these rows)
+        out["carbon_routing"] = 1.0 if self.cfg.routing == "carbon" else 0.0
+        for s in range(self.S):
+            st = self.meters[s].totals
+            out[f"shard{s}_requests"] = self.shard_requests[s]
+            out[f"shard{s}_tokens"] = st.tokens
+            out[f"shard{s}_energy_j"] = st.energy_j
+            out[f"shard{s}_carbon_g"] = st.total_g
+            out[f"shard{s}_g_per_token"] = st.g_per_token
         # front door (same keys as the single-device engine)
         out.update({
             "queue_depth": len(self.queue),
+            "deferred_depth": len(self.deferred),
+            "deferred_requests": self.deferred_total,
+            "deferred_released": self.deferred_released,
+            "deferred_forced_releases": self.deferred_forced,
             "shed_count": self.shed_count,
             "preemption_count": self.preemption_count,
             "deadline_cancelled": self.deadline_cancelled,
