@@ -2,8 +2,9 @@ PY := python
 export PYTHONPATH := src:.
 
 .PHONY: test test-all kernels paged chunked prefix sharded server hetero \
-	check-clean verify bench-engine bench-engine-sharded \
-	bench-engine-server bench-engine-hetero bench-smoke bench
+	resilience check-clean verify bench-engine bench-engine-sharded \
+	bench-engine-server bench-engine-hetero bench-engine-resilience \
+	bench-smoke bench
 
 test:               ## tier-1 suite (fail fast: local inner loop)
 	$(PY) -m pytest -x -q
@@ -43,13 +44,18 @@ hetero:             ## heterogeneous-fleet carbon routing + deferral queue + tra
 	    $(PY) -m pytest -q tests/test_hetero_routing.py \
 	    tests/test_defer_queue.py tests/test_load_gen.py
 
+# shard-loss suite also needs the mesh, so it gets its own 4-device invocation
+resilience:         ## shard-loss watchdog + evacuation + rejoin (4 forced host devices)
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest -q tests/test_shard_loss.py
+
 check-clean:        ## fail if compiled artifacts are tracked by git
 	@bad=$$(git ls-files | grep -E '(\.pyc$$|__pycache__/)' || true); \
 	if [ -n "$$bad" ]; then \
 	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
 	fi
 
-verify: check-clean test kernels paged chunked prefix sharded server hetero ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero sweeps
+verify: check-clean test kernels paged chunked prefix sharded server hetero resilience ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero + resilience sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py
@@ -69,6 +75,10 @@ bench-engine-server: ## merge an open-loop async-server section into BENCH_engin
 bench-engine-hetero: ## merge a 4-device hetero carbon-routing section into BENCH_engine.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) benchmarks/engine_bench.py --hetero-only
+
+bench-engine-resilience: ## merge a 4-device shard-loss resilience section into BENCH_engine.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) benchmarks/engine_bench.py --resilience-only
 
 bench-smoke:        ## CI: every bench code path once, reduced size -> BENCH_engine_smoke.json
 	$(PY) benchmarks/engine_bench.py --smoke

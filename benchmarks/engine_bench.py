@@ -13,7 +13,10 @@ not modeled. The ``hetero`` section serves one diurnal mixed trace
 through a heterogeneous 4-shard fleet (two hardware generations, three
 grid regions) twice — carbon-aware routing + low-CI deferral vs
 capacity-greedy free-pages placement — and compares fleet gCO2/token at
-fixed aggregate pool bytes. Writes ``BENCH_engine.json``; ``--smoke`` (CI) runs every
+fixed aggregate pool bytes. The ``resilience`` section kills 1 of 4
+shards mid-trace and checks token parity vs a fail-free fleet, separate
+recompute-phase metering, and degraded throughput vs a native 3-shard
+baseline. Writes ``BENCH_engine.json``; ``--smoke`` (CI) runs every
 code path once at reduced size and writes ``BENCH_engine_smoke.json``
 instead, so the committed numbers are never clobbered by a shared runner.
 
@@ -564,6 +567,113 @@ def _bench_sharded(model, params, max_len: int, page_size: int = 16,
     }
 
 
+def _bench_resilience(model, params, max_len: int, page_size: int = 16,
+                      shards: int = 4, chunk: int = 32,
+                      smoke: bool = False) -> Dict:
+    """Kill 1 of ``shards`` shards mid-trace and measure the recovery
+    contract end to end (at --xla_force_host_platform_device_count=4):
+
+    * token parity — every in-flight and queued request still completes,
+      with a token stream bit-identical to a fail-free fleet serving the
+      same workload: greedy decode depends only on context, so
+      evacuation + resume recompute must be a pure re-route;
+    * the energy of the forced recompute is metered under the separate
+      ``recompute`` phase (``preempted_recompute_j``), so ordinary
+      prefill/decode J/token stays invariant to the failure;
+    * degraded throughput — the killed fleet's request throughput stays
+      within 1.3x of a NATIVE (shards-1)-shard fleet on the identical
+      workload: evacuation is a re-queue onto survivors, not a collapse.
+    """
+    if jax.device_count() < shards:
+        return {"skipped":
+                f"needs {shards} host devices, have {jax.device_count()}: "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{shards} before the first jax import"}
+    from repro.serving.faults import FaultInjector, FaultPlan
+    n_req = (2 if smoke else 4) * shards
+    max_new = 17 if smoke else 33
+    kill_shard, kill_q = shards - 1, 3
+    kw = dict(max_len=max_len, sync_every=4, paged=True,
+              page_size=page_size, prefill_chunk=chunk, preemption=True)
+
+    def timed(n_shards, kill=False):
+        eng = ShardedServingEngine(model, params, EngineConfig(
+            max_batch=BATCH, shards=n_shards, **kw))
+        if kill:
+            eng.faults = FaultInjector([FaultPlan(
+                "shard_down", at_quantum=kill_q, shard=kill_shard)])
+        for r in _workload(n_req, max_new):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        tokens = {rid: tuple(resp.tokens)
+                  for rid, resp in eng.responses.items() if not resp.rejected}
+        return {
+            "wall_s": dt,
+            "requests_per_s": len(tokens) / dt,
+            "fleet_steps": st["steps"],
+            "recompute_j": st["preempted_recompute_j"],
+            "shard_down_events": st["shard_down_events"],
+            "shard_evacuated": st["shard_evacuated"],
+            "live_shards": st["live_shards"],
+        }, tokens
+
+    timed(shards)                        # compile both fleet widths...
+    timed(shards - 1)
+    timed(shards, kill=True)             # ...and the disarm/quarantine
+    #                                      recovery programs
+
+    def median(*t_args, **t_kw):
+        runs = sorted((timed(*t_args, **t_kw)
+                       for _ in range(max(REPEATS, 3))),
+                      key=lambda r: r[0]["requests_per_s"])
+        return runs[len(runs) // 2]
+
+    failfree, oracle = median(shards)
+    faulted, got = median(shards, kill=True)
+    survivor, _ = median(shards - 1)
+    return {
+        "shards": shards, "kill_shard": kill_shard, "kill_quantum": kill_q,
+        "n_requests": n_req, "max_new_tokens": max_new,
+        "failfree": failfree, "faulted": faulted,
+        "survivor_baseline": survivor,
+        "tokens_match_failfree_oracle": got == oracle,
+        "recompute_j": faulted["recompute_j"],
+        "recompute_j_failfree": failfree["recompute_j"],
+        # native 3-shard throughput over the degraded run's: how much the
+        # mid-trace kill + evacuation recompute cost beyond simply having
+        # one fewer shard from the start
+        "survivor_throughput_ratio":
+            survivor["requests_per_s"]
+            / max(faulted["requests_per_s"], 1e-9),
+    }
+
+
+def _resilience_criteria(d: Dict) -> Dict:
+    if "skipped" in d:
+        return {}
+    return {
+        # the kill really happened mid-trace and forced an evacuation
+        "resilience_kill_fired_and_evacuated":
+            d["faulted"]["shard_down_events"] == 1
+            and d["faulted"]["shard_evacuated"] >= 1
+            and d["faulted"]["live_shards"] == d["shards"] - 1,
+        # every request completes token-identical to the fail-free fleet
+        "resilience_token_identical_to_failfree":
+            d["tokens_match_failfree_oracle"],
+        # evacuation recompute is metered under its own phase; the
+        # fail-free run charges none
+        "resilience_recompute_metered_separately":
+            d["recompute_j"] > 0.0 and d["recompute_j_failfree"] == 0.0,
+        # surviving fleet keeps serving at a rate comparable to a fleet
+        # that was (shards-1)-wide all along
+        "resilience_survivor_throughput_within_1_3x":
+            d["survivor_throughput_ratio"] <= 1.3,
+    }
+
+
 def _time_seed(model, params, reqs, max_len: int) -> Dict:
     eng = SeedEngine(model, params, max_batch=BATCH, max_len=max_len)
     for r in reqs:
@@ -878,13 +988,14 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     sharded = _bench_sharded(model, params, max_len, smoke=smoke)
     server = _bench_server(model, params, smoke=smoke)
     hetero = _bench_hetero(model, params, smoke=smoke)
+    resilience = _bench_resilience(model, params, max_len, smoke=smoke)
     speedup = fused["decode_steps_per_s"] / seed["decode_steps_per_s"]
     out = {
         "config": cfg.name, "variant": variant, "batch": BATCH,
         "requests": n_requests, "max_new_tokens": max_new,
         "seed": seed, "fused": fused, "paged": paged, "chunked": chunked,
         "prefix": prefix, "sharded": sharded, "server": server,
-        "hetero": hetero,
+        "hetero": hetero, "resilience": resilience,
         "decode_steps_per_s_speedup": speedup,
         "criteria": {
             "fused_ge_2x_decode_steps_per_s": speedup >= 2.0,
@@ -924,6 +1035,7 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     out["criteria"].update(_sharded_criteria(sharded))
     out["criteria"].update(_server_criteria(server))
     out["criteria"].update(_hetero_criteria(hetero))
+    out["criteria"].update(_resilience_criteria(resilience))
     return out
 
 
@@ -998,6 +1110,12 @@ def main():
                          "two-pass flow as --sharded-only, and for the "
                          "same reason: forcing host devices degrades the "
                          "single-device sections' timings")
+    ap.add_argument("--resilience-only", action="store_true",
+                    help="re-measure ONLY the shard-loss resilience "
+                         "section (run under XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=4) and merge it into the "
+                         "existing output JSON — same two-pass flow as "
+                         "--sharded-only / --hetero-only")
     args = ap.parse_args()
     if args.smoke:
         REPEATS, TAIL_RUNS = 1, 1
@@ -1045,6 +1163,27 @@ def main():
         res["criteria"] = {k: v for k, v in res["criteria"].items()
                            if not k.startswith("hetero_")}
         res["criteria"].update(_hetero_criteria(res["hetero"]))
+    elif args.resilience_only:
+        with open(args.out) as f:
+            res = json.load(f)
+        if res.get("variant") != args.variant:
+            raise SystemExit(
+                f"--resilience-only: {args.out} holds variant "
+                f"{res.get('variant')!r}, refusing to merge a "
+                f"{args.variant!r} resilience section into it")
+        cfg = llama_paper.make(args.variant, "llama-paper-1b")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 128 if args.variant == "smoke" else 512
+        resilience = _bench_resilience(model, params, max_len,
+                                       smoke=args.smoke)
+        if "skipped" in resilience:
+            # never clobber committed measurements with a skip stub
+            raise SystemExit(f"--resilience-only: {resilience['skipped']}")
+        res["resilience"] = resilience
+        res["criteria"] = {k: v for k, v in res["criteria"].items()
+                           if not k.startswith("resilience_")}
+        res["criteria"].update(_resilience_criteria(res["resilience"]))
     elif args.server_only:
         with open(args.out) as f:
             res = json.load(f)
@@ -1063,7 +1202,8 @@ def main():
     else:
         res = bench(args.variant, args.requests, args.max_new_tokens,
                     smoke=args.smoke)
-        if "skipped" in res["sharded"] or "skipped" in res["hetero"]:
+        if "skipped" in res["sharded"] or "skipped" in res["hetero"] \
+                or "skipped" in res["resilience"]:
             # pass 1 of the two-pass flow runs without forced host devices:
             # keep existing MEASURED 4-device sections (and their criteria)
             # rather than clobbering them with skip stubs — pass 2
@@ -1075,7 +1215,8 @@ def main():
             except (OSError, ValueError):
                 prev = {}
             for section, crit in (("sharded", _sharded_criteria),
-                                  ("hetero", _hetero_criteria)):
+                                  ("hetero", _hetero_criteria),
+                                  ("resilience", _resilience_criteria)):
                 if "skipped" not in res[section]:
                     continue
                 old = prev.get(section, {})

@@ -165,12 +165,49 @@ class FleetMeterView:
     Exposes the same ``totals``/``phase``/``phases``/``report`` surface as
     one CarbonMeter, computed by summing the shard meters — so fleet-level
     accounting (carbon budgets, stats, benches) IS the sum of the
-    per-shard attribution, with no second ledger that could drift."""
+    per-shard attribution, with no second ledger that could drift.
+
+    Degraded fleets (shard loss): ``set_live(live)`` marks which shards
+    are serving. History is never rewritten — sums still cover every
+    meter — but the fleet's EMBODIED rent re-denominates onto the live
+    devices: the hardware was provisioned and keeps depreciating whether
+    or not one device is down, so each live meter's ``n_devices`` scales
+    by fleet_devices / live_devices and the per-token embodied cost of
+    the survivors' work honestly carries the dead device's rent (paper
+    Eq. 2-4: embodied g amortizes over the work the fleet actually
+    serves). Rejoin restores the base denomination exactly."""
 
     def __init__(self, meters: Sequence[CarbonMeter]):
         if not meters:
             raise ValueError("FleetMeterView needs at least one meter")
         self.meters = list(meters)
+        self._base_devices = [m.n_devices for m in self.meters]
+        self._live = list(range(len(self.meters)))
+
+    @property
+    def live(self) -> list:
+        return list(self._live)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def set_live(self, live: Sequence[int]) -> None:
+        """Mark ``live`` (shard indices) as the serving set and
+        re-denominate embodied rent over them."""
+        live = sorted(set(live))
+        if not live:
+            raise ValueError("a fleet needs at least one live shard")
+        if live[0] < 0 or live[-1] >= len(self.meters):
+            raise ValueError(f"live shards {live} out of range")
+        self._live = live
+        fleet = sum(self._base_devices)
+        alive = sum(self._base_devices[i] for i in live)
+        for i, m in enumerate(self.meters):
+            if i in live:
+                m.n_devices = self._base_devices[i] * fleet / alive
+            else:
+                m.n_devices = self._base_devices[i]   # records nothing
 
     @property
     def phases(self) -> Dict[str, PhaseStats]:

@@ -14,6 +14,12 @@ operationalizes those findings:
   SplitWise [24], carbon-directed instead of cost-directed).
 * ``CIDirectedScheduler`` — time-varying CI: route each request batch to the
   fleet slice whose *current* CI x energy + embodied is lowest.
+
+Degraded fleets: the serving engine's carbon router consumes these
+primitives over its *live* shard set only — when a shard is declared
+dead, its (device, region) slice simply drops out of the candidate list
+and the embodied rent re-denominates over the survivors, so the same
+per-prompt accounting holds at any fleet width.
 """
 from __future__ import annotations
 

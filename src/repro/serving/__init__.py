@@ -1,10 +1,11 @@
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.faults import (FaultError, FaultInjector, FaultPlan,
-                                  InjectedFault)
+                                  HealthMonitor, InjectedFault)
 from repro.serving.request import Request, Response
 from repro.serving.server import AsyncServingServer
 from repro.serving.sharded import ShardedServingEngine
 
 __all__ = ["EngineConfig", "ServingEngine", "ShardedServingEngine",
            "AsyncServingServer", "Request", "Response",
-           "FaultPlan", "FaultInjector", "FaultError", "InjectedFault"]
+           "FaultPlan", "FaultInjector", "FaultError", "HealthMonitor",
+           "InjectedFault"]

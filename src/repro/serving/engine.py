@@ -340,6 +340,14 @@ class EngineConfig:
     # look-ahead horizon (virtual hours) for the greenest-window search
     defer_horizon_h: int = 24
     defer_deadline_frac: float = 0.5
+    # ---- per-tenant rate limits (PR 8) ----
+    # token bucket per tenant, checked at submit(): maps a tenant name (or
+    # "*" as the default for any named tenant) to (capacity, refill_per_s).
+    # Each submission costs one bucket token; an empty bucket sheds the
+    # request as a terminal finish_reason="rate_limited" Response before
+    # it owns anything (no queue position, no slot, no pages). None = no
+    # limits; requests with tenant=None are never limited.
+    tenant_quota: Optional[Dict[str, Tuple[float, float]]] = None
 
 
 class ServingEngine:
@@ -391,6 +399,10 @@ class ServingEngine:
         self.faults = None             # Optional[faults.FaultInjector]
         self._backoff: Dict[str, Tuple[int, int]] = {}   # site -> (fails, retry_at)
         self.fault_retries = 0
+        self.fault_retry_site: Dict[str, int] = {}       # site -> retries
+        # per-tenant token buckets: tenant -> [tokens, last_refill_t]
+        self._tenant_buckets: Dict[str, List[float]] = {}
+        self.rate_limited = 0
         # front-door counters (stats())
         self.shed_count = 0
         self._shed_by_class: Dict[int, int] = {}
@@ -415,6 +427,18 @@ class ServingEngine:
             raise ValueError("defer_horizon_h must be >= 1")
         if not (0.0 < cfg.defer_deadline_frac < 1.0):
             raise ValueError("defer_deadline_frac must be in (0, 1)")
+        if cfg.tenant_quota is not None:
+            for name, spec in cfg.tenant_quota.items():
+                try:
+                    cap, refill = spec
+                except (TypeError, ValueError):
+                    raise ValueError(
+                        f"tenant_quota[{name!r}] must be (capacity, "
+                        f"refill_per_s), got {spec!r}") from None
+                if cap < 1 or refill < 0:
+                    raise ValueError(
+                        f"tenant_quota[{name!r}]: capacity must be >= 1 "
+                        "and refill_per_s >= 0")
         # temporal deferral: held requests own NOTHING (no slot, no pages,
         # no queue position) until the CI forecaster's greenest window
         # opens at the virtual clock, or deadline pressure forces release
@@ -553,6 +577,14 @@ class ServingEngine:
         self._req_slo[req.rid] = req.slo_s
         self.responses[req.rid] = Response(rid=req.rid, tokens=[],
                                            priority=req.priority)
+        if self._rate_limit(req):
+            # over-quota: terminal before the request owns anything — no
+            # queue position, no max_queue charge, no slot, no pages
+            resp = self.responses[req.rid]
+            resp.finished = True
+            resp.finish_reason = "rate_limited"
+            self.rate_limited += 1
+            return
         dbp = self.cfg.defer_below_priority
         if dbp is not None and req.priority < dbp:
             # batch-class work waits for the low-CI window; held requests
@@ -568,6 +600,33 @@ class ServingEngine:
             self.queue.remove(victim)
             self._shed(victim)
         self._enqueue(req)
+
+    def _rate_limit(self, req: Request) -> bool:
+        """Charge ``req``'s tenant one bucket token; True when the bucket
+        is empty (the submission must be shed as rate_limited). A tenant
+        without an explicit quota falls back to the ``"*"`` default;
+        untracked requests (``tenant=None``) are never limited. Refill is
+        continuous at ``refill_per_s`` against the host wall clock, capped
+        at ``capacity`` — with refill 0 the bucket is a hard budget of
+        ``capacity`` submissions, which is what the tests pin."""
+        quota = self.cfg.tenant_quota
+        if quota is None or req.tenant is None:
+            return False
+        spec = quota.get(req.tenant, quota.get("*"))
+        if spec is None:
+            return False
+        cap, refill = float(spec[0]), float(spec[1])
+        now = time.perf_counter()
+        bucket = self._tenant_buckets.get(req.tenant)
+        if bucket is None:
+            bucket = [cap, now]
+            self._tenant_buckets[req.tenant] = bucket
+        bucket[0] = min(cap, bucket[0] + (now - bucket[1]) * refill)
+        bucket[1] = now
+        if bucket[0] < 1.0:
+            return True
+        bucket[0] -= 1.0
+        return False
 
     def _enqueue(self, req: Request, resume: bool = False) -> None:
         """Priority-ordered insert, FCFS within a class (all-default
@@ -840,6 +899,7 @@ class ServingEngine:
     def _site_failed(self, site: str) -> None:
         fails = self._backoff.get(site, (0, 0))[0] + 1
         self.fault_retries += 1
+        self.fault_retry_site[site] = self.fault_retry_site.get(site, 0) + 1
         if fails > self.cfg.max_retries:
             raise FaultError(
                 f"site {site!r} failed {fails} consecutive launches "
@@ -885,19 +945,7 @@ class ServingEngine:
         req = self._slot_req[slot]
         resp = self.responses[req.rid]
         remaining = self.slot_budget[slot]
-        emitted = req.max_new_tokens - remaining   # since (re)admission
-        assert emitted > 0 and remaining > 0, "victim must be mid-decode"
-        # the last emitted token is cur_tokens (not yet in the KV cache):
-        # the resumed prefill recomputes it as the prompt's final token and
-        # samples the NEXT token — exactly what the oracle's decode does
-        req.prompt = list(req.prompt) + resp.tokens[-emitted:]
-        req.max_new_tokens = remaining
-        req.prefill_pos = 0
-        req.prefix_keys = None         # prompt changed: re-digest lazily
-        req.shared_prefix_tokens = 0
-        req.cow_pending = False
-        req.preemptions += 1
-        resp.preemptions += 1
+        preempt.fold_for_resume(req, resp, remaining)
         pinned: List[int] = []
         if self.sharing:
             held = set(self._slot_shared_in.get(slot, []))
@@ -1626,6 +1674,7 @@ class ServingEngine:
             "deadline_cancelled": self.deadline_cancelled,
             "clamped_requests": self.clamped_requests,
             "fault_retries": self.fault_retries,
+            "rate_limited": self.rate_limited,
             "preempted_recompute_j": self.preempted_recompute_j,
             "timeout_requests": sum(
                 1 for r in self.responses.values()
@@ -1638,6 +1687,8 @@ class ServingEngine:
                 else float(np.median(waits)))
         for p, n_shed in sorted(self._shed_by_class.items()):
             out[f"shed_class_{p}"] = n_shed
+        for site, n in sorted(self.fault_retry_site.items()):
+            out[f"fault_retries_{site}"] = n
         out.update({
             "requests": len(self.responses),
             "peak_active": self.peak_active,

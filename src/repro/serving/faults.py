@@ -18,10 +18,25 @@ Injectable sites (the strings ``ServingEngine._inject`` is called with):
   * ``"prefill_chunk"``  — the chunked-prefill launch, before the chunk
                            touches the device cache.
   * ``"decode_scan"``    — the fused decode chunk launch.
+  * ``"shard_down"``     — whole-shard loss (fleet engines only): the
+                           plan names a ``shard``; at the chosen quantum
+                           the ``ShardedServingEngine`` declares it dead
+                           and evacuates its in-flight work onto the
+                           survivors. Not a retry site — there is no
+                           backoff, the shard stays dead until an
+                           explicit ``engine.rejoin(s)``.
 
 Each site is placed BEFORE the corresponding device mutation, modelling a
 launch failure (OOM, preempted device, lost worker): work that did not
 happen must be retried, work that already happened is never double-done.
+
+``HealthMonitor`` is the fleet's watchdog: the sharded engine reports
+which shards each faulted/successful launch touched, and a shard whose
+CONSECUTIVE faulted-launch count exceeds ``max_retries`` is declared
+dead (same budget the per-site backoff gives a launch site before
+``FaultError`` — the watchdog converts "this site would wedge the run"
+into "this shard is lost, keep serving on the rest" whenever a survivor
+exists).
 
 Usage::
 
@@ -37,9 +52,12 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import random as _random
+from typing import List, Optional, Sequence, Tuple
 
-SITES = ("page_alloc", "prefill_chunk", "decode_scan")
+SITES = ("page_alloc", "prefill_chunk", "decode_scan", "shard_down")
+# the retryable launch sites (everything but whole-shard loss)
+LAUNCH_SITES = SITES[:3]
 
 
 class InjectedFault(RuntimeError):
@@ -62,6 +80,8 @@ class FaultPlan:
     at_quantum: int
     count: int = 1
     absolute: bool = False
+    # shard_down plans name the shard to kill; launch-site plans must not
+    shard: Optional[int] = None
 
     def __post_init__(self):
         if self.site not in SITES:
@@ -69,6 +89,40 @@ class FaultPlan:
                 f"unknown fault site {self.site!r}; one of {SITES}")
         if self.at_quantum < 0 or self.count < 1:
             raise ValueError("at_quantum must be >= 0 and count >= 1")
+        if self.site == "shard_down":
+            if self.shard is None or self.shard < 0:
+                raise ValueError("shard_down plans need shard >= 0")
+        elif self.shard is not None:
+            raise ValueError(
+                f"shard targets only apply to shard_down, not {self.site!r}")
+
+    @classmethod
+    def random(cls, seed: int, n: int = 3,
+               sites: Optional[Sequence[str]] = None,
+               max_quantum: int = 16, max_count: int = 1,
+               shards: Optional[int] = None) -> List["FaultPlan"]:
+        """A reproducible randomized fault campaign: ``n`` plans drawn
+        from ``sites`` (default: the launch sites, plus ``shard_down``
+        when a fleet size ``shards`` is given) at quanta in
+        ``[0, max_quantum]`` with counts in ``[1, max_count]``. The same
+        ``seed`` yields the same campaign on every platform (stdlib
+        ``random.Random``), so a CI failure names a replayable schedule."""
+        if sites is None:
+            sites = LAUNCH_SITES + (("shard_down",) if shards else ())
+        if any(s == "shard_down" for s in sites) and not shards:
+            raise ValueError("shard_down campaigns need shards >= 1")
+        rng = _random.Random(seed)
+        plans = []
+        for _ in range(n):
+            site = rng.choice(list(sites))
+            plans.append(cls(
+                site,
+                at_quantum=rng.randrange(max_quantum + 1),
+                count=1 if site == "shard_down"
+                else rng.randint(1, max_count),
+                shard=rng.randrange(shards) if site == "shard_down"
+                else None))
+        return plans
 
 
 class FaultInjector:
@@ -91,3 +145,83 @@ class FaultInjector:
                 self.fired.append((site, quantum))
                 raise InjectedFault(
                     f"injected fault at site={site!r} quantum={quantum}")
+
+    def shard_down_fires(self, quantum: int, run_start: int = 0) -> List[int]:
+        """Shard ids whose ``shard_down`` plans fire this quantum. Does
+        not raise — shard loss is a declaration, not a retryable launch
+        failure; the engine evacuates and keeps stepping. Each fired
+        shard is logged once as ``("shard_down", quantum)``."""
+        out = []
+        for p in self.plans:
+            if p.site != "shard_down":
+                continue
+            q0 = p.at_quantum if p.absolute else run_start + p.at_quantum
+            if q0 <= quantum < q0 + p.count:
+                self.fired.append(("shard_down", quantum))
+                out.append(p.shard)
+        return sorted(set(out))
+
+
+class HealthMonitor:
+    """Fleet health watchdog: per-shard consecutive-faulted-launch
+    counters plus the authoritative dead set.
+
+    The sharded engine reports every launch outcome with the set of
+    shards the launch TOUCHED (shards with packed prefill work, armed
+    decode slots, or admission takes this quantum). A successful launch
+    clears its shards' counters; a shard whose consecutive count exceeds
+    ``max_retries`` is returned by ``record_fault`` as newly-suspect and
+    the engine declares it dead — the same budget a launch site gets
+    before ``FaultError``, so the watchdog fires exactly when the site
+    discipline would otherwise wedge the run. Explicit injection
+    (``shard_down`` plans) and recovery (``engine.rejoin``) go through
+    ``declare_down`` / ``declare_up``; ``events`` logs every transition
+    as ``(quantum, "down"|"up", shard)`` for tests and benches."""
+
+    def __init__(self, n_shards: int, max_retries: int = 3):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.max_retries = max_retries
+        self.fails = [0] * n_shards        # consecutive faulted launches
+        self.dead: set = set()
+        self.events: List[Tuple[int, str, int]] = []
+
+    def record_fault(self, shards: Sequence[int]) -> List[int]:
+        """A launch touching ``shards`` faulted; returns the shards whose
+        consecutive count just exceeded ``max_retries`` (not yet declared
+        — the engine owns declaration so evacuation is atomic with it)."""
+        suspect = []
+        for s in shards:
+            if s in self.dead:
+                continue
+            self.fails[s] += 1
+            if self.fails[s] > self.max_retries:
+                suspect.append(s)
+        return suspect
+
+    def record_ok(self, shards: Sequence[int]) -> None:
+        """A launch touching ``shards`` succeeded; their counters reset."""
+        for s in shards:
+            self.fails[s] = 0
+
+    def declare_down(self, shard: int, quantum: int) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        if shard not in self.dead:
+            self.dead.add(shard)
+            self.fails[shard] = 0
+            self.events.append((quantum, "down", shard))
+
+    def declare_up(self, shard: int, quantum: int) -> None:
+        if shard in self.dead:
+            self.dead.discard(shard)
+            self.fails[shard] = 0
+            self.events.append((quantum, "up", shard))
+
+    def is_dead(self, shard: int) -> bool:
+        return shard in self.dead
+
+    @property
+    def live(self) -> List[int]:
+        return [s for s in range(self.n_shards) if s not in self.dead]

@@ -466,6 +466,56 @@ def begin_chunked_prefill(pool: Dict, slots: jax.Array) -> Dict:
                        lambda p: p, pool)
 
 
+def quarantine_table(alloc: Dict, do: jax.Array) -> Dict:
+    """Route-invalidate a DEAD lane's pool when ``do`` (scalar bool) is
+    set: clear every block-table row to -1 so the batch-shape-invariant
+    decode/prefill writes that keep riding the SPMD programs land in the
+    trash page — exactly like a released slot — instead of real pages.
+
+    This is deliberately NOT a release: refcounts, the free stack, the
+    top cursor, and every KV payload page stay bit-identical. The dead
+    pool is unreachable, never mutated; ``scrub_pool`` rebuilds it from
+    nothing at rejoin. (Without this, a dead lane's disarmed-but-mapped
+    slots would keep scattering garbage into pages the shard still
+    formally owns — the no-dead-pool-touch contract pins that down.)"""
+    return dict(alloc, tbl=jnp.where(do, -1, alloc["tbl"]))
+
+
+def scrub_pool(pool: Dict, do: jax.Array) -> Dict:
+    """Rebuild a pool to its virgin post-``paginate_cache`` state when
+    ``do`` (scalar bool) is set; return it untouched otherwise.
+
+    This is the REJOIN primitive for shard recovery: a dead shard's pool
+    contents are untrusted, so re-entry starts from nothing — allocator
+    reset to the full free stack (``init_allocator`` layout: table all
+    -1, free = arange, top = P, ref = 0) and every slot's cursors
+    cleared (``pos_ids`` = -1, ``length``/``t`` = 0). KV page payloads
+    are NOT zeroed: positions are logical, so stale rows are unreachable
+    behind ``pos_ids == -1`` exactly as after an ordinary release — the
+    same argument ``begin_chunked_prefill`` relies on. The ``do`` flag
+    makes this safe inside a fleet-wide ``shard_map`` program where only
+    the rejoining lane scrubs and every other lane keeps its pool."""
+    def leafgroup(stacked, p):
+        return {**p,
+                "pos_ids": jnp.where(do, -1, p["pos_ids"]),
+                "length": jnp.where(do, 0, p["length"])}
+
+    def plain(stacked, p):
+        return jnp.where(do, jnp.zeros_like(p), p)
+
+    def alloc(a):
+        P = a["free"].shape[0]
+        return {
+            "tbl": jnp.where(do, -1, a["tbl"]),
+            "free": jnp.where(do, jnp.arange(P, dtype=jnp.int32),
+                              a["free"]),
+            "top": jnp.where(do, jnp.asarray(P, jnp.int32), a["top"]),
+            "ref": jnp.where(do, 0, a["ref"]),
+        }
+
+    return _walk_paged(leafgroup, plain, alloc, pool)
+
+
 def map_shared_prefix(pool: Dict, slot: jax.Array, pages: jax.Array,
                       n_shared: jax.Array, start_tok: jax.Array) -> Dict:
     """Adopt an already-resident prefix into a freshly admitted slot.

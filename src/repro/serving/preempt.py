@@ -29,10 +29,45 @@ sharded twin; property-tested in tests/test_preemption.py):
     attributed to the preempted request alone (``Response.recompute_j``,
     engine-level ``preempted_recompute_j``) — non-preempted requests'
     modeled J/token is invariant to the preemption policy.
+
+Shard-loss EVACUATION (PR 8) reuses the same machinery: when a fleet
+shard is declared dead, every armed slot on it goes through the identical
+``fold_for_resume`` fold and re-enters the queue at its class front — the
+only differences from a preemption eviction are that no pages can be
+pinned (a pin is a residency in the DEAD pool) and no release program is
+issued against the dead shard. Greedy decode depends only on context, so
+the fold + re-prefill on a SURVIVING shard reproduces the exact token
+stream — the fail-free fleet is the token-for-token evacuation oracle,
+the same oracle pattern preemption pinned.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
+
+from repro.serving.request import Request, Response
+
+
+def fold_for_resume(req: Request, resp: Response, remaining: int) -> None:
+    """Fold the tokens emitted since (re)admission into the request's
+    prompt and reset it for re-admission with ``max_new_tokens`` =
+    ``remaining`` — the eviction/evacuation fold shared by preemption
+    (``_evict_slot``, both engines) and shard-loss evacuation.
+
+    The last emitted token is ``cur_tokens`` (not yet in the KV cache):
+    the resumed prefill recomputes it as the prompt's final token and
+    samples the NEXT token — exactly what the oracle's decode does.
+    Prefix bookkeeping resets because the prompt changed (keys re-digest
+    lazily at the next admission pass)."""
+    emitted = req.max_new_tokens - remaining
+    assert emitted > 0 and remaining > 0, "victim must be mid-decode"
+    req.prompt = list(req.prompt) + resp.tokens[-emitted:]
+    req.max_new_tokens = remaining
+    req.prefill_pos = 0
+    req.prefix_keys = None
+    req.shared_prefix_tokens = 0
+    req.cow_pending = False
+    req.preemptions += 1
+    resp.preemptions += 1
 
 
 def pick_victim(armed: Sequence[bool], prio: Sequence[int],

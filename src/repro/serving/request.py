@@ -20,6 +20,11 @@ class Request:
     # mid-decode — with its pages reclaimed in the same quantum.
     priority: int = 0
     deadline_s: Optional[float] = None
+    # multi-tenancy: the billing identity this request draws quota from.
+    # When the engine is configured with tenant rate limits, submit()
+    # charges this tenant's token bucket and sheds over-quota work as a
+    # terminal "rate_limited" Response. None = untracked (never limited).
+    tenant: Optional[str] = None
     # chunked-prefill progress: prompt tokens already processed (the quantum
     # scheduler advances this one `prefill_chunk` slice at a time while
     # decode slots keep running)
@@ -59,8 +64,9 @@ class Request:
 #   "timeout"  — run(max_steps) ran out of steps with the request unfinished
 #                (the request is NOT finished; a later run() may clear this)
 #   "error"    — repeated faults exhausted the retry budget
+#   "rate_limited" — the tenant's token bucket had no capacity at submit
 FINISH_REASONS = ("eos", "length", "rejected", "shed", "deadline",
-                  "timeout", "error")
+                  "timeout", "error", "rate_limited")
 
 
 @dataclasses.dataclass

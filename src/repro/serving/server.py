@@ -33,6 +33,13 @@ A ``FaultError`` escaping the engine (a fault site exhausted its retry
 budget) stops the drive loop, marks every unfinished response with
 reason ``"error"``, ends all streams, and re-raises from ``result()`` /
 ``drain()`` — a wedged fleet fails loudly, it never hangs clients.
+
+Shard loss is NOT an error at this layer: when the fleet engine's health
+watchdog converts a retry-exhausted launch site into a shard-down
+declaration, the engine evacuates in-flight work onto the survivors and
+keeps serving, so the server sees an ordinary (if slower) quantum. Only
+a fault the watchdog cannot localize — or the loss of the last live
+shard — still surfaces here as ``FaultError``.
 """
 from __future__ import annotations
 

@@ -70,7 +70,7 @@ from repro.serving import paged, preempt, sampling
 from repro.serving.engine import (EngineConfig, ServingEngine,
                                   _chunk_prefill_fn, _prefill_phase_counts,
                                   pack_chunks)
-from repro.serving.faults import InjectedFault
+from repro.serving.faults import FaultError, HealthMonitor, InjectedFault
 from repro.serving.request import Request, Response
 from repro.sharding.rules import serving_shardings
 
@@ -188,6 +188,33 @@ def _disarm_fleet(mesh, state, slots):
                      out_specs=_SHARD, check_vma=False)(state, slots)
 
 
+def _quarantine_fleet(mesh, caches, do):
+    """Declaration-time route invalidation: lanes whose ``do`` flag is
+    set get their block table cleared (``paged.quarantine_table``) so the
+    batch-shape-invariant writes of later fleet launches fall into the
+    trash page; refcounts, free stack, and KV payloads stay untouched."""
+    def body(caches, do):
+        caches = _lane(caches)
+        caches = dict(caches)
+        caches["paged"] = paged.quarantine_table(caches["paged"], do[0])
+        return _unlane(caches)
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(caches, do)
+
+
+def _scrub_fleet(mesh, caches, do):
+    """Rejoin scrub: lanes whose ``do`` flag is set rebuild their pool to
+    the virgin post-``paginate_cache`` state (allocator reset, cursors
+    cleared — ``paged.scrub_pool``); every other lane's pool is returned
+    bit-identical. One SPMD program, no per-lane control flow."""
+    def body(caches, do):
+        return _unlane(paged.scrub_pool(_lane(caches), do[0]))
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD, _SHARD),
+                     out_specs=_SHARD, check_vma=False)(caches, do)
+
+
 def _map_prefix_fleet(mesh, caches, slot, pages, n_shared, start_tok):
     def body(caches, slot, pages, n_shared, start_tok):
         return _unlane(paged.map_shared_prefix(
@@ -211,6 +238,8 @@ _MAP_PREFIX_FLEET = jax.jit(_map_prefix_fleet, static_argnums=(0,))
 _RELEASE_KEEP_FLEET = jax.jit(_release_keep_fleet, static_argnums=(0,))
 _DECREF_FLEET = jax.jit(_decref_fleet, static_argnums=(0,))
 _DISARM_FLEET = jax.jit(_disarm_fleet, static_argnums=(0,))
+_QUARANTINE_FLEET = jax.jit(_quarantine_fleet, static_argnums=(0,))
+_SCRUB_FLEET = jax.jit(_scrub_fleet, static_argnums=(0,))
 
 
 class ShardedServingEngine:
@@ -339,6 +368,24 @@ class ShardedServingEngine:
         self.faults = None
         self._backoff: Dict[str, Tuple[int, int]] = {}
         self.fault_retries = 0
+        self.fault_retry_site: Dict[str, int] = {}
+        # per-(site, shard) retry counters: every faulted launch charges
+        # the shards it touched (stats() splits fault_retries out by both)
+        self._fault_retry_shard: Dict[Tuple[str, int], int] = {}
+        # ---- shard-loss resilience (PR 8): the fleet's health watchdog.
+        # A shard is declared dead by explicit shard_down injection or
+        # when max_retries consecutive faulted launches touched it while
+        # a survivor exists; declaration EVACUATES its in-flight work
+        # onto the live shards and invalidates every host mirror that
+        # could reach the dead pool. See fail_shard()/rejoin()/audit().
+        self.health = HealthMonitor(S, cfg.max_retries)
+        self.shard_down_events = 0
+        self.shard_evacuated = 0       # requests moved off dead shards
+        self.shard_rejoins = 0
+        # per-tenant rate limiting (submit() is borrowed, so the fleet
+        # carries the same bucket state as the single-device engine)
+        self._tenant_buckets: Dict[str, List[float]] = {}
+        self.rate_limited = 0
         self.shed_count = 0
         self._shed_by_class: Dict[int, int] = {}
         self.preemption_count = 0
@@ -422,9 +469,11 @@ class ShardedServingEngine:
     _cancel = ServingEngine._cancel
     _inject = ServingEngine._inject
     _site_ready = ServingEngine._site_ready
-    _site_failed = ServingEngine._site_failed
-    _site_ok = ServingEngine._site_ok
     _faults_pending = ServingEngine._faults_pending
+    _rate_limit = ServingEngine._rate_limit
+    # _site_failed/_site_ok are OVERRIDDEN below: the fleet feeds every
+    # launch outcome to the health watchdog, and retry exhaustion becomes
+    # shard loss (not FaultError) whenever a survivor exists
     # temporal deferral is pure host-side policy too; only the TIME BASE
     # differs (the fleet's shared clock) — see the overrides below
     _defer = ServingEngine._defer
@@ -537,6 +586,10 @@ class ShardedServingEngine:
         if pin is None:
             return
         s, pins = pin
+        if self.health.is_dead(s):
+            # defensive: declaration already invalidated dead-shard pins;
+            # never issue a decref against a dead pool
+            return
         pages = np.full((self.S, self.max_pages_slot), -1, np.int32)
         pages[s, :len(pins)] = pins
         self.caches = _DECREF_FLEET(self.mesh, self.caches,
@@ -579,16 +632,7 @@ class ShardedServingEngine:
         req = self._slot_req[s][slot]
         resp = self.responses[req.rid]
         remaining = self.slot_budget[s][slot]
-        emitted = req.max_new_tokens - remaining
-        assert emitted > 0 and remaining > 0, "victim must be mid-decode"
-        req.prompt = list(req.prompt) + resp.tokens[-emitted:]
-        req.max_new_tokens = remaining
-        req.prefill_pos = 0
-        req.prefix_keys = None
-        req.shared_prefix_tokens = 0
-        req.cow_pending = False
-        req.preemptions += 1
-        resp.preemptions += 1
+        preempt.fold_for_resume(req, resp, remaining)
         pinned: List[int] = []
         if self.sharing:
             held = set(self._slot_shared_in[s].get(slot, []))
@@ -648,6 +692,251 @@ class ShardedServingEngine:
         self._slot_req[s][slot] = None
         self._slot_prio[s][slot] = 0
         self._slot_deadline[s][slot] = None
+
+    # -------------------------------------------------- shard-loss resilience
+    # The fleet's fault domain is a whole shard, not just a launch site:
+    # one lost device strands every armed slot, reservation, pinned page,
+    # and index entry on it. Declaration (explicit shard_down injection or
+    # the health watchdog) EVACUATES the in-flight work onto the survivors
+    # through the preemption fold, invalidates every host mirror that
+    # could reach the dead pool (no adoption, release, or decref ever
+    # targets it again — the lane rides subsequent SPMD programs as an
+    # all-sentinel idle lane), and the degraded fleet keeps serving with
+    # embodied rent re-denominated onto the live devices. rejoin() scrubs
+    # the pool on device and makes the shard placeable the next quantum.
+
+    @property
+    def live_shards(self) -> List[int]:
+        return self.health.live
+
+    def _site_shards(self, site: str) -> List[int]:
+        """Live shards a launch at ``site`` touches THIS quantum — the
+        watchdog's attribution unit. The admission reservation pass
+        (page_alloc) is host-side and not attributable to one device, so
+        it touches every live shard: its exhaustion still means
+        FaultError, never a misdirected shard declaration."""
+        live = self.health.live
+        if site == "prefill_chunk":
+            touched = [s for s in live if self._prefilling[s]]
+        elif site == "decode_scan":
+            touched = [s for s in live if any(self._slot_armed[s])]
+        else:
+            touched = list(live)
+        return touched if touched else list(live)
+
+    def _site_failed(self, site: str) -> None:
+        """Fleet twin of ``ServingEngine._site_failed``: same backoff and
+        counters, but every faulted launch also charges the shards it
+        touched, and retry EXHAUSTION becomes shard loss — not a fleet-
+        wide FaultError — whenever the suspect shards leave a survivor."""
+        touched = self._site_shards(site)
+        fails = self._backoff.get(site, (0, 0))[0] + 1
+        self.fault_retries += 1
+        self.fault_retry_site[site] = self.fault_retry_site.get(site, 0) + 1
+        for s in touched:
+            self._fault_retry_shard[(site, s)] = (
+                self._fault_retry_shard.get((site, s), 0) + 1)
+        suspect = self.health.record_fault(touched)
+        if fails > self.cfg.max_retries:
+            if suspect and len(suspect) < len(self.health.live):
+                # the watchdog converts "this site would wedge the run"
+                # into "these shards are lost": evacuate, clear the
+                # site's backoff (the bad devices are out of the launch),
+                # and keep serving on the survivors
+                self._backoff.pop(site, None)
+                for s in suspect:
+                    self.fail_shard(s)
+                return
+            raise FaultError(
+                f"site {site!r} failed {fails} consecutive launches "
+                f"(max_retries={self.cfg.max_retries}) touching every "
+                "live shard; in-flight requests are re-queued and "
+                "reservations returned")
+        self._backoff[site] = (fails, self._quantum + 2 ** fails)
+
+    def _site_ok(self, site: str) -> None:
+        # a successful launch breaks its shards' consecutive-fault chains
+        self.health.record_ok(self._site_shards(site))
+        self._backoff.pop(site, None)
+
+    def fail_shard(self, s: int) -> int:
+        """Declare shard ``s`` dead and evacuate its in-flight work onto
+        the survivors; returns the number of evacuated requests. Queued
+        and deferred work is untouched (it owns nothing shard-local).
+        Raises FaultError if ``s`` is the last live shard — a fleet with
+        nowhere to evacuate fails loudly with state consistent."""
+        if not 0 <= s < self.S:
+            raise ValueError(f"shard {s} out of range for {self.S} shards")
+        if self.health.is_dead(s):
+            return 0
+        if len(self.health.live) <= 1:
+            raise FaultError(
+                f"shard {s} is the last live shard — nowhere to "
+                "evacuate; queue and responses are intact")
+        self.health.declare_down(s, self._quantum)
+        self.shard_down_events += 1
+        n = self._evacuate_shard(s)
+        # degraded metering: the dead device keeps depreciating, so its
+        # embodied rent re-denominates onto the live devices' work
+        self.meter.set_live(self.health.live)
+        self.audit()
+        return n
+
+    def _evacuate_shard(self, s: int) -> int:
+        """Move every in-flight request off shard ``s`` and invalidate
+        its host mirrors ATOMICALLY (one host-side pass, no quantum runs
+        in between). No release/decref program ever targets the dead
+        pool: its pages are gone, so the only device op is disarming the
+        lane's slot STATE so the fused scan runs it all-idle."""
+        armed = [b for b in range(self.B) if self._slot_armed[s][b]]
+        if armed:
+            slots = np.full((self.S, len(armed)), self.B, np.int32)
+            slots[s, :len(armed)] = armed
+            self.state = _DISARM_FLEET(self.mesh, self.state,
+                                       jnp.asarray(slots))
+        # route-invalidate the dead lane: later fleet launches stay
+        # batch-shape invariant (every slot writes a row per micro-step),
+        # so without a cleared block table the dead lane's still-mapped
+        # slots would scatter garbage into real pages of the dead pool.
+        # Clearing ONLY tbl sends those writes to the trash page; ref,
+        # free, top, and every KV payload page stay bit-identical.
+        do = np.zeros((self.S,), bool)
+        do[s] = True
+        self.caches = _QUARANTINE_FLEET(self.mesh, self.caches,
+                                        jnp.asarray(do))
+        # pins are residencies in the dead pool: invalidated with NO
+        # decref — the resumed requests simply re-prefill on a survivor
+        for rid in [r for r, (ps, _) in self._pins.items() if ps == s]:
+            del self._pins[rid]
+        # armed slots go through the preemption fold (emitted tokens into
+        # the prompt, budget = remaining; resume prefill meters as
+        # "recompute") — greedy decode depends only on context, so the
+        # fail-free fleet is the token-for-token evacuation oracle. Mid-
+        # prefill requests have emitted NOTHING (first token arrives with
+        # the last chunk): nothing to fold, they restart from token 0.
+        requeue: List[Request] = []
+        for b in armed:
+            req = self._slot_req[s][b]
+            preempt.fold_for_resume(req, self.responses[req.rid],
+                                    self.slot_budget[s][b])
+            requeue.append(req)
+            self._req_shard.pop(req.rid, None)
+            self._clear_slot(s, b)
+        for req, b in self._prefilling[s]:
+            req.prefill_pos = 0
+            req.prefix_keys = None
+            req.shared_prefix_tokens = 0
+            req.cow_pending = False
+            requeue.append(req)
+            self._req_shard.pop(req.rid, None)
+            self._clear_slot(s, b)
+        self._prefilling[s].clear()
+        # class-front re-admission, reversed so the list order survives
+        # the front inserts (armed before mid-prefill, FCFS within each)
+        for req in reversed(requeue):
+            self._enqueue(req, resume=True)
+        # wholesale mirror reset: the shard owes nothing and owns nothing
+        # until rejoin; the mirror anticipates the rejoin scrub so the
+        # recovered shard is placeable the quantum after rejoin()
+        for b in range(self.B):
+            if self.slot_rid[s][b] >= 0 or self._slot_req[s][b] is not None:
+                self._clear_slot(s, b)
+        self._slot_pages[s] = [0] * self.B
+        self.free_pages[s] = self.num_pages
+        if self.sharing:
+            self._prefix_index[s].clear()
+            self._page_key[s].clear()
+            self._page_ref[s].clear()
+            self._slot_shared_in[s].clear()
+            self._slot_own_idx[s].clear()
+        self.shard_evacuated += len(requeue)
+        return len(requeue)
+
+    def rejoin(self, s: int) -> None:
+        """Re-enter a recovered shard: one fleet program scrubs ITS pool
+        to the virgin allocator state (``paged.scrub_pool`` — nothing
+        from before the failure is trusted; every other lane's pool is
+        bit-identical), the host mirrors are already virgin since
+        declaration, and the shard is placeable from the next quantum
+        with an empty prefix index."""
+        if not 0 <= s < self.S:
+            raise ValueError(f"shard {s} out of range for {self.S} shards")
+        if not self.health.is_dead(s):
+            raise ValueError(f"shard {s} is not dead")
+        do = np.zeros((self.S,), bool)
+        do[s] = True
+        self.caches = _SCRUB_FLEET(self.mesh, self.caches,
+                                   jnp.asarray(do))
+        self.health.declare_up(s, self._quantum)
+        self.shard_rejoins += 1
+        self.meter.set_live(self.health.live)
+        self.audit()
+
+    def audit(self) -> None:
+        """Production consistency check — the test-suite invariants
+        promoted into the engine, run after every recovery event (and
+        callable any time the fleet is between quanta):
+
+          * per live shard, device ``ref[p]`` == live block-table
+            mappings of ``p`` plus host pins (refcount exactness);
+          * per live shard, ``top`` + #uniquely-mapped == num_pages
+            (conservation: no page both free and mapped, none leaked);
+          * the host reservation mirror never promises more free pages
+            than the device free stack holds (reservations are worst-
+            case, so mirror <= device top);
+          * dead shards' host mirrors hold NOTHING that could reach the
+            dead pool: no occupied slot, no prefilling work, no index
+            entry, no pin.
+
+        Costs one device->host fetch of the fleet allocator — recovery
+        events are rare, quanta are not, so this never sits on the hot
+        path. Raises RuntimeError on any violation."""
+        a = jax.device_get(self.caches["paged"])
+        tbl = np.asarray(a["tbl"])
+        ref = np.asarray(a["ref"])
+        top = np.asarray(a["top"])
+        n_pg = ref.shape[1]
+        for s in range(self.S):
+            if self.health.is_dead(s):
+                if any(r >= 0 for r in self.slot_rid[s]):
+                    raise RuntimeError(
+                        f"audit: dead shard {s} has occupied slots")
+                if self._prefilling[s]:
+                    raise RuntimeError(
+                        f"audit: dead shard {s} has prefilling work")
+                if self.sharing and (self._prefix_index[s]
+                                     or self._page_ref[s]):
+                    raise RuntimeError(
+                        f"audit: dead shard {s} has live index entries")
+                if any(ps == s for ps, _ in self._pins.values()):
+                    raise RuntimeError(
+                        f"audit: dead shard {s} holds preemption pins")
+                continue
+            counts = np.zeros(n_pg, np.int64)
+            for b in range(self.B):
+                for p in tbl[s][b]:
+                    if p >= 0:
+                        counts[p] += 1
+            for ps, pages in self._pins.values():
+                if ps == s:
+                    for p in pages:
+                        counts[p] += 1
+            if not (ref[s] == counts).all():
+                bad = np.flatnonzero(ref[s] != counts)
+                raise RuntimeError(
+                    f"audit: shard {s} refcount drift at pages "
+                    f"{bad.tolist()}: device {ref[s][bad].tolist()} vs "
+                    f"mapped+pinned {counts[bad].tolist()}")
+            if int(top[s]) + int((counts > 0).sum()) != n_pg:
+                raise RuntimeError(
+                    f"audit: shard {s} page conservation broken: top="
+                    f"{int(top[s])} + mapped={int((counts > 0).sum())} "
+                    f"!= {n_pg}")
+            if self.free_pages[s] > int(top[s]):
+                raise RuntimeError(
+                    f"audit: shard {s} reservation mirror promises "
+                    f"{self.free_pages[s]} free pages but the device "
+                    f"free stack holds {int(top[s])}")
 
     # ------------------------------------------------------------- deadlines
     def _sweep_deadlines(self) -> None:
@@ -737,7 +1026,9 @@ class ShardedServingEngine:
         carbon = self.cfg.routing == "carbon"
         best = None
         for s in range(self.S):
-            if not self.free_slots(s):
+            if self.health.is_dead(s):
+                continue               # degraded fleet: dead shards are
+            if not self.free_slots(s):  # simply not placement-eligible
                 continue
             if self.sharing:
                 n_pg, phys = self._match_prefix(req, s)
@@ -1075,13 +1366,17 @@ class ShardedServingEngine:
     def _resolve_stall(self) -> None:
         """Fleet twin of ``ServingEngine._resolve_stall``: spill pins or
         fail the unplaceable head."""
-        if self._pins and any(f < self.num_pages for f in self.free_pages):
+        live = self.health.live
+        if self._pins and any(self.free_pages[s] < self.num_pages
+                              for s in live):
             for rid in list(self._pins):
                 self._drop_pin(rid)
             return
-        if all(f == self.num_pages for f in self.free_pages):
-            # nothing running, every shard's whole pool free, and
-            # placement still refused the head: it can never fit
+        if all(self.free_pages[s] == self.num_pages for s in live):
+            # nothing running, every LIVE shard's whole pool free, and
+            # placement still refused the head: it can never fit on the
+            # (possibly degraded) fleet — per-shard capacity is identical,
+            # so never-fits is the same verdict degraded or whole
             self._reject(self.queue.popleft())
         else:
             raise RuntimeError(        # unreachable: release returns
@@ -1097,6 +1392,15 @@ class ShardedServingEngine:
         wall time (summing per-shard times would run the diurnal day S
         times too fast)."""
         self._quantum += 1
+        ev0 = self.shard_down_events
+        if self.faults is not None:
+            # injected shard loss fires at the quantum boundary, BEFORE
+            # any launch — the engine absorbs it (evacuate + degrade),
+            # it never surfaces as an exception
+            for s in self.faults.shard_down_fires(self._quantum,
+                                                  self._run_q0):
+                if not self.health.is_dead(s):
+                    self.fail_shard(s)
         released = self._release_deferred() if self.deferred else 0
         if self._has_deadlines:
             self._sweep_deadlines()
@@ -1107,7 +1411,12 @@ class ShardedServingEngine:
         if dt > 0.0:
             self.clock.hours += dt / 3600.0
             self._q_time = [0.0] * self.S
-        return bool(released or admitted or chunks or decoded)
+        # a recovery event IS progress: the watchdog can declare a shard
+        # dead inside a launch handler (after this quantum's admission
+        # pass), and the evacuees it re-queued must reach the next
+        # admission pass — not be misread as an unplaceable head
+        return bool(released or admitted or chunks or decoded
+                    or self.shard_down_events != ev0)
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and every shard's slots finish.
@@ -1200,6 +1509,15 @@ class ShardedServingEngine:
             out[f"shard{s}_energy_j"] = st.energy_j
             out[f"shard{s}_carbon_g"] = st.total_g
             out[f"shard{s}_g_per_token"] = st.g_per_token
+            out[f"shard{s}_dead"] = 1.0 if self.health.is_dead(s) else 0.0
+        # shard-loss resilience: watchdog state + recovery counters
+        out.update({
+            "live_shards": len(self.health.live),
+            "dead_shards": self.S - len(self.health.live),
+            "shard_down_events": self.shard_down_events,
+            "shard_evacuated": self.shard_evacuated,
+            "shard_rejoins": self.shard_rejoins,
+        })
         # front door (same keys as the single-device engine)
         out.update({
             "queue_depth": len(self.queue),
@@ -1212,11 +1530,18 @@ class ShardedServingEngine:
             "deadline_cancelled": self.deadline_cancelled,
             "clamped_requests": self.clamped_requests,
             "fault_retries": self.fault_retries,
+            "rate_limited": self.rate_limited,
             "preempted_recompute_j": self.preempted_recompute_j,
             "timeout_requests": sum(
                 1 for r in self.responses.values()
                 if not r.finished and r.finish_reason == "timeout"),
         })
+        # fault attribution: per-site, and per (site, shard) so a bench
+        # or operator can see WHICH device the retries clustered on
+        for site, n in sorted(self.fault_retry_site.items()):
+            out[f"fault_retries_{site}"] = n
+        for (site, s), n in sorted(self._fault_retry_shard.items()):
+            out[f"shard{s}_fault_retries_{site}"] = n
         for p, waits in sorted(self._wait_samples.items()):
             out[f"queue_wait_p50_s_class_{p}"] = float(np.median(waits))
             out[f"queue_wait_p99_s_class_{p}"] = (

@@ -110,3 +110,59 @@ def test_prompt_exactly_at_capacity_is_admitted(parts):
     assert resps[0].finished and not resps[0].rejected
     assert len(resps[0].tokens) == 9
     assert eng.free_pages == eng.num_pages
+
+
+# ----------------------------------------------- per-tenant rate limiting
+
+
+def test_rate_limit_hard_budget_sheds_over_quota(parts):
+    """refill=0 makes the bucket a hard budget: capacity submissions per
+    tenant pass, the rest come back as terminal ``rate_limited``
+    responses without ever touching the queue."""
+    m, params = parts
+    eng = paged_engine(m, params,
+                       tenant_quota={"acme": (2, 0.0), "*": (1, 0.0)})
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=4,
+                           tenant="acme"))
+    # unknown tenant falls back to the "*" default bucket
+    for i in range(4, 6):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=4,
+                           tenant="zorg"))
+    # untracked submissions are never limited
+    eng.submit(Request(rid=9, prompt=[1, 2, 3], max_new_tokens=4))
+    shed = [r for r in eng.responses.values()
+            if r.finish_reason == "rate_limited"]
+    assert sorted(r.rid for r in shed) == [2, 3, 5]
+    assert all(r.finished and not r.tokens for r in shed)
+    assert eng.stats()["rate_limited"] == 3
+    got = {r.rid: r for r in eng.run()}
+    for rid in (0, 1, 4, 9):
+        assert got[rid].finished and got[rid].finish_reason != "rate_limited"
+        assert len(got[rid].tokens) == 4
+
+
+def test_rate_limit_bucket_refills_over_wall_clock(parts):
+    """Continuous refill: after the bucket drains, waiting refill_per_s
+    wall-clock restores admission (capped at capacity)."""
+    import time as _time
+    m, params = parts
+    eng = paged_engine(m, params, tenant_quota={"acme": (1, 50.0)})
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2,
+                       tenant="acme"))
+    eng.submit(Request(rid=1, prompt=[1, 2], max_new_tokens=2,
+                       tenant="acme"))
+    assert eng.responses[1].finish_reason == "rate_limited"
+    _time.sleep(0.05)                  # 50 tokens/s * 0.05s >= 1 token
+    eng.submit(Request(rid=2, prompt=[1, 2], max_new_tokens=2,
+                       tenant="acme"))
+    assert eng.responses[2].finish_reason != "rate_limited"
+    assert eng.stats()["rate_limited"] == 1
+
+
+def test_tenant_quota_validation(parts):
+    m, params = parts
+    with pytest.raises(ValueError, match="capacity"):
+        paged_engine(m, params, tenant_quota={"a": (0, 1.0)})
+    with pytest.raises(ValueError, match="refill"):
+        paged_engine(m, params, tenant_quota={"a": (1, -1.0)})

@@ -14,7 +14,7 @@ import pytest
 from repro.models import Model, ModelConfig
 from repro.models.config import repeat_pattern
 from repro.serving import (EngineConfig, FaultError, FaultInjector,
-                           FaultPlan, Request, ServingEngine)
+                           FaultPlan, HealthMonitor, Request, ServingEngine)
 
 PS = 4
 CH = 8
@@ -239,3 +239,73 @@ def test_fault_plan_validation():
         FaultPlan("decode_scan", at_quantum=-1)
     with pytest.raises(ValueError, match="count"):
         FaultPlan("decode_scan", at_quantum=0, count=0)
+
+
+def test_fault_plan_shard_validation():
+    with pytest.raises(ValueError, match="shard >= 0"):
+        FaultPlan("shard_down", at_quantum=1)
+    with pytest.raises(ValueError, match="only apply to shard_down"):
+        FaultPlan("decode_scan", at_quantum=1, shard=0)
+    p = FaultPlan("shard_down", at_quantum=1, shard=2)
+    assert p.shard == 2
+
+
+def test_fault_plan_random_reproducible_and_valid():
+    """Same seed, same campaign — and every drawn plan passes the
+    constructor's own validation (shard_down plans carry a shard in
+    range, launch plans carry none)."""
+    a = FaultPlan.random(42, n=10, max_quantum=8, max_count=3, shards=4)
+    assert a == FaultPlan.random(42, n=10, max_quantum=8, max_count=3,
+                                 shards=4)
+    assert len(a) == 10
+    for p in a:
+        assert 0 <= p.at_quantum <= 8
+        if p.site == "shard_down":
+            assert p.count == 1 and 0 <= p.shard < 4
+        else:
+            assert 1 <= p.count <= 3 and p.shard is None
+    # different seeds diverge (overwhelmingly)
+    assert a != FaultPlan.random(43, n=10, max_quantum=8, max_count=3,
+                                 shards=4)
+    # without a fleet size, shard_down never enters the draw
+    assert all(p.site != "shard_down"
+               for p in FaultPlan.random(42, n=20))
+    with pytest.raises(ValueError, match="shards"):
+        FaultPlan.random(1, sites=("shard_down",))
+
+
+def test_injector_shard_down_fires_schedule():
+    """shard_down plans fire through the dedicated non-raising hook, log
+    to .fired, and respect the relative/absolute time base."""
+    inj = FaultInjector([
+        FaultPlan("shard_down", at_quantum=2, shard=1),
+        FaultPlan("shard_down", at_quantum=2, shard=0, absolute=True),
+        FaultPlan("decode_scan", at_quantum=2),
+    ])
+    assert inj.shard_down_fires(1, run_start=0) == []
+    assert inj.shard_down_fires(2, run_start=0) == [0, 1]
+    assert inj.shard_down_fires(7, run_start=5) == [1]
+    assert inj.fired.count(("shard_down", 2)) == 2
+    # the raising path never matches shard_down plans
+    inj.check("page_alloc", 2, 0)
+
+
+def test_health_monitor_watchdog_contract():
+    """Consecutive-fault counting, reset-on-success, the max_retries
+    threshold, and the down/up event log."""
+    hm = HealthMonitor(3, max_retries=2)
+    assert hm.live == [0, 1, 2]
+    assert hm.record_fault([0, 1]) == []
+    assert hm.record_fault([0, 1]) == []
+    hm.record_ok([1])                       # shard 1's chain breaks
+    assert hm.record_fault([0, 1]) == [0]   # 0 crosses, 1 back to one
+    hm.declare_down(0, quantum=7)
+    assert hm.is_dead(0) and hm.live == [1, 2]
+    assert hm.record_fault([0, 1]) == []    # dead shards stop counting
+    hm.declare_up(0, quantum=9)
+    assert hm.live == [0, 1, 2] and hm.fails[0] == 0
+    assert hm.events == [(7, "down", 0), (9, "up", 0)]
+    with pytest.raises(ValueError, match="out of range"):
+        hm.declare_down(3, quantum=0)
+    with pytest.raises(ValueError, match="n_shards"):
+        HealthMonitor(0)

@@ -369,3 +369,86 @@ def test_free_stack_is_lifo(n_pages):
                            jnp.asarray([n], jnp.int32))
     again = set(np.asarray(jax.device_get(alloc["tbl"]))[1, :n].tolist())
     assert got == again
+
+
+# ----------------------------------------- shard loss: quarantine + scrub
+
+
+def _populated_alloc(lens):
+    alloc = paged.init_allocator(B, M, P)
+    slots = jnp.asarray(range(len(lens)), jnp.int32)
+    return _alloc_prefill(alloc, slots, jnp.asarray(lens, jnp.int32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, M), min_size=1, max_size=B))
+def test_quarantine_clears_only_the_table(lens):
+    """Declaration-time route invalidation (shard loss): ``tbl`` goes all
+    -1 — every later batch-invariant write lands in the trash page — and
+    NOTHING else moves: ref, free stack, and top are bit-identical (the
+    dead pool is unreachable, not released). ``do=False`` is the identity
+    on every lane that is not dying."""
+    alloc = _populated_alloc(lens)
+    before = jax.device_get(alloc)
+    same = jax.device_get(paged.quarantine_table(alloc, jnp.asarray(False)))
+    for k in ("tbl", "free", "top", "ref"):
+        assert (np.asarray(same[k]) == np.asarray(before[k])).all()
+    dead = jax.device_get(paged.quarantine_table(alloc, jnp.asarray(True)))
+    assert (np.asarray(dead["tbl"]) == -1).all()
+    for k in ("free", "top", "ref"):
+        assert (np.asarray(dead[k]) == np.asarray(before[k])).all(), \
+            f"quarantine mutated {k}"
+
+
+def _tiny_pool(lens):
+    """A minimal but structurally faithful paged cache tree: one stacked
+    ``unit`` leafgroup (batch on axis 1), a plain cursor leaf ``t``, and
+    the shared allocator — exactly the node kinds ``_walk_paged`` visits
+    in a real model cache."""
+    alloc = _populated_alloc(lens)
+    R, H, ps, hd = 2, 2, PS, 4
+    rng = np.random.default_rng(5)
+    return {
+        "paged": alloc,
+        "t": jnp.asarray([l * PS for l in lens] + [0] * (B - len(lens)),
+                         jnp.int32),
+        "unit": {"blk": {
+            "k_pages": jnp.asarray(rng.normal(size=(R, H, P + 1, ps, hd)),
+                                   jnp.float32),
+            "v_pages": jnp.asarray(rng.normal(size=(R, H, P + 1, ps, hd)),
+                                   jnp.float32),
+            "pos_ids": jnp.asarray(
+                rng.integers(-1, 64, size=(R, B, M * ps)), jnp.int32),
+            "length": jnp.asarray([[l * PS for l in lens]
+                                   + [0] * (B - len(lens))] * R, jnp.int32),
+        }},
+    }
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, M), min_size=1, max_size=B))
+def test_scrub_pool_rebuilds_virgin_state_selectively(lens):
+    """The rejoin primitive: ``do=True`` rebuilds the allocator to the
+    ``init_allocator`` layout and clears every cursor, while KV payloads
+    are untouched (stale rows hide behind ``pos_ids == -1``, the same
+    argument ordinary release relies on); ``do=False`` is the identity."""
+    pool = _tiny_pool(lens)
+    same = jax.device_get(paged.scrub_pool(pool, jnp.asarray(False)))
+    base = jax.device_get(pool)
+    for b, a in zip(jax.tree_util.tree_leaves(base),
+                    jax.tree_util.tree_leaves(same)):
+        assert (np.asarray(b) == np.asarray(a)).all()
+    virgin = jax.device_get(paged.scrub_pool(pool, jnp.asarray(True)))
+    a = virgin["paged"]
+    assert (np.asarray(a["tbl"]) == -1).all()
+    assert np.asarray(a["free"]).tolist() == list(range(P))
+    assert int(a["top"]) == P and (np.asarray(a["ref"]) == 0).all()
+    assert (np.asarray(virgin["t"]) == 0).all()
+    grp = virgin["unit"]["blk"]
+    assert (np.asarray(grp["pos_ids"]) == -1).all()
+    assert (np.asarray(grp["length"]) == 0).all()
+    for k in ("k_pages", "v_pages"):               # payloads NOT zeroed
+        assert (np.asarray(grp[k]) == np.asarray(base["unit"]["blk"][k])).all()
+    # a scrubbed pool allocates like a fresh one
+    check_ref_invariants(jax.device_get(_alloc_prefill(
+        a, jnp.asarray([0], jnp.int32), jnp.asarray([M], jnp.int32))))

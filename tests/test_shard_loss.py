@@ -1,0 +1,491 @@
+"""Shard-loss resilience: watchdog, evacuation, degraded fleets, rejoin.
+
+The contract (serving/sharded.py, PR 8): a shard declared dead — by an
+injected ``shard_down`` fault or by the health watchdog converting retry
+exhaustion — has every in-flight request EVACUATED onto the survivors
+through the preemption fold, and greedy decode depends only on context,
+so the fail-free fleet is the token-for-token oracle for every evacuated
+request. The dead pool is never touched again (no release, decref,
+adoption, or prefix mapping targets it), the degraded fleet keeps serving
+with dead shards excluded from placement, and ``rejoin`` scrubs the pool
+on device and makes the shard placeable the next quantum.
+
+``engine.audit()`` — the allocator invariants promoted into a production
+check — must pass after every recovery event; these tests also run it at
+drain and prove it actually catches corruption.
+
+Needs 4 forced host devices: run via ``make resilience`` (or the CI
+``resilience`` step); under plain tier-1 every test here SKIPS via the
+conftest guard.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.serving import (EngineConfig, FaultError, FaultInjector,
+                           FaultPlan, Request, ServingEngine,
+                           ShardedServingEngine)
+from repro.serving import sharded as sharded_mod
+
+PS = 4
+CH = 8
+S = 2                                  # most tests: smallest evacuable fleet
+
+RNG = np.random.default_rng(23)
+
+
+@pytest.fixture(autouse=True)
+def _fleet_devices(host_devices):
+    host_devices(4)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = ModelConfig(
+        name="tiny-shloss", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=2, d_ff=128, vocab=256, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+class CheckedFleet(ShardedServingEngine):
+    """Audit after every quantum — the production check at test cadence
+    (LIVE-shard allocator invariants + dead-shard mirror emptiness)."""
+
+    def step(self, max_steps=10_000):
+        ran = super().step(max_steps)
+        self.audit()
+        return ran
+
+
+def make_fleet(m, params, checked=True, shards=S, **kw):
+    args = dict(max_batch=2, max_len=64, sync_every=4, paged=True,
+                page_size=PS, prefill_chunk=CH, shards=shards,
+                preemption=True, prefix_sharing=True)
+    args.update(kw)
+    cls = CheckedFleet if checked else ShardedServingEngine
+    return cls(m, params, EngineConfig(**args))
+
+
+def _reqs(rids, lens, max_new=12, **kw):
+    return [dict(rid=rid, prompt=list(RNG.integers(0, 256, int(n))),
+                 max_new_tokens=max_new, **kw)
+            for rid, n in zip(rids, lens)]
+
+
+def run_fleet(eng, reqs):
+    for r in reqs:
+        eng.submit(Request(**r))
+    return {r.rid: r for r in eng.run()}
+
+
+def assert_matches_oracle(got, want, rids=None):
+    for rid in (want if rids is None else rids):
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+        assert got[rid].finished == want[rid].finished
+        assert got[rid].finish_reason == want[rid].finish_reason
+
+
+LENS = (5, 9, 14, 7, 11, 6)
+
+
+# ------------------------------------------------- evacuation token parity
+
+
+def test_single_kill_parity_and_counters(parts):
+    """Kill shard 0 at a quantum boundary mid-run: every request (the
+    evacuees included) finishes token-identical to the fail-free fleet,
+    the watchdog logs exactly one transition, and stats reports the
+    degraded fleet."""
+    _, m, params = parts
+    specs = _reqs(range(len(LENS)), LENS)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+
+    eng = make_fleet(m, params)
+    eng.faults = FaultInjector([FaultPlan("shard_down", at_quantum=3,
+                                          shard=0)])
+    got = run_fleet(eng, specs)
+
+    assert_matches_oracle(got, want)
+    assert eng.health.events == [(3, "down", 0)]
+    st = eng.stats()
+    assert st["live_shards"] == S - 1 and st["dead_shards"] == 1
+    assert st["shard_down_events"] == 1
+    assert st["shard0_dead"] == 1.0 and st["shard1_dead"] == 0.0
+    assert eng.shard_evacuated >= 1
+    # evacuees resumed through the fold: recompute is metered separately,
+    # so ordinary prefill/decode J/token stays a property of the work
+    folded = [r for r in got.values() if r.preemptions > 0]
+    if folded:
+        assert eng.meter.phase("recompute").tokens > 0
+    eng.audit()
+
+
+@pytest.mark.parametrize("quantum", [1, 2, 4, 6, 8])
+def test_kill_at_arbitrary_quantum_is_token_invisible(parts, quantum):
+    """The acceptance bit: under injected shard_down at ARBITRARY quanta
+    the evacuated streams are bit-identical to the fail-free fleet —
+    whether the kill lands during prefill, mid-decode, or after some
+    requests already finished."""
+    _, m, params = parts
+    specs = _reqs(range(4), (6, 13, 9, 16), max_new=20)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+    eng = make_fleet(m, params)
+    eng.faults = FaultInjector([FaultPlan("shard_down", at_quantum=quantum,
+                                          shard=1)])
+    got = run_fleet(eng, specs)
+    assert_matches_oracle(got, want)
+    assert eng.health.is_dead(1)
+    eng.audit()
+
+
+def test_kill_composed_with_preemption_and_deadlines(parts):
+    """Shard loss composes with the rest of the front door: low-priority
+    decodes get preempted by a high-priority burst AND the fleet loses a
+    shard. Every stream that survives in both runs matches the fail-free
+    fleet exactly (deadline cancellations may differ — a degraded fleet
+    is slower in wall-clock, which is the allowed dimension)."""
+    _, m, params = parts
+    low = _reqs((0, 1, 2, 3), (8, 10, 6, 12), max_new=14)
+    # generous wall-clock deadlines: the sweep machinery runs but never
+    # fires, so the fail-free fleet stays an exact oracle
+    high = _reqs((10, 11), (7, 9), max_new=6, priority=1, deadline_s=60.0)
+
+    def drive(with_kill):
+        eng = make_fleet(m, params)
+        if with_kill:
+            eng.faults = FaultInjector(
+                [FaultPlan("shard_down", at_quantum=4, shard=0)])
+        for r in low:
+            eng.submit(Request(**r))
+        for _ in range(5):
+            eng.step()
+        for r in high:
+            eng.submit(Request(**r))
+        return {r.rid: r for r in eng.run()}, eng
+
+    want, _ = drive(False)
+    got, eng = drive(True)
+    assert eng.health.is_dead(0)
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+    eng.audit()
+
+
+def test_repeated_kills_and_rejoins(parts):
+    """Kills compose over time on a 4-shard fleet: lose shard 0, rejoin
+    it, lose shard 2 — parity holds through the whole campaign and the
+    rejoined shard serves again."""
+    _, m, params = parts
+    specs = _reqs(range(8), (5, 9, 14, 7, 11, 6, 8, 12))
+    want = run_fleet(make_fleet(m, params, shards=4),
+                     [dict(r) for r in specs])
+
+    eng = make_fleet(m, params, shards=4)
+    # absolute quantum: the plan must not re-fire when the later run()
+    # restarts the relative time base
+    eng.faults = FaultInjector([FaultPlan("shard_down", at_quantum=2,
+                                          shard=0, absolute=True)])
+    for r in specs[:4]:
+        eng.submit(Request(**r))
+    for _ in range(6):
+        eng.step()
+    assert eng.health.is_dead(0)
+    eng.rejoin(0)
+    eng.fail_shard(2)
+    for r in specs[4:]:
+        eng.submit(Request(**r))
+    got = {r.rid: r for r in eng.run()}
+
+    assert_matches_oracle(got, want)
+    assert [e[1:] for e in eng.health.events] == [
+        ("down", 0), ("up", 0), ("down", 2)]
+    st = eng.stats()
+    assert st["shard_rejoins"] == 1 and st["shard_down_events"] == 2
+    assert st["live_shards"] == 3
+    eng.audit()
+
+
+# ------------------------------------------------------- health watchdog
+
+
+def test_watchdog_converts_exhaustion_to_shard_loss(parts):
+    """A decode_scan that keeps faulting while only ONE shard has armed
+    work: where the single-device discipline would raise FaultError past
+    max_retries, the watchdog declares that shard dead and the fleet
+    keeps serving — the victim finishes token-identical to the fail-free
+    run on a survivor."""
+    _, m, params = parts
+    spec = _reqs([0], [8], max_new=12)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in spec])
+    eng = make_fleet(m, params)
+    # long window: retries back off at +2,+4,+8, so exhaustion needs the
+    # site to keep faulting across the whole schedule
+    eng.faults = FaultInjector([FaultPlan("decode_scan", at_quantum=3,
+                                          count=20)])
+    got = run_fleet(eng, spec)
+    assert eng.health.dead, "watchdog never fired"
+    assert_matches_oracle(got, want)
+    st = eng.stats()
+    assert st["fault_retries_decode_scan"] == st["fault_retries"] > 0
+    dead = next(iter(eng.health.dead))
+    assert st[f"shard{dead}_fault_retries_decode_scan"] > 0
+    eng.audit()
+
+
+def test_page_alloc_exhaustion_still_raises(parts):
+    """page_alloc is the host-side reservation pass — not attributable to
+    one device, so its exhaustion keeps the pre-watchdog contract: a
+    FaultError out of run() with engine state consistent."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    eng.faults = FaultInjector([FaultPlan("page_alloc", at_quantum=1,
+                                          count=30)])
+    eng.submit(Request(**_reqs([0], [8], max_new=4)[0]))
+    with pytest.raises(FaultError):
+        eng.run()
+    assert not eng.health.dead
+    assert len(eng.queue) == 1           # request re-queued, not dropped
+    eng.audit()
+
+
+def test_last_live_shard_refuses_to_die(parts):
+    """A fleet with nowhere to evacuate fails loudly: killing the last
+    live shard raises FaultError and changes nothing."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    eng.fail_shard(0)
+    with pytest.raises(FaultError, match="last live shard"):
+        eng.fail_shard(1)
+    assert eng.health.live == [1]
+    eng.audit()
+
+
+# ---------------------------------------------- the dead pool is untouched
+
+
+def test_dead_pool_bit_identical_until_rejoin(parts):
+    """The no-touch pin: from declaration to rejoin, the dead shard's
+    device cache lane — allocator (ref/free/top, the quarantined table)
+    and every REAL KV page — stays bit-identical. The only row allowed to
+    change is the trash page, where the batch-shape-invariant fleet
+    launches park their inert writes (same as any released slot's)."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    for r in _reqs(range(6), LENS):
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    eng.fail_shard(0)
+
+    def dead_lane(tree):
+        def lane(a):
+            a = np.asarray(a)[0]
+            if a.ndim >= 4:            # page leaf ([R,] H, P+1, ps, hd):
+                sl = [slice(None)] * a.ndim
+                sl[-3] = slice(0, a.shape[-3] - 1)
+                a = a[tuple(sl)]       # drop the trash row, keep real pages
+            return a
+        return jax.tree_util.tree_map(lane, jax.device_get(tree))
+
+    snap = dead_lane(eng.caches)
+    eng.run()
+    after = dead_lane(eng.caches)
+    flat_b, _ = jax.tree_util.tree_flatten(snap)
+    flat_a, _ = jax.tree_util.tree_flatten(after)
+    for b, a in zip(flat_b, flat_a):
+        assert (b == a).all(), "dead shard's pool was touched after death"
+    eng.audit()
+
+
+def test_dead_shard_mirrors_invalidated_atomically(parts):
+    """At declaration the dead shard owns nothing host-side: no pins, no
+    prefix-index entries, no prefilling work, no occupied slots — and the
+    preempted requests whose pins lived there resume WITHOUT adopting
+    from the dead pool."""
+    _, m, params = parts
+    low = _reqs((0, 1, 2, 3), (8, 10, 6, 12), max_new=14)
+    high = _reqs((10, 11), (7, 9), max_new=6, priority=1)
+    eng = make_fleet(m, params)
+    for r in low:
+        eng.submit(Request(**r))
+    for _ in range(5):
+        eng.step()
+    for r in high:
+        eng.submit(Request(**r))
+    for _ in range(2):
+        eng.step()                      # let preemption pin victims
+    eng.fail_shard(0)
+    assert all(ps != 0 for ps, _ in eng._pins.values())
+    assert not eng._prefix_index[0] and not eng._page_ref[0]
+    assert not eng._prefilling[0]
+    assert all(rid < 0 for rid in eng.slot_rid[0])
+    assert eng.free_pages[0] == eng.num_pages
+    got = {r.rid: r for r in eng.run()}
+    assert all(r.finished for r in got.values()
+               if r.finish_reason != "cancelled")
+    eng.audit()
+
+
+# ------------------------------------------------------------------ rejoin
+
+
+def test_rejoin_scrubbed_and_placeable_next_quantum(parts):
+    """A recovered shard re-enters with a VIRGIN pool (allocator reset,
+    empty prefix index) and takes placements again — the fleet's shard
+    request counters prove work lands on it after rejoin."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    got = run_fleet(eng, _reqs(range(4), (6, 9, 12, 7)))
+    assert all(r.finished for r in got.values())
+    eng.fail_shard(0)
+    eng.rejoin(0)
+    a = jax.device_get(eng.caches["paged"])
+    assert int(np.asarray(a["top"])[0]) == eng.num_pages
+    assert (np.asarray(a["tbl"])[0] == -1).all()
+    assert (np.asarray(a["ref"])[0] == 0).all()
+    assert not eng._prefix_index[0]
+    before = eng.stats()["shard0_requests"]
+    # enough parallel work that placement must use both shards
+    got2 = run_fleet(eng, _reqs(range(100, 106), LENS))
+    assert all(r.finished for r in got2.values())
+    assert eng.stats()["shard0_requests"] > before
+    eng.audit()
+
+
+def test_rejoin_validates(parts):
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    with pytest.raises(ValueError, match="not dead"):
+        eng.rejoin(0)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.rejoin(S)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.fail_shard(-1)
+
+
+# ------------------------------------------------------------------- audit
+
+
+def test_audit_catches_corruption(parts):
+    """audit() is a real check, not a formality: a drifted reservation
+    mirror and a pin pointing into a dead pool both raise."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    run_fleet(eng, _reqs(range(2), (6, 9)))
+    eng.audit()
+    eng.free_pages[0] = eng.num_pages + 5
+    with pytest.raises(RuntimeError, match="reservation mirror"):
+        eng.audit()
+    eng.free_pages[0] = eng.num_pages
+    eng.fail_shard(0)
+    eng._pins[999] = (0, [0])
+    with pytest.raises(RuntimeError, match="preemption pins"):
+        eng.audit()
+    del eng._pins[999]
+    eng.audit()
+
+
+# ------------------------- faults composed with PR 7 (deferral + routing)
+
+
+HET2_PROFILES = ("rtx6000ada", "t4")
+HET2_REGIONS = ("CISO", "QC")
+
+
+def test_launch_faults_under_carbon_routing(parts):
+    """Faulted launches on a heterogeneous carbon-routed fleet: the
+    reservation rollback must not corrupt per-shard meter accounting —
+    every request still finishes token-identical to the fault-free
+    carbon-routed fleet, and per-shard carbon rows still sum EXACTLY to
+    the fleet totals."""
+    _, m, params = parts
+    het = dict(routing="carbon", shard_profiles=HET2_PROFILES,
+               shard_regions=HET2_REGIONS)
+    specs = _reqs(range(5), (5, 9, 14, 7, 11))
+    want = run_fleet(make_fleet(m, params, **het), [dict(r) for r in specs])
+    eng = make_fleet(m, params, **het)
+    eng.faults = FaultInjector([
+        FaultPlan("page_alloc", at_quantum=1),
+        FaultPlan("prefill_chunk", at_quantum=2, count=2),
+        FaultPlan("decode_scan", at_quantum=5),
+    ])
+    got = run_fleet(eng, specs)
+    assert_matches_oracle(got, want)
+    assert eng.fault_retries == len(eng.faults.fired) > 0
+    st = eng.stats()
+    assert sum(st[f"shard{s}_carbon_g"] for s in range(S)) == pytest.approx(
+        st["total_carbon_g"])
+    eng.audit()
+
+
+def test_faults_during_deferral_release(parts):
+    """Launch faults while the deferral queue is releasing parked work:
+    rollback must not corrupt deferral ownership — every deferred request
+    is released exactly once, finishes, and nothing is double-owned by
+    queue and deferral at any point."""
+    _, m, params = parts
+    eng = make_fleet(m, params, defer_below_priority=1, use_diurnal_ci=True)
+    eng.faults = FaultInjector([
+        FaultPlan("prefill_chunk", at_quantum=1, count=2),
+        FaultPlan("decode_scan", at_quantum=4),
+    ])
+    urgent = _reqs((0, 1), (6, 9), max_new=8, priority=1)
+    parked = _reqs((10, 11, 12), (7, 5, 10), max_new=6)
+    got = run_fleet(eng, urgent + parked)
+    assert eng.deferred_total == len(parked)
+    assert eng.deferred_released == eng.deferred_total
+    assert not eng.deferred and not eng.deferred_rids
+    assert all(r.finished for r in got.values())
+    assert eng.fault_retries > 0
+    eng.audit()
+
+
+def test_shard_down_with_deferred_work_parked(parts):
+    """A shard dies while work sits in the deferral queue: deferred
+    requests own nothing shard-local, so the kill must leave the parking
+    lot untouched and the released work lands on survivors only."""
+    _, m, params = parts
+    eng = make_fleet(m, params, defer_below_priority=1, use_diurnal_ci=True)
+    eng.faults = FaultInjector([FaultPlan("shard_down", at_quantum=2,
+                                          shard=1)])
+    urgent = _reqs((0, 1), (6, 9), max_new=10, priority=1)
+    parked = _reqs((10, 11), (7, 5), max_new=6)
+    got = run_fleet(eng, urgent + parked)
+    assert eng.health.is_dead(1)
+    assert eng.deferred_released == eng.deferred_total == len(parked)
+    assert all(r.finished for r in got.values())
+    # every placement after death went to the survivor
+    assert all(s == 0 for s in eng._req_shard.values())
+    eng.audit()
+
+
+# ------------------------------------------------------ random campaigns
+
+
+def test_random_campaign_reproducible_and_survivable(parts):
+    """FaultPlan.random(seed) is the reproducible chaos harness: the same
+    seed yields the same campaign, and a mixed campaign (launch faults +
+    a shard kill) drains with every stream matching the fail-free fleet
+    and the per-site retry counters summing to the total."""
+    assert FaultPlan.random(17, n=6, shards=S) == \
+        FaultPlan.random(17, n=6, shards=S)
+    with pytest.raises(ValueError, match="shards"):
+        FaultPlan.random(1, sites=("shard_down",))
+
+    _, m, params = parts
+    specs = _reqs(range(5), (5, 9, 14, 7, 11))
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+    eng = make_fleet(m, params)
+    eng.faults = FaultInjector(FaultPlan.random(17, n=6, shards=S))
+    got = run_fleet(eng, specs)
+    assert_matches_oracle(got, want)
+    st = eng.stats()
+    per_site = sum(v for k, v in st.items()
+                   if k.startswith("fault_retries_"))
+    assert per_site == st["fault_retries"]
+    eng.audit()
