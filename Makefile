@@ -2,9 +2,9 @@ PY := python
 export PYTHONPATH := src:.
 
 .PHONY: test test-all kernels paged chunked prefix sharded server hetero \
-	resilience check-clean verify bench-engine bench-engine-sharded \
-	bench-engine-server bench-engine-hetero bench-engine-resilience \
-	bench-smoke bench
+	resilience impacts docs check-clean verify bench-engine \
+	bench-engine-sharded bench-engine-server bench-engine-hetero \
+	bench-engine-resilience bench-engine-impacts bench-smoke bench
 
 test:               ## tier-1 suite (fail fast: local inner loop)
 	$(PY) -m pytest -x -q
@@ -49,13 +49,23 @@ resilience:         ## shard-loss watchdog + evacuation + rejoin (4 forced host 
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) -m pytest -q tests/test_shard_loss.py
 
+impacts:            ## multi-criteria impact ledger + power-trace + calibration suites
+	$(PY) -m pytest -q tests/test_impacts.py tests/test_power_trace.py \
+	    tests/test_trace_calibration.py
+
+# the METHODOLOGY contract checks the sharded stats surface too, so it
+# runs under the 4-device environment (the guard skips it otherwise)
+docs:               ## METHODOLOGY.md contract: stats-key reference + link check (4 devices)
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest -q tests/test_methodology_contract.py
+
 check-clean:        ## fail if compiled artifacts are tracked by git
 	@bad=$$(git ls-files | grep -E '(\.pyc$$|__pycache__/)' || true); \
 	if [ -n "$$bad" ]; then \
 	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
 	fi
 
-verify: check-clean test kernels paged chunked prefix sharded server hetero resilience ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero + resilience sweeps
+verify: check-clean test kernels paged chunked prefix sharded server hetero resilience impacts docs ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero + resilience + impacts + docs sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py
@@ -79,6 +89,10 @@ bench-engine-hetero: ## merge a 4-device hetero carbon-routing section into BENC
 bench-engine-resilience: ## merge a 4-device shard-loss resilience section into BENCH_engine.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) benchmarks/engine_bench.py --resilience-only
+
+bench-engine-impacts: ## merge a 4-device impact-ledger + calibration section into BENCH_engine.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) benchmarks/engine_bench.py --impacts-only
 
 bench-smoke:        ## CI: every bench code path once, reduced size -> BENCH_engine_smoke.json
 	$(PY) benchmarks/engine_bench.py --smoke

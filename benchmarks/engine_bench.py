@@ -950,6 +950,161 @@ def _hetero_criteria(hetero: Dict) -> Dict:
     }
 
 
+def _bench_impacts(model, params, smoke: bool = False) -> Dict:
+    """Multi-criteria impact ledger + measured-power calibration
+    (docs/METHODOLOGY.md#the-impact-ledger, #measured-power).
+
+    Part 1 serves the hetero diurnal mixed trace once through the 4-shard
+    two-generation fleet under carbon routing and reports the fleet's
+    FOUR-criteria totals (gCO2 / water L / primary MJ / ADPe mg) per
+    phase and per shard — checking that the fleet totals are the exact
+    sum of the per-shard attribution (1e-12) and that the hydro shards
+    really do run water/PE-lighter per joule than the coal shard.
+
+    Part 2 synthesizes a power trace from a deliberately mis-knobbed
+    rtx6000ada profile's WORKLOAD (truth profile generates the samples),
+    fits the power knobs back with ``fit_power_trace``, and reports the
+    recovered total-energy error plus per-phase residuals — the
+    modeled-J-to-auditable-J loop, deterministic by fixed seed.
+    """
+    shards = 4
+    if jax.device_count() < shards:
+        return {"skipped":
+                f"needs {shards} host devices, have {jax.device_count()}: "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{shards} before the first jax import"}
+    from benchmarks.load_gen import diurnal_trace, mixed_requests
+    profiles = ["rtx6000ada", "rtx6000ada", "t4", "t4"]
+    regions = ["PACE", "CISO", "QC", "QC"]
+    ps = 8
+    B = 4 if smoke else 8
+    pages = 32 if smoke else 64
+    n_batch = 8 if smoke else 16
+    n_live = 6 if smoke else 12
+
+    def reqs() -> List[Request]:
+        rng = np.random.default_rng(7)
+        batch = mixed_requests(
+            diurnal_trace(4.0, n_batch, rng, region="CISO", depth=0.8),
+            rng, prompt_len=(6, 18), max_new_tokens=8 if smoke else 24,
+            priority=0, deadline_s=120.0)
+        live = mixed_requests(
+            diurnal_trace(2.0, n_live, rng, region="CISO", depth=0.8),
+            rng, prompt_len=(4, 10), max_new_tokens=4 if smoke else 8,
+            priority=1, rid0=1000)
+        out = []
+        for s in sorted(batch + live, key=lambda s: s["arrival_s"]):
+            s = dict(s)
+            s.pop("arrival_s")
+            out.append(Request(**s))
+        return out
+
+    eng = ShardedServingEngine(model, params, EngineConfig(
+        max_batch=B, max_len=128, sync_every=8, paged=True, page_size=ps,
+        num_pages=pages, prefill_chunk=16, shards=shards,
+        shard_profiles=profiles, shard_regions=regions, routing="carbon",
+        use_diurnal_ci=True))
+    for r in reqs():
+        eng.submit(r)
+    eng.run()
+    st = eng.stats()
+    crits = ("water_l", "primary_mj", "adpe_mg")
+    per_shard = {c: [getattr(eng.meters[s].totals, c)
+                     for s in range(shards)] for c in crits}
+    fleet = {c: getattr(eng.meter.totals, c) for c in crits}
+    sum_err = max(
+        abs(fleet[c] - sum(per_shard[c])) / max(abs(fleet[c]), 1e-30)
+        for c in crits)
+    # water intensity (L/kWh drawn) per shard: hydro QC vs coal PACE
+    water_per_kwh = [
+        per_shard["water_l"][s]
+        / max(eng.meters[s].totals.energy_j / 3.6e6, 1e-30)
+        for s in range(shards)]
+
+    # part 2: measured-power calibration loop (device-free, deterministic)
+    from repro.core.calibrate import fit_power_trace
+    from repro.core.energy import (LLAMA_1B, decode_counts, prefill_counts)
+    from repro.core.hardware import get_profile
+    from repro.core.power_trace import SegmentPlan, synthesize_trace
+    truth = get_profile("rtx6000ada")
+    plan = [SegmentPlan("prefill", prefill_counts(LLAMA_1B, 8, 512),
+                        20 if smoke else 40),
+            SegmentPlan("decode", decode_counts(LLAMA_1B, 8, 600),
+                        1000 if smoke else 2000)]
+    rng = np.random.default_rng(0)
+    trace, segs = synthesize_trace(truth, plan, interval_s=0.05, pad_s=5.0,
+                                   noise_frac=0.02, rng=rng)
+    import dataclasses as _dc
+    start = _dc.replace(truth, idle_w=truth.idle_w * 2.0,
+                        power_alpha=truth.power_alpha * 0.6,
+                        eff_compute=truth.eff_compute * 0.7,
+                        eff_memory=truth.eff_memory * 0.8)
+    n_iter = 150 if smoke else 400
+    cal = fit_power_trace(trace, segs, base=start, n_random=n_iter,
+                          n_refine=n_iter, seed=1)
+    return {
+        "shards": shards,
+        "shard_profiles": profiles,
+        "shard_regions": regions,
+        "fleet": {
+            "tokens": eng.meter.totals.tokens,
+            "energy_j": eng.meter.totals.energy_j,
+            "carbon_g": eng.meter.totals.total_g,
+            "water_l": fleet["water_l"],
+            "primary_mj": fleet["primary_mj"],
+            "adpe_mg": fleet["adpe_mg"],
+            "water_per_token_l": st["water_per_token_l"],
+        },
+        "per_phase": {
+            ph: {"water_l": st[f"{ph}_water_l"],
+                 "primary_mj": st[f"{ph}_primary_mj"],
+                 "adpe_mg": st[f"{ph}_adpe_mg"]}
+            for ph in ("prefill", "decode")},
+        "per_shard": per_shard,
+        "shard_water_l_per_kwh": water_per_kwh,
+        "fleet_sum_rel_err": sum_err,
+        "calibration": {
+            "profile": truth.name,
+            "trace_samples": len(trace),
+            "measured_wh": cal.measured_wh,
+            "modeled_wh": cal.modeled_wh,
+            "energy_error_frac": cal.energy_error_frac,
+            "loss": cal.loss,
+            "residuals": [
+                {"phase": r.phase,
+                 "measured_wh": r.measured_wh,
+                 "modeled_wh": r.modeled_wh,
+                 "energy_error_frac": r.energy_error_frac,
+                 "time_error_frac": r.time_error_frac}
+                for r in cal.residuals],
+        },
+    }
+
+
+def _impacts_criteria(impacts: Dict) -> Dict:
+    if "skipped" in impacts:
+        return {}
+    return {
+        # fleet four-criteria totals are the EXACT sum of the per-shard
+        # attribution — no second ledger that could drift
+        "impacts_fleet_sums_exact_1e12":
+            impacts["fleet_sum_rel_err"] <= 1e-12,
+        # every criterion is populated for both serving phases
+        "impacts_all_criteria_per_phase":
+            all(v > 0 for ph in impacts["per_phase"].values()
+                for v in ph.values()),
+        # the hydro-grid shards (QC, shards 2-3) withdraw less water per
+        # kWh than the coal-grid shard (PACE, shard 0)
+        "impacts_clean_grid_less_water_per_kwh":
+            max(impacts["shard_water_l_per_kwh"][2:])
+            < impacts["shard_water_l_per_kwh"][0],
+        # the calibration loop closes: fitted model's total energy within
+        # 5% of the trace integral (ISSUE 9 acceptance criterion)
+        "impacts_calibration_energy_within_5pct":
+            abs(impacts["calibration"]["energy_error_frac"]) <= 0.05,
+    }
+
+
 def _server_criteria(server: Dict) -> Dict:
     return {
         # preemption turns queueing delay into eviction: high-priority
@@ -989,13 +1144,14 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     server = _bench_server(model, params, smoke=smoke)
     hetero = _bench_hetero(model, params, smoke=smoke)
     resilience = _bench_resilience(model, params, max_len, smoke=smoke)
+    impacts = _bench_impacts(model, params, smoke=smoke)
     speedup = fused["decode_steps_per_s"] / seed["decode_steps_per_s"]
     out = {
         "config": cfg.name, "variant": variant, "batch": BATCH,
         "requests": n_requests, "max_new_tokens": max_new,
         "seed": seed, "fused": fused, "paged": paged, "chunked": chunked,
         "prefix": prefix, "sharded": sharded, "server": server,
-        "hetero": hetero, "resilience": resilience,
+        "hetero": hetero, "resilience": resilience, "impacts": impacts,
         "decode_steps_per_s_speedup": speedup,
         "criteria": {
             "fused_ge_2x_decode_steps_per_s": speedup >= 2.0,
@@ -1036,6 +1192,7 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     out["criteria"].update(_server_criteria(server))
     out["criteria"].update(_hetero_criteria(hetero))
     out["criteria"].update(_resilience_criteria(resilience))
+    out["criteria"].update(_impacts_criteria(impacts))
     return out
 
 
@@ -1116,6 +1273,12 @@ def main():
                          "platform_device_count=4) and merge it into the "
                          "existing output JSON — same two-pass flow as "
                          "--sharded-only / --hetero-only")
+    ap.add_argument("--impacts-only", action="store_true",
+                    help="re-measure ONLY the multi-criteria impact "
+                         "ledger + power-calibration section (run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=4) and merge it into the existing output "
+                         "JSON — same two-pass flow as --sharded-only")
     args = ap.parse_args()
     if args.smoke:
         REPEATS, TAIL_RUNS = 1, 1
@@ -1184,6 +1347,25 @@ def main():
         res["criteria"] = {k: v for k, v in res["criteria"].items()
                            if not k.startswith("resilience_")}
         res["criteria"].update(_resilience_criteria(res["resilience"]))
+    elif args.impacts_only:
+        with open(args.out) as f:
+            res = json.load(f)
+        if res.get("variant") != args.variant:
+            raise SystemExit(
+                f"--impacts-only: {args.out} holds variant "
+                f"{res.get('variant')!r}, refusing to merge a "
+                f"{args.variant!r} impacts section into it")
+        cfg = llama_paper.make(args.variant, "llama-paper-1b")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        impacts = _bench_impacts(model, params, smoke=args.smoke)
+        if "skipped" in impacts:
+            # never clobber committed measurements with a skip stub
+            raise SystemExit(f"--impacts-only: {impacts['skipped']}")
+        res["impacts"] = impacts
+        res["criteria"] = {k: v for k, v in res["criteria"].items()
+                           if not k.startswith("impacts_")}
+        res["criteria"].update(_impacts_criteria(res["impacts"]))
     elif args.server_only:
         with open(args.out) as f:
             res = json.load(f)
@@ -1203,7 +1385,8 @@ def main():
         res = bench(args.variant, args.requests, args.max_new_tokens,
                     smoke=args.smoke)
         if "skipped" in res["sharded"] or "skipped" in res["hetero"] \
-                or "skipped" in res["resilience"]:
+                or "skipped" in res["resilience"] \
+                or "skipped" in res["impacts"]:
             # pass 1 of the two-pass flow runs without forced host devices:
             # keep existing MEASURED 4-device sections (and their criteria)
             # rather than clobbering them with skip stubs — pass 2
@@ -1216,7 +1399,8 @@ def main():
                 prev = {}
             for section, crit in (("sharded", _sharded_criteria),
                                   ("hetero", _hetero_criteria),
-                                  ("resilience", _resilience_criteria)):
+                                  ("resilience", _resilience_criteria),
+                                  ("impacts", _impacts_criteria)):
                 if "skipped" not in res[section]:
                     continue
                 old = prev.get(section, {})
@@ -1336,6 +1520,21 @@ def main():
               f"{cb['deferred_released']} released "
               f"({cb['deferred_forced_releases']} deadline-forced), "
               f"{cb['deferred_deadline_violations']} deadline violations")
+    im = res.get("impacts")
+    if im and "skipped" in im:
+        print(f"\n== impact ledger: SKIPPED ({im['skipped']}) ==")
+    elif im:
+        fl, cal = im["fleet"], im["calibration"]
+        print(f"\n== impact ledger ({im['shards']}-shard fleet, "
+              f"carbon routing) ==")
+        print(f"fleet totals: {fl['carbon_g']:.3f} gCO2  "
+              f"{fl['water_l']:.3e} L  {fl['primary_mj']:.3e} MJ  "
+              f"{fl['adpe_mg']:.3e} mgSbeq  "
+              f"(shard-sum rel err {im['fleet_sum_rel_err']:.1e})")
+        print(f"calibration: measured {cal['measured_wh']:.4f} Wh -> "
+              f"modeled {cal['modeled_wh']:.4f} Wh "
+              f"({cal['energy_error_frac']:+.2%} error, "
+              f"{len(cal['residuals'])} phase residuals)")
     print(f"criteria: {res['criteria']}")
     print(f"wrote {args.out}")
 

@@ -8,6 +8,11 @@ JAX-framework component.
 * :mod:`repro.core.carbon` — operational/embodied/total carbon (Eq. 2-4)
 * :mod:`repro.core.meter` — per-phase/per-token accounting (Figures 2-6)
 * :mod:`repro.core.scheduler` — CI-directed carbon-aware scheduling (§4)
+* :mod:`repro.core.impacts` — multi-criteria ledger (water/PE/ADPe zones)
+* :mod:`repro.core.power_trace` — measured-power ingestion (trapezoidal
+  Wh over the active window, idle tax, per-request normalization)
+
+Every number any of these emit is documented in ``docs/METHODOLOGY.md``.
 """
 from repro.core.act import EmbodiedBreakdown, embodied_carbon
 from repro.core.carbon import (CarbonBreakdown, amortized_embodied_g,
@@ -44,3 +49,15 @@ __all__ = [
 from repro.core.forecast import CIForecaster, mape  # noqa: E402
 
 __all__ += ["CIForecaster", "mape"]
+
+from repro.core.impacts import (MultiImpactBreakdown, ZoneFactors,  # noqa: E402
+                                ZONES, embodied_impacts, price_energy,
+                                zone_of)
+from repro.core.power_trace import (ActiveWindow, LabeledSegment,  # noqa: E402
+                                    PowerTrace, SegmentPlan, normalized,
+                                    synthesize_trace)
+
+__all__ += ["MultiImpactBreakdown", "ZoneFactors", "ZONES",
+            "embodied_impacts", "price_energy", "zone_of", "ActiveWindow",
+            "LabeledSegment", "PowerTrace", "SegmentPlan", "normalized",
+            "synthesize_trace"]

@@ -211,6 +211,159 @@ def fit(n_random: int = 4000, n_refine: int = 3000, seed: int = 0,
     return best[0], best[1], best_s
 
 
+# ---------------------------------------------------------------------------
+# Measured-power-trace calibration (PR 9)
+# ---------------------------------------------------------------------------
+#
+# The anchor fit above pins the model to the PAPER's published ratios; the
+# trace fit below pins it to a MEASURED power log from a deployment you
+# actually run (docs/METHODOLOGY.md#measured-power). Input is the pair
+# (PowerTrace, labeled segments) that repro.core.power_trace produces —
+# from a DCGM/NVML CSV + request log in production, or from
+# synthesize_trace in tests — and the fit adjusts only the power-path
+# knobs of the profile so the model's per-phase Wh and durations match
+# the trapezoidal integrals of the trace.
+
+from repro.core.power_trace import PowerTrace  # noqa: E402
+
+# Power-path knobs only: the roofline/capacity constants (flops, bandwidth,
+# memory) are physics/spec sheet, not free parameters of a power fit.
+POWER_TRACE_SPACE = [
+    ("idle_w", 5.0, 120.0, False),
+    ("power_alpha", 0.2, 2.5, False),
+    ("eff_compute", 0.1, 0.9, False),
+    ("eff_memory", 0.3, 0.98, False),
+    ("step_overhead_s", 5e-4, 5e-2, True),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseResidual:
+    """Measured-vs-modeled for one phase of the trace."""
+
+    phase: str
+    measured_wh: float
+    modeled_wh: float
+    measured_s: float
+    modeled_s: float
+
+    @property
+    def energy_error_frac(self) -> float:
+        return (self.modeled_wh - self.measured_wh) / max(self.measured_wh,
+                                                          1e-12)
+
+    @property
+    def time_error_frac(self) -> float:
+        return (self.modeled_s - self.measured_s) / max(self.measured_s,
+                                                        1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCalibration:
+    """Result of :func:`fit_power_trace`."""
+
+    profile: HardwareProfile
+    loss: float
+    measured_wh: float
+    modeled_wh: float
+    residuals: Tuple[PhaseResidual, ...]
+
+    @property
+    def energy_error_frac(self) -> float:
+        """Signed total-energy error of the fitted model vs the trace."""
+        return (self.modeled_wh - self.measured_wh) / max(self.measured_wh,
+                                                          1e-12)
+
+    def report(self) -> str:
+        lines = [f"TraceCalibration[{self.profile.name}] "
+                 f"loss={self.loss:.4f} total "
+                 f"measured={self.measured_wh:.4f}Wh "
+                 f"modeled={self.modeled_wh:.4f}Wh "
+                 f"({self.energy_error_frac:+.2%})"]
+        for r in self.residuals:
+            lines.append(
+                f"  {r.phase:<10} Wh {r.measured_wh:.4f} -> {r.modeled_wh:.4f}"
+                f" ({r.energy_error_frac:+.2%})   "
+                f"t {r.measured_s:.3f}s -> {r.modeled_s:.3f}s"
+                f" ({r.time_error_frac:+.2%})")
+        return "\n".join(lines)
+
+
+def _phase_residuals(profile: HardwareProfile, trace: PowerTrace,
+                     segments) -> List[PhaseResidual]:
+    by_phase: Dict[str, List[float]] = {}
+    order: List[str] = []
+    for seg in segments:
+        rep = energy.step_energy(profile, seg.counts)
+        modeled_wh = (0.0 if math.isinf(rep.energy_j)
+                      else rep.energy_wh * seg.n_steps)
+        modeled_s = (math.inf if math.isinf(rep.t_total)
+                     else rep.t_total * seg.n_steps)
+        acc = by_phase.setdefault(seg.phase, [0.0, 0.0, 0.0, 0.0])
+        if seg.phase not in order:
+            order.append(seg.phase)
+        acc[0] += trace.energy_wh(seg.window)
+        acc[1] += modeled_wh
+        acc[2] += seg.duration_s
+        acc[3] += modeled_s
+    return [PhaseResidual(p, *by_phase[p]) for p in order]
+
+
+def trace_loss(profile: HardwareProfile, trace: PowerTrace,
+               segments) -> float:
+    """Sum of squared log-errors of per-phase Wh and duration. Energy and
+    time are both scored so power knobs (idle_w, power_alpha) and speed
+    knobs (eff_*, overhead) are separately identified."""
+    loss = 0.0
+    for r in _phase_residuals(profile, trace, segments):
+        for meas, model in ((r.measured_wh, r.modeled_wh),
+                            (r.measured_s, r.modeled_s)):
+            if meas <= 0:
+                continue
+            if not math.isfinite(model) or model <= 0:
+                loss += 100.0
+            else:
+                loss += math.log(model / meas) ** 2
+    return loss
+
+
+def fit_power_trace(trace: PowerTrace, segments,
+                    base: HardwareProfile,
+                    space=POWER_TRACE_SPACE,
+                    n_random: int = 400, n_refine: int = 400,
+                    seed: int = 0) -> TraceCalibration:
+    """Fit ``base``'s power/efficiency knobs to a measured trace.
+
+    ``segments`` are :class:`repro.core.power_trace.LabeledSegment`s — the
+    request-log alignment that says which (phase, StepCounts, window) each
+    stretch of the trace corresponds to. Same random-search + refinement
+    scheme as the paper-anchor :func:`fit`, over the power-path knobs
+    only (:data:`POWER_TRACE_SPACE`).
+    """
+    if not segments:
+        raise ValueError("fit_power_trace needs at least one labeled segment")
+    rng = np.random.default_rng(seed)
+    best = base
+    best_s = trace_loss(best, trace, segments)
+    for _ in range(n_random):
+        cand = _sample(rng, space, base)
+        s = trace_loss(cand, trace, segments)
+        if s < best_s:
+            best, best_s = cand, s
+    for i in range(n_refine):
+        scale = 0.25 * (1.0 - i / max(n_refine, 1)) + 0.02
+        cand = _perturb(rng, best, space, scale)
+        s = trace_loss(cand, trace, segments)
+        if s < best_s:
+            best, best_s = cand, s
+    residuals = tuple(_phase_residuals(best, trace, segments))
+    measured = sum(r.measured_wh for r in residuals)
+    modeled = sum(r.modeled_wh for r in residuals)
+    return TraceCalibration(profile=best, loss=best_s,
+                            measured_wh=measured, modeled_wh=modeled,
+                            residuals=residuals)
+
+
 if __name__ == "__main__":
     t4, ada, s = fit()
     print(f"\nfinal score {s:.4f}")

@@ -5,6 +5,11 @@
 Operational carbon scales with grid CI; embodied carbon is fixed at
 manufacturing time and amortized over the device lifetime (default 5 years,
 §3.1; §3.4 sweeps 4–8 years).
+
+This module is the gCO2 leg of the multi-criteria ledger AND its parity
+oracle: :func:`repro.core.impacts.price_energy` calls :func:`total_carbon`
+unchanged, so the carbon numbers are bit-identical with or without the
+ledger (docs/METHODOLOGY.md#the-impact-ledger).
 """
 from __future__ import annotations
 

@@ -259,6 +259,12 @@ class EnergyReport:
         return self.energy_j / max(self.tokens, 1e-12)
 
     @property
+    def energy_wh(self) -> float:
+        """Wh — the unit measured power traces integrate to
+        (repro.core.power_trace); 1 Wh = 3600 J."""
+        return self.energy_j / 3600.0
+
+    @property
     def tokens_per_s(self) -> float:
         if math.isinf(self.time.t_total):
             return 0.0

@@ -4,6 +4,11 @@ The paper uses 2023 average CIs from Electricity Maps for three regions with
 distinct energy mixes. For the CI-directed-serving extension (§4 "CI-directed
 LLM serving") we also provide synthetic diurnal traces: solar-heavy grids
 (CISO) dip mid-day, coal/gas grids are flat, hydro grids are flat-low.
+
+Each region also has a multi-criteria ZONE record (water / primary-energy /
+ADPe factors of the same electricity mix) in :mod:`repro.core.impacts` —
+kept separate so this module stays exactly the paper's Table 2 and the gCO2
+path never routes through the ledger (docs/METHODOLOGY.md#regions-and-zones).
 """
 from __future__ import annotations
 

@@ -16,6 +16,12 @@ to the preemption policy, while the recompute phase totals the true
 energy price of preemption (the engine also surfaces it per request as
 ``Response.recompute_j`` and fleet-wide as ``preempted_recompute_j``).
 
+Since PR 9 every record is priced across the FOUR criteria of the impact
+ledger (gCO2eq, water L, primary-energy MJ, ADPe mg Sb-eq) via
+:mod:`repro.core.impacts`; the carbon leg still goes through
+:func:`repro.core.carbon.total_carbon` unchanged, so the pre-PR meter is
+the bit-exact parity oracle (docs/METHODOLOGY.md#the-impact-ledger).
+
 Heterogeneous fleets meter PER SHARD: one CarbonMeter per shard at that
 shard's hardware profile × region CI, all sharing one ``SharedClock``
 (fleet wall time — shards run in parallel, so the diurnal clock advances
@@ -29,20 +35,28 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, Optional, Sequence, Union
 
-from repro.core.carbon import (CarbonBreakdown, DEFAULT_LIFETIME_YEARS,
-                               total_carbon)
+from repro.core.carbon import DEFAULT_LIFETIME_YEARS
 from repro.core.hardware import HardwareProfile
+from repro.core.impacts import MultiImpactBreakdown, ZoneFactors, price_energy, zone_of
 from repro.core.intensity import Region, ci_at_hour, get_region
 
 
 @dataclasses.dataclass
 class PhaseStats:
+    """Accumulated ledger of one phase: the paper's J + gCO2eq plus the
+    multi-criteria impacts (water L / primary MJ / ADPe mg Sb-eq) priced
+    by :mod:`repro.core.impacts`. Each criterion is an op+embodied total;
+    docs/METHODOLOGY.md#the-impact-ledger defines every column."""
+
     steps: int = 0
     tokens: float = 0.0
     time_s: float = 0.0
     energy_j: float = 0.0
     operational_g: float = 0.0
     embodied_g: float = 0.0
+    water_l: float = 0.0
+    primary_mj: float = 0.0
+    adpe_mg: float = 0.0
 
     @property
     def total_g(self) -> float:
@@ -60,6 +74,10 @@ class PhaseStats:
     def tokens_per_s(self) -> float:
         return self.tokens / max(self.time_s, 1e-12)
 
+    @property
+    def water_per_token(self) -> float:
+        return self.water_l / max(self.tokens, 1e-12)
+
     def add(self, other: "PhaseStats") -> "PhaseStats":
         self.steps += other.steps
         self.tokens += other.tokens
@@ -67,6 +85,9 @@ class PhaseStats:
         self.energy_j += other.energy_j
         self.operational_g += other.operational_g
         self.embodied_g += other.embodied_g
+        self.water_l += other.water_l
+        self.primary_mj += other.primary_mj
+        self.adpe_mg += other.adpe_mg
         return self
 
 
@@ -86,12 +107,18 @@ class CarbonMeter:
                  lifetime_years: float = DEFAULT_LIFETIME_YEARS,
                  n_devices: int = 1, use_diurnal_ci: bool = False,
                  clock: Optional[SharedClock] = None,
-                 advances_clock: bool = True):
+                 advances_clock: bool = True,
+                 zone: Optional[ZoneFactors] = None):
         self.profile = profile
         self.region = get_region(region) if isinstance(region, str) else region
         self.lifetime_years = lifetime_years
         self.n_devices = n_devices
         self.use_diurnal_ci = use_diurnal_ci
+        # electricity-mix zone for the water / primary-energy / ADPe legs;
+        # resolved from the region name by default. ZoneFactors.zero()
+        # degrades the ledger to the pre-PR gCO2+J meter bit for bit —
+        # carbon is priced by core.carbon regardless of the zone.
+        self.zone = zone if zone is not None else zone_of(self.region)
         self.phases: Dict[str, PhaseStats] = defaultdict(PhaseStats)
         # wall clock for diurnal CI: private by default; a fleet passes one
         # SharedClock to every shard meter (and advances it ITSELF, once
@@ -109,26 +136,31 @@ class CarbonMeter:
         self._clock.hours = hours
 
     def record(self, phase: str, tokens: float, time_s: float,
-               energy_j: float) -> CarbonBreakdown:
+               energy_j: float) -> MultiImpactBreakdown:
         if time_s < 0 or energy_j < 0 or tokens < 0:
             raise ValueError("meter inputs must be non-negative")
         region = self.region
         if self.use_diurnal_ci:
             ci = ci_at_hour(self.region, self.clock_hours % 24.0)
             region = dataclasses.replace(self.region, ci_g_per_kwh=ci)
-        cb = total_carbon(self.profile, energy_j, time_s, region,
-                          lifetime_years=self.lifetime_years, tokens=tokens,
-                          n_devices=self.n_devices)
+        # carbon leg unchanged (price_energy delegates to total_carbon with
+        # these exact arguments); the zone adds water / primary / ADPe
+        mi = price_energy(self.profile, energy_j, time_s, region,
+                          zone=self.zone, lifetime_years=self.lifetime_years,
+                          tokens=tokens, n_devices=self.n_devices)
         st = self.phases[phase]
         st.steps += 1
         st.tokens += tokens
         st.time_s += time_s
         st.energy_j += energy_j
-        st.operational_g += cb.operational_g
-        st.embodied_g += cb.embodied_g
+        st.operational_g += mi.operational_g
+        st.embodied_g += mi.embodied_g
+        st.water_l += mi.water_l
+        st.primary_mj += mi.primary_mj
+        st.adpe_mg += mi.adpe_mg
         if self.advances_clock:
             self._clock.hours += time_s / 3600.0
-        return cb
+        return mi
 
     def phase(self, name: str) -> PhaseStats:
         return self.phases[name]
@@ -155,6 +187,8 @@ class CarbonMeter:
                 f" t={st.time_s:9.3f}s  E={st.energy_j:10.1f}J"
                 f"  op={st.operational_g:9.4f}g  em={st.embodied_g:9.5f}g"
                 f"  g/tok={st.g_per_token:.3e}  J/tok={st.j_per_token:.3e}"
+                f"  H2O={st.water_l:.3e}L  PE={st.primary_mj:.3e}MJ"
+                f"  ADPe={st.adpe_mg:.3e}mg"
             )
         return "\n".join(lines)
 

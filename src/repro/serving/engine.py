@@ -231,6 +231,47 @@ def _prefill_phase_counts(workload, batch: int, seq: int,
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Every serving knob, single-device and fleet. Per-knob semantics are
+    commented inline below; this is the interaction map.
+
+    Capacity & batching: ``max_batch`` (decode slots, default 8) and
+    ``max_len`` (512) bound the contiguous cache; ``sync_every`` (8) sets
+    decode steps per host sync; ``prefill_min_bucket`` (8) the smallest
+    padded-prefill launch — prefill is metered at the padded launch but
+    attributed at true length (docs/METHODOLOGY.md#phase-attribution).
+
+    Accounting: ``profile`` ("t4"), ``region`` ("QC"),
+    ``lifetime_years`` (5.0), ``n_devices`` (1) feed the per-phase meter
+    — Eq. 2-4 carbon plus the PR 9 water/primary-energy/ADPe ledger
+    (docs/METHODOLOGY.md#the-impact-ledger); ``use_diurnal_ci`` (False)
+    swaps the flat Table 2 CI for the diurnal trace at the virtual
+    clock; ``carbon_budget_g_per_ktok`` (None) defers prefills above a
+    carbon rate (paper SS4, ROADMAP "carbon-budget admission").
+
+    KV memory ladder (each rung requires the previous): ``paged``
+    (False) + ``page_size`` (16) + ``num_pages`` (None = equal-memory)
+    enable the refcounted pool; ``prefill_chunk`` (None) requires paged
+    and enables the quantum scheduler (``prefill_pack`` (1) packs chunk
+    launches, metering-invariant); ``preemption`` (False) and
+    ``prefix_sharing`` (False) both require ``prefill_chunk``.
+
+    Front door (PR 6, enforced by AsyncServingServer but living here):
+    ``max_queue`` (None) + ``shed_policy`` ("reject_newest") bound
+    admission; ``pressure_clamp`` (None) degrades low-class budgets under
+    pressure; ``max_retries`` (3) bounds per-site fault retries before
+    FaultError — or a shard-down conversion on a fleet (PR 8);
+    ``tenant_quota`` (None) rate-limits per tenant at submit().
+
+    Fleet (ShardedServingEngine): ``shards`` (1), per-shard
+    ``shard_profiles`` / ``shard_regions`` (None = homogeneous),
+    ``routing`` ("free_pages"; "carbon" = marginal-gCO2 placement, exact
+    free-pages parity on a homogeneous fleet), and the deferral queue
+    ``defer_below_priority`` (None) / ``defer_horizon_h`` (24) /
+    ``defer_deadline_frac`` (0.5) — PR 7, ROADMAP "carbon-aware
+    routing". Token streams are invariant to every accounting and
+    placement knob; only grouping, attribution, and admission order may
+    move.
+    """
     max_batch: int = 8                 # decode slot count
     max_len: int = 512                 # cache allocation per slot
     profile: str = "t4"                # hardware the meter attributes to
@@ -1708,5 +1749,20 @@ class ServingEngine:
             "total_energy_j": t.energy_j,
             "total_carbon_g": t.total_g,
             "embodied_fraction": (t.embodied_g / t.total_g) if t.total_g else 0.0,
+        })
+        # multi-criteria impact ledger (PR 9): the same per-phase
+        # attribution priced in water / primary energy / ADPe —
+        # docs/METHODOLOGY.md#the-impact-ledger defines each column
+        out.update({
+            "total_water_l": t.water_l,
+            "total_primary_mj": t.primary_mj,
+            "total_adpe_mg": t.adpe_mg,
+            "prefill_water_l": pf.water_l,
+            "decode_water_l": dc.water_l,
+            "prefill_primary_mj": pf.primary_mj,
+            "decode_primary_mj": dc.primary_mj,
+            "prefill_adpe_mg": pf.adpe_mg,
+            "decode_adpe_mg": dc.adpe_mg,
+            "water_per_token_l": t.water_per_token,
         })
         return out

@@ -1487,10 +1487,25 @@ class ShardedServingEngine:
             "decode_tokens": dc.tokens,
             "prefill_j_per_token": pf.j_per_token,
             "decode_j_per_token": dc.j_per_token,
+            "prefill_g_per_token": pf.g_per_token,
+            "decode_g_per_token": dc.g_per_token,
             "total_energy_j": t.energy_j,
             "total_carbon_g": t.total_g,
             "embodied_fraction":
                 (t.embodied_g / t.total_g) if t.total_g else 0.0,
+            # multi-criteria impact ledger (PR 9) — fleet totals are the
+            # exact sum of the per-shard rows below
+            # (docs/METHODOLOGY.md#the-impact-ledger)
+            "total_water_l": t.water_l,
+            "total_primary_mj": t.primary_mj,
+            "total_adpe_mg": t.adpe_mg,
+            "prefill_water_l": pf.water_l,
+            "decode_water_l": dc.water_l,
+            "prefill_primary_mj": pf.primary_mj,
+            "decode_primary_mj": dc.primary_mj,
+            "prefill_adpe_mg": pf.adpe_mg,
+            "decode_adpe_mg": dc.adpe_mg,
+            "water_per_token_l": t.water_per_token,
         }
         if self.sharing:
             out.update({
@@ -1509,6 +1524,9 @@ class ShardedServingEngine:
             out[f"shard{s}_energy_j"] = st.energy_j
             out[f"shard{s}_carbon_g"] = st.total_g
             out[f"shard{s}_g_per_token"] = st.g_per_token
+            out[f"shard{s}_water_l"] = st.water_l
+            out[f"shard{s}_primary_mj"] = st.primary_mj
+            out[f"shard{s}_adpe_mg"] = st.adpe_mg
             out[f"shard{s}_dead"] = 1.0 if self.health.is_dead(s) else 0.0
         # shard-loss resilience: watchdog state + recovery counters
         out.update({

@@ -1,0 +1,226 @@
+"""Multi-criteria impact ledger: parity with the pre-PR carbon meter,
+linearity of the zone factors, Eq. 3-style embodied amortization, and
+exact fleet summation (ISSUE 9 acceptance criteria)."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.carbon import (DEFAULT_LIFETIME_YEARS, J_PER_KWH,
+                               SECONDS_PER_YEAR, total_carbon)
+from repro.core.hardware import get_profile
+from repro.core.impacts import (WORLD_ZONE, ZONES, MultiImpactBreakdown,
+                                ZoneFactors, embodied_impacts, price_energy,
+                                zone_of)
+from repro.core.intensity import REGIONS, get_region
+from repro.core.meter import CarbonMeter, FleetMeterView, SharedClock
+
+ADA = get_profile("rtx6000ada")
+T4 = get_profile("t4")
+
+
+# ---------------------------------------------------------------- zones
+
+def test_every_region_has_a_zone():
+    for name in REGIONS:
+        z = zone_of(name)
+        assert z.zone == name
+        assert z.water_l_per_kwh > 0
+        assert z.primary_mj_per_kwh > 0
+        assert z.adpe_mg_per_kwh > 0
+
+
+def test_zone_of_accepts_region_objects():
+    assert zone_of(get_region("QC")) is ZONES["QC"]
+
+
+def test_unknown_region_prices_at_world_average():
+    z = zone_of("ERCOT")
+    assert z.zone == "ERCOT"
+    assert z.water_l_per_kwh == WORLD_ZONE.water_l_per_kwh
+    assert z.primary_mj_per_kwh == WORLD_ZONE.primary_mj_per_kwh
+
+
+def test_cleaner_grid_has_lower_factors():
+    # hydro-heavy QC withdraws less water and burns less primary fuel per
+    # delivered kWh than coal/gas PACE — the ordering the paper's CI
+    # column already has must hold for the other criteria too
+    qc, pace = ZONES["QC"], ZONES["PACE"]
+    assert qc.water_l_per_kwh < pace.water_l_per_kwh
+    assert qc.primary_mj_per_kwh < pace.primary_mj_per_kwh
+
+
+# ------------------------------------------------------------- pricing
+
+def test_carbon_leg_is_bit_identical_to_total_carbon():
+    """The parity oracle: price_energy's CarbonBreakdown IS total_carbon."""
+    for region in REGIONS:
+        for e, t in ((1e5, 3.0), (2.5e6, 120.0), (0.0, 0.0)):
+            cb = total_carbon(ADA, e, t, region, tokens=50.0, n_devices=2)
+            mi = price_energy(ADA, e, t, region, tokens=50.0, n_devices=2)
+            assert mi.carbon == cb
+            assert mi.operational_g == cb.operational_g
+            assert mi.embodied_g == cb.embodied_g
+            assert mi.total_g == cb.total_g
+
+
+def test_zero_zone_degenerates_to_carbon_only():
+    mi = price_energy(ADA, 1e6, 60.0, "CISO", zone=ZoneFactors.zero())
+    assert mi.water_l == 0.0
+    assert mi.primary_mj == 0.0
+    assert mi.adpe_mg == 0.0
+    assert mi.total_g == total_carbon(ADA, 1e6, 60.0, "CISO").total_g
+
+
+def test_operational_legs_are_linear_in_energy():
+    a = price_energy(ADA, 1e6, 10.0, "CISO")
+    b = price_energy(ADA, 2e6, 10.0, "CISO")
+    assert b.operational_water_l == pytest.approx(2 * a.operational_water_l)
+    assert b.operational_primary_mj == pytest.approx(
+        2 * a.operational_primary_mj)
+    assert b.operational_adpe_mg == pytest.approx(2 * a.operational_adpe_mg)
+    kwh = 1e6 / J_PER_KWH
+    assert a.operational_water_l == pytest.approx(
+        kwh * ZONES["CISO"].water_l_per_kwh)
+
+
+def test_embodied_legs_amortize_like_eq3():
+    em = embodied_impacts(ADA)
+    t = 7200.0
+    mi = price_energy(ADA, 1e6, t, "QC", n_devices=3)
+    share = 3 * t / (DEFAULT_LIFETIME_YEARS * SECONDS_PER_YEAR)
+    assert mi.embodied_water_l == pytest.approx(share * em.water_l, rel=1e-12)
+    assert mi.embodied_primary_mj == pytest.approx(share * em.primary_mj,
+                                                   rel=1e-12)
+    assert mi.embodied_adpe_mg == pytest.approx(share * em.adpe_mg, rel=1e-12)
+
+
+def test_embodied_impacts_scale_with_die_and_memory():
+    small = embodied_impacts(T4)
+    big = embodied_impacts(ADA)
+    assert big.water_l > small.water_l
+    assert big.adpe_mg > small.adpe_mg
+    with pytest.raises(ValueError):
+        embodied_impacts(ADA, fab_yield=0.0)
+
+
+def test_infinite_energy_prices_to_infinity():
+    mi = price_energy(ADA, math.inf, 1.0, "QC")
+    assert math.isinf(mi.water_l) and math.isinf(mi.primary_mj)
+
+
+# --------------------------------------------------------------- meter
+
+def _pre_pr_phase_carbon(profile, region, events):
+    """What the pre-PR meter's per-phase accumulators held: raw
+    total_carbon sums, accumulated per phase in event order."""
+    acc = {}
+    for phase, tokens, t, e in events:
+        cb = total_carbon(profile, e, t, region, tokens=tokens)
+        op, em = acc.get(phase, (0.0, 0.0))
+        acc[phase] = (op + cb.operational_g, em + cb.embodied_g)
+    return acc
+
+
+EVENTS = [("prefill", 512.0, 0.8, 9.1e4), ("decode", 64.0, 1.9, 2.2e5),
+          ("recompute", 256.0, 0.4, 5.0e4), ("decode", 640.0, 8.0, 9.9e5)]
+
+
+def test_meter_carbon_bit_identical_and_ledger_accumulates():
+    m = CarbonMeter(ADA, "CISO")
+    for ev in EVENTS:
+        mi = m.record(*ev)
+        assert isinstance(mi, MultiImpactBreakdown)
+    # the pre-PR meter stored per-phase accumulators: compare those,
+    # bit for bit (== not approx)
+    for phase, (op, em) in _pre_pr_phase_carbon(ADA, "CISO", EVENTS).items():
+        assert m.phase(phase).operational_g == op
+        assert m.phase(phase).embodied_g == em
+    assert m.totals.water_l > 0
+    assert m.totals.primary_mj > 0
+    assert m.totals.adpe_mg > 0
+    # per-phase ledger sums to the totals exactly
+    for crit in ("water_l", "primary_mj", "adpe_mg"):
+        assert sum(getattr(st, crit) for st in m.phases.values()) == \
+            pytest.approx(getattr(m.totals, crit), abs=1e-12)
+
+
+def test_meter_zero_zone_is_the_pre_pr_meter():
+    m = CarbonMeter(ADA, "CISO", zone=ZoneFactors.zero())
+    for ev in EVENTS:
+        m.record(*ev)
+    for phase, (op, em) in _pre_pr_phase_carbon(ADA, "CISO", EVENTS).items():
+        assert m.phase(phase).operational_g == op
+        assert m.phase(phase).embodied_g == em
+    assert m.totals.water_l == 0.0
+    assert m.totals.primary_mj == 0.0
+    assert m.totals.adpe_mg == 0.0
+
+
+def test_meter_report_shows_ledger_columns():
+    m = CarbonMeter(ADA, "QC")
+    m.record("decode", 100.0, 1.0, 1e5)
+    rep = m.report()
+    assert "H2O=" in rep and "PE=" in rep and "ADPe=" in rep
+
+
+def test_diurnal_meter_keeps_zone_factors_static():
+    """Diurnal CI modulates the carbon leg only; the mix factors are 2023
+    annual averages and stay fixed across the day."""
+    clock = SharedClock()
+    m = CarbonMeter(CISO_profile := ADA, "CISO", use_diurnal_ci=True,
+                    clock=clock)
+    del CISO_profile
+    a = m.record("decode", 10.0, 1.0, 1e5)
+    clock.hours += 12.0
+    b = m.record("decode", 10.0, 1.0, 1e5)
+    assert a.operational_g != b.operational_g        # CI moved
+    assert a.operational_water_l == b.operational_water_l  # factor did not
+
+
+# --------------------------------------------------------------- fleet
+
+def _fleet():
+    clock = SharedClock()
+    meters = [
+        CarbonMeter(ADA, "PACE", clock=clock, advances_clock=False),
+        CarbonMeter(ADA, "CISO", clock=clock, advances_clock=False),
+        CarbonMeter(T4, "QC", clock=clock, advances_clock=False),
+        CarbonMeter(T4, "QC", clock=clock, advances_clock=False),
+    ]
+    return FleetMeterView(meters), meters
+
+
+def test_fleet_totals_sum_per_shard_exactly():
+    fleet, meters = _fleet()
+    for i, m in enumerate(meters):
+        for ev in EVENTS:
+            m.record(ev[0], ev[1] * (i + 1), ev[2], ev[3] * (i + 1))
+    for crit in ("operational_g", "embodied_g", "water_l", "primary_mj",
+                 "adpe_mg", "energy_j", "tokens", "time_s"):
+        shard_sum = sum(getattr(m.totals, crit) for m in meters)
+        assert abs(getattr(fleet.totals, crit) - shard_sum) <= 1e-12 * max(
+            1.0, abs(shard_sum)), crit
+    # per-phase too
+    for name, st in fleet.phases.items():
+        for crit in ("water_l", "primary_mj", "adpe_mg"):
+            shard_sum = sum(getattr(m.phases[name], crit) for m in meters
+                            if name in m.phases)
+            assert abs(getattr(st, crit) - shard_sum) <= 1e-12 * max(
+                1.0, abs(shard_sum))
+
+
+def test_degraded_fleet_redenominates_all_embodied_criteria():
+    fleet, meters = _fleet()
+    base = meters[0].record("decode", 100.0, 10.0, 1e6)
+    fleet.set_live([0, 1, 2])                 # shard 3 dies: 4/3 scaling
+    degraded = meters[0].record("decode", 100.0, 10.0, 1e6)
+    for crit in ("embodied_g", "embodied_water_l", "embodied_primary_mj",
+                 "embodied_adpe_mg"):
+        assert getattr(degraded, crit) == pytest.approx(
+            getattr(base, crit) * 4.0 / 3.0, rel=1e-12), crit
+    # operational legs don't re-denominate — only the rent does
+    assert degraded.operational_water_l == base.operational_water_l
+    fleet.set_live([0, 1, 2, 3])              # rejoin restores exactly
+    restored = meters[0].record("decode", 100.0, 10.0, 1e6)
+    assert restored.embodied_water_l == base.embodied_water_l

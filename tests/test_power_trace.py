@@ -1,0 +1,183 @@
+"""Power-trace ingestion: trapezoidal integration over the active window,
+idle tax, normalization, CSV round-trips, and synthetic-trace alignment
+(docs/METHODOLOGY.md#measured-power)."""
+import io
+import math
+
+import pytest
+
+from repro.core.energy import LLAMA_1B, decode_counts, prefill_counts, step_energy
+from repro.core.hardware import get_profile
+from repro.core.power_trace import (ActiveWindow, PowerTrace, SegmentPlan,
+                                    normalized, synthesize_trace)
+
+ADA = get_profile("rtx6000ada")
+
+
+# --------------------------------------------------------------- windows
+
+def test_active_window_from_requests_is_min_start_max_end():
+    w = ActiveWindow.from_requests([10.0, 12.0, 11.0], [5.0, 1.0, 30.0])
+    assert w.t0 == 10.0
+    assert w.t1 == 41.0
+    assert w.contains(10.0) and w.contains(41.0) and not w.contains(41.1)
+
+
+def test_active_window_rejects_bad_input():
+    with pytest.raises(ValueError):
+        ActiveWindow(5.0, 4.0)
+    with pytest.raises(ValueError):
+        ActiveWindow.from_requests([], [])
+    with pytest.raises(ValueError):
+        ActiveWindow.from_requests([1.0], [1.0, 2.0])
+
+
+# ----------------------------------------------------------- integration
+
+def test_constant_power_integrates_exactly():
+    # 100 W for one hour = 100 Wh, trapezoid is exact on a constant
+    tr = PowerTrace([0.0, 1800.0, 3600.0], [100.0, 100.0, 100.0])
+    assert tr.energy_wh() == pytest.approx(100.0)
+    assert tr.energy_j() == pytest.approx(100.0 * 3600.0)
+
+
+def test_linear_ramp_integrates_exactly():
+    # trapezoid is exact on a linear ramp too: mean 50 W over 1 h = 50 Wh
+    tr = PowerTrace([0.0, 3600.0], [0.0, 100.0])
+    assert tr.energy_wh() == pytest.approx(50.0)
+
+
+def test_window_restricts_integration():
+    tr = PowerTrace([0.0, 10.0, 20.0, 30.0, 40.0],
+                    [100.0, 100.0, 100.0, 100.0, 100.0])
+    half = tr.energy_wh(ActiveWindow(10.0, 30.0))
+    assert half == pytest.approx(100.0 * 20.0 / 3600.0)
+    assert tr.energy_wh(ActiveWindow(100.0, 200.0)) == 0.0
+
+
+def test_fewer_than_two_samples_is_zero_not_extrapolated():
+    assert PowerTrace([], []).energy_wh() == 0.0
+    assert PowerTrace([5.0], [300.0]).energy_wh() == 0.0
+    tr = PowerTrace([0.0, 10.0, 20.0], [100.0, 100.0, 100.0])
+    # window catches exactly one sample
+    assert tr.energy_wh(ActiveWindow(9.0, 11.0)) == 0.0
+
+
+def test_trace_validates_samples():
+    with pytest.raises(ValueError):
+        PowerTrace([0.0, 0.0], [1.0, 1.0])          # non-increasing
+    with pytest.raises(ValueError):
+        PowerTrace([0.0, 1.0], [1.0, -2.0])         # negative watts
+    with pytest.raises(ValueError):
+        PowerTrace([0.0, 1.0], [1.0, math.nan])     # non-finite
+    with pytest.raises(ValueError):
+        PowerTrace([0.0], [1.0, 2.0])               # length mismatch
+
+
+# -------------------------------------------------------------- idle tax
+
+def _padded_trace():
+    # 60 W idle for 10 s, 300 W active strictly inside (10, 20), 60 W
+    # idle for 10 s — boundary samples at t=10/20 read idle, so the
+    # before/active/after windows partition the trapezoids exactly
+    ts = [float(i) for i in range(0, 31, 2)]
+    ws = [300.0 if 10 < t < 20 else 60.0 for t in ts]
+    return PowerTrace(ts, ws), ActiveWindow(10.0, 20.0)
+
+
+def test_idle_tax_series_integrates_outside_segments():
+    tr, w = _padded_trace()
+    total = tr.energy_wh()
+    active = tr.energy_wh(w)
+    tax = tr.idle_tax_wh(w, mode="series")
+    assert tax == pytest.approx(2 * (60.0 * 10.0 / 3600.0))
+    # the boundary sample belongs to both the tax and active windows as
+    # an endpoint, so the three windows conserve the total exactly
+    assert tax + active == pytest.approx(total)
+
+
+def test_idle_tax_baseline_uses_median_outside_power():
+    tr, w = _padded_trace()
+    assert tr.baseline_w(w) == 60.0
+    tax = tr.idle_tax_wh(w, mode="baseline")
+    assert tax == pytest.approx(60.0 * 20.0 / 3600.0)
+    with pytest.raises(ValueError):
+        tr.idle_tax_wh(w, mode="nonsense")
+
+
+# ---------------------------------------------------------- normalization
+
+def test_normalized_per_request_and_per_1k_tokens():
+    n = normalized(10.0, 4, 2000.0)
+    assert n["wh_per_request_active"] == pytest.approx(2.5)
+    assert n["wh_per_1k_tokens_active"] == pytest.approx(5.0)
+
+
+def test_normalized_missing_denominators_yield_none():
+    n = normalized(10.0, 0, None)
+    assert n["wh_per_request_active"] is None
+    assert n["wh_per_1k_tokens_active"] is None
+    with pytest.raises(ValueError):
+        normalized(1.0, -1, None)
+
+
+# ------------------------------------------------------------------- csv
+
+def test_csv_round_trip(tmp_path):
+    tr = PowerTrace([0.0, 1.5, 3.0], [50.0, 120.0, 80.0])
+    path = tmp_path / "trace.csv"
+    tr.to_csv(path)
+    back = PowerTrace.from_csv(path)
+    assert back.t_s == tr.t_s
+    assert back.watts == tr.watts
+
+
+def test_csv_accepts_alternative_headers_and_skips_bad_rows():
+    src = io.StringIO(
+        "ts_s,power_w,extra\n0.0,100.0,x\n1.0,,x\n2.0,nope,x\n3.0,200.0,x\n")
+    tr = PowerTrace.from_csv(src)
+    assert tr.t_s == (0.0, 3.0)
+    assert tr.watts == (100.0, 200.0)
+
+
+def test_csv_rejects_missing_columns():
+    with pytest.raises(ValueError):
+        PowerTrace.from_csv(io.StringIO("a,b\n1,2\n"))
+
+
+# ------------------------------------------------------------- synthesis
+
+def test_synthesized_trace_matches_the_model_it_sampled():
+    plan = [SegmentPlan("prefill", prefill_counts(LLAMA_1B, 8, 512), 20),
+            SegmentPlan("decode", decode_counts(LLAMA_1B, 8, 600), 1000)]
+    tr, segs = synthesize_trace(ADA, plan, interval_s=0.02, pad_s=3.0)
+    assert [s.phase for s in segs] == ["prefill", "decode"]
+    # trace integral over each labeled window ~ the model's energy
+    for seg, sp in zip(segs, plan):
+        modeled_wh = step_energy(ADA, sp.counts).energy_wh * sp.n_steps
+        measured_wh = tr.energy_wh(seg.window)
+        assert measured_wh == pytest.approx(modeled_wh, rel=0.05)
+    # the padding really is idle
+    w = ActiveWindow(segs[0].t0, segs[-1].t1)
+    assert tr.baseline_w(w) == pytest.approx(ADA.idle_w)
+    # and the idle tax prices it: pad_s at idle_w on both ends
+    assert tr.idle_tax_wh(w, mode="baseline") == pytest.approx(
+        ADA.idle_w * 6.0 / 3600.0, rel=0.1)
+
+
+def test_synthesize_rejects_infeasible_and_bad_args():
+    import numpy as np
+    huge = decode_counts(LLAMA_1B, 100000, 100000)
+    with pytest.raises(ValueError):
+        synthesize_trace(ADA, [SegmentPlan("decode", huge)])
+    small = [SegmentPlan("decode", decode_counts(LLAMA_1B, 1, 10))]
+    with pytest.raises(ValueError):
+        synthesize_trace(ADA, small, interval_s=0.0)
+    with pytest.raises(ValueError):
+        synthesize_trace(ADA, small, noise_frac=0.1, rng=None)
+    with pytest.raises(ValueError):
+        SegmentPlan("decode", decode_counts(LLAMA_1B, 1, 10), n_steps=0)
+    # noise path works when an rng is supplied
+    tr, _ = synthesize_trace(ADA, small, noise_frac=0.05,
+                             rng=np.random.default_rng(0))
+    assert len(tr) > 0

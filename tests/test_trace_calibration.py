@@ -1,0 +1,72 @@
+"""Measured-power calibration: fitting HardwareProfile power knobs against
+a synthetic trace recovers the generating profile's energy within 5% and
+reports per-phase residuals (ISSUE 9 acceptance criterion)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.calibrate import (POWER_TRACE_SPACE, TraceCalibration,
+                                  fit_power_trace, trace_loss)
+from repro.core.energy import LLAMA_1B, decode_counts, prefill_counts
+from repro.core.hardware import get_profile
+from repro.core.power_trace import SegmentPlan, synthesize_trace
+
+TRUTH = get_profile("rtx6000ada")
+
+PLAN = [SegmentPlan("prefill", prefill_counts(LLAMA_1B, 8, 512), 40),
+        SegmentPlan("decode", decode_counts(LLAMA_1B, 8, 600), 2000)]
+
+
+def _trace(noise=0.02, seed=0):
+    rng = np.random.default_rng(seed)
+    return synthesize_trace(TRUTH, PLAN, interval_s=0.05, pad_s=5.0,
+                            noise_frac=noise, rng=rng)
+
+
+def _wrong_start():
+    return dataclasses.replace(
+        TRUTH, idle_w=TRUTH.idle_w * 2.0, power_alpha=TRUTH.power_alpha * 0.6,
+        eff_compute=TRUTH.eff_compute * 0.7, eff_memory=TRUTH.eff_memory * 0.8)
+
+
+def test_truth_profile_has_near_zero_loss():
+    tr, segs = _trace(noise=0.0)
+    assert trace_loss(TRUTH, tr, segs) < 1e-3
+    assert trace_loss(_wrong_start(), tr, segs) > 0.1
+
+
+def test_fit_recovers_energy_within_5_percent():
+    tr, segs = _trace()
+    cal = fit_power_trace(tr, segs, base=_wrong_start(), seed=1)
+    assert isinstance(cal, TraceCalibration)
+    assert abs(cal.energy_error_frac) < 0.05
+    # per-phase residuals are reported for every phase in the trace
+    assert [r.phase for r in cal.residuals] == ["prefill", "decode"]
+    for r in cal.residuals:
+        assert r.measured_wh > 0 and r.modeled_wh > 0
+        assert abs(r.energy_error_frac) < 0.10
+        assert abs(r.time_error_frac) < 0.10
+    # fitted knobs stay inside the declared search space
+    for field, lo, hi, _ in POWER_TRACE_SPACE:
+        assert lo <= getattr(cal.profile, field) <= hi
+
+
+def test_fit_improves_on_the_starting_profile():
+    tr, segs = _trace()
+    start = _wrong_start()
+    cal = fit_power_trace(tr, segs, base=start, seed=2)
+    assert cal.loss < trace_loss(start, tr, segs)
+
+
+def test_report_is_human_readable():
+    tr, segs = _trace()
+    cal = fit_power_trace(tr, segs, base=TRUTH, n_random=10, n_refine=10)
+    rep = cal.report()
+    assert "prefill" in rep and "decode" in rep and "Wh" in rep
+
+
+def test_fit_requires_segments():
+    tr, _ = _trace()
+    with pytest.raises(ValueError):
+        fit_power_trace(tr, [], base=TRUTH)
