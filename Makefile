@@ -2,9 +2,10 @@ PY := python
 export PYTHONPATH := src:.
 
 .PHONY: test test-all kernels paged chunked prefix sharded server hetero \
-	resilience impacts docs check-clean verify bench-engine \
+	resilience migrate impacts docs check-clean verify bench-engine \
 	bench-engine-sharded bench-engine-server bench-engine-hetero \
-	bench-engine-resilience bench-engine-impacts bench-smoke bench
+	bench-engine-resilience bench-engine-migration bench-engine-impacts \
+	bench-smoke bench
 
 test:               ## tier-1 suite (fail fast: local inner loop)
 	$(PY) -m pytest -x -q
@@ -49,6 +50,11 @@ resilience:         ## shard-loss watchdog + evacuation + rejoin (4 forced host 
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) -m pytest -q tests/test_shard_loss.py
 
+# live-migration suite exercises cross-shard page copies on the same mesh
+migrate:            ## live KV-page migration: drain + brownout caps (4 forced host devices)
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest -q tests/test_migration.py
+
 impacts:            ## multi-criteria impact ledger + power-trace + calibration suites
 	$(PY) -m pytest -q tests/test_impacts.py tests/test_power_trace.py \
 	    tests/test_trace_calibration.py
@@ -65,7 +71,7 @@ check-clean:        ## fail if compiled artifacts are tracked by git
 	    echo "tracked compiled artifacts:"; echo "$$bad"; exit 1; \
 	fi
 
-verify: check-clean test kernels paged chunked prefix sharded server hetero resilience impacts docs ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero + resilience + impacts + docs sweeps
+verify: check-clean test kernels paged chunked prefix sharded server hetero resilience migrate impacts docs ## tier-1 plus interpret-mode kernel + paged + chunked + prefix + sharded + server + hetero + resilience + migrate + impacts + docs sweeps
 
 bench-engine:       ## fused vs seed serving hot path -> BENCH_engine.json
 	$(PY) benchmarks/engine_bench.py
@@ -89,6 +95,10 @@ bench-engine-hetero: ## merge a 4-device hetero carbon-routing section into BENC
 bench-engine-resilience: ## merge a 4-device shard-loss resilience section into BENCH_engine.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) benchmarks/engine_bench.py --resilience-only
+
+bench-engine-migration: ## merge a 4-device live KV-page migration section into BENCH_engine.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) benchmarks/engine_bench.py --migration-only
 
 bench-engine-impacts: ## merge a 4-device impact-ledger + calibration section into BENCH_engine.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \

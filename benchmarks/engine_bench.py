@@ -16,7 +16,11 @@ capacity-greedy free-pages placement — and compares fleet gCO2/token at
 fixed aggregate pool bytes. The ``resilience`` section kills 1 of 4
 shards mid-trace and checks token parity vs a fail-free fleet, separate
 recompute-phase metering, and degraded throughput vs a native 3-shard
-baseline. Writes ``BENCH_engine.json``; ``--smoke`` (CI) runs every
+baseline. The ``migration`` section gracefully drains a shard mid-trace
+by live KV-page migration and compares its recompute bill (zero J — the
+copy is metered to the separate migrate phase) against fold-based
+evacuation on the same trace, both token-identical to an undisturbed
+oracle. Writes ``BENCH_engine.json``; ``--smoke`` (CI) runs every
 code path once at reduced size and writes ``BENCH_engine_smoke.json``
 instead, so the committed numbers are never clobbered by a shared runner.
 
@@ -674,6 +678,122 @@ def _resilience_criteria(d: Dict) -> Dict:
     }
 
 
+def _bench_migration(model, params, max_len: int, page_size: int = 16,
+                     shards: int = 4, chunk: int = 32,
+                     smoke: bool = False) -> Dict:
+    """Gracefully drain 1 of ``shards`` shards mid-trace by LIVE KV-page
+    migration and compare against fold-based evacuation (an unreachable
+    kill at the same quantum) on the identical workload, plus an
+    undisturbed oracle (at --xla_force_host_platform_device_count=4):
+
+    * token parity — both the drained and the folded run complete every
+      request with token streams bit-identical to the undisturbed fleet
+      (greedy decode depends only on context);
+    * the drained run's in-flight work moves by page copy, so its
+      recompute phase stays at ZERO joules — the copy energy lands in
+      the separate ``migrate`` phase on both endpoints — while the fold
+      path re-spends real prefill energy as ``recompute``;
+    * the headline acceptance ratio: fold-based evacuation spends at
+      least 5x the recompute J of drain-based migration on this trace.
+    """
+    if jax.device_count() < shards:
+        return {"skipped":
+                f"needs {shards} host devices, have {jax.device_count()}: "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{shards} before the first jax import"}
+    n_req = (2 if smoke else 4) * shards
+    max_new = 17 if smoke else 33
+    target, admin_q = shards - 1, 3
+    kw = dict(max_batch=BATCH, max_len=max_len, sync_every=4, paged=True,
+              page_size=page_size, prefill_chunk=chunk, preemption=True,
+              shards=shards)
+
+    def timed(mode):
+        eng = ShardedServingEngine(model, params, EngineConfig(**kw))
+        for r in _workload(n_req, max_new):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        if mode != "none":
+            for _ in range(admin_q):
+                eng.step()
+            if mode == "drain":
+                eng.drain(target)
+            else:                       # unreachable kill: the fold path
+                eng.fail_shard(target, reachable=False)
+        eng.run()
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        tokens = {rid: tuple(resp.tokens)
+                  for rid, resp in eng.responses.items() if not resp.rejected}
+        return {
+            "wall_s": dt,
+            "requests_per_s": len(tokens) / dt,
+            "recompute_j": st["preempted_recompute_j"],
+            "migrate_j": st["migrate_j"],
+            "migrations": st["migrations"],
+            "migrated_pages": st["migrated_pages"],
+            "drain_events": st["drain_events"],
+            "shard_down_events": st["shard_down_events"],
+            "live_shards": st["live_shards"],
+        }, tokens
+
+    for mode in ("none", "drain", "fold"):   # compile all three programs
+        timed(mode)
+
+    def median(mode):
+        runs = sorted((timed(mode) for _ in range(max(REPEATS, 3))),
+                      key=lambda r: r[0]["requests_per_s"])
+        return runs[len(runs) // 2]
+
+    undisturbed, oracle = median("none")
+    drained, got_drain = median("drain")
+    folded, got_fold = median("fold")
+    eps = 1e-9
+    return {
+        "shards": shards, "drain_shard": target, "drain_quantum": admin_q,
+        "n_requests": n_req, "max_new_tokens": max_new,
+        "undisturbed": undisturbed, "drained": drained, "folded": folded,
+        "drain_tokens_match_oracle": got_drain == oracle,
+        "fold_tokens_match_oracle": got_fold == oracle,
+        "drain_recompute_j": drained["recompute_j"],
+        "fold_recompute_j": folded["recompute_j"],
+        # the headline: J of state re-derivation the page copy avoided,
+        # per J of recompute the drain still spent (0 when every slot
+        # migrated — the epsilon keeps the ratio finite)
+        "fold_over_drain_recompute_ratio":
+            (folded["recompute_j"] + eps)
+            / (drained["recompute_j"] + eps),
+    }
+
+
+def _migration_criteria(d: Dict) -> Dict:
+    if "skipped" in d:
+        return {}
+    return {
+        # the drain really moved live pages and emptied the shard into
+        # the shard-down machinery
+        "migration_drain_fired_and_emptied_shard":
+            d["drained"]["drain_events"] == 1
+            and d["drained"]["migrations"] >= 1
+            and d["drained"]["live_shards"] == d["shards"] - 1,
+        # both disturbance modes are token-invisible vs the undisturbed
+        # fleet on the same trace
+        "migration_drain_token_identical_to_oracle":
+            d["drain_tokens_match_oracle"],
+        "migration_fold_token_identical_to_oracle":
+            d["fold_tokens_match_oracle"],
+        # page migration is recompute-FREE: the copy is metered under the
+        # separate migrate phase, the recompute phase stays at zero
+        "migration_drain_zero_recompute_j":
+            d["drain_recompute_j"] == 0.0
+            and d["drained"]["migrate_j"] > 0.0,
+        # the acceptance ratio: fold-based evacuation re-spends >= 5x the
+        # recompute energy that drain-based migration avoids
+        "migration_drain_ge_5x_less_recompute_than_fold":
+            d["fold_over_drain_recompute_ratio"] >= 5.0,
+    }
+
+
 def _time_seed(model, params, reqs, max_len: int) -> Dict:
     eng = SeedEngine(model, params, max_batch=BATCH, max_len=max_len)
     for r in reqs:
@@ -1144,6 +1264,7 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     server = _bench_server(model, params, smoke=smoke)
     hetero = _bench_hetero(model, params, smoke=smoke)
     resilience = _bench_resilience(model, params, max_len, smoke=smoke)
+    migration = _bench_migration(model, params, max_len, smoke=smoke)
     impacts = _bench_impacts(model, params, smoke=smoke)
     speedup = fused["decode_steps_per_s"] / seed["decode_steps_per_s"]
     out = {
@@ -1151,7 +1272,8 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
         "requests": n_requests, "max_new_tokens": max_new,
         "seed": seed, "fused": fused, "paged": paged, "chunked": chunked,
         "prefix": prefix, "sharded": sharded, "server": server,
-        "hetero": hetero, "resilience": resilience, "impacts": impacts,
+        "hetero": hetero, "resilience": resilience,
+        "migration": migration, "impacts": impacts,
         "decode_steps_per_s_speedup": speedup,
         "criteria": {
             "fused_ge_2x_decode_steps_per_s": speedup >= 2.0,
@@ -1192,6 +1314,7 @@ def bench(variant: str = "smoke", n_requests: int = N_REQUESTS,
     out["criteria"].update(_server_criteria(server))
     out["criteria"].update(_hetero_criteria(hetero))
     out["criteria"].update(_resilience_criteria(resilience))
+    out["criteria"].update(_migration_criteria(migration))
     out["criteria"].update(_impacts_criteria(impacts))
     return out
 
@@ -1273,6 +1396,12 @@ def main():
                          "platform_device_count=4) and merge it into the "
                          "existing output JSON — same two-pass flow as "
                          "--sharded-only / --hetero-only")
+    ap.add_argument("--migration-only", action="store_true",
+                    help="re-measure ONLY the live KV-page migration "
+                         "section (run under XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=4) and merge it into the "
+                         "existing output JSON — same two-pass flow as "
+                         "--sharded-only / --resilience-only")
     ap.add_argument("--impacts-only", action="store_true",
                     help="re-measure ONLY the multi-criteria impact "
                          "ledger + power-calibration section (run under "
@@ -1347,6 +1476,27 @@ def main():
         res["criteria"] = {k: v for k, v in res["criteria"].items()
                            if not k.startswith("resilience_")}
         res["criteria"].update(_resilience_criteria(res["resilience"]))
+    elif args.migration_only:
+        with open(args.out) as f:
+            res = json.load(f)
+        if res.get("variant") != args.variant:
+            raise SystemExit(
+                f"--migration-only: {args.out} holds variant "
+                f"{res.get('variant')!r}, refusing to merge a "
+                f"{args.variant!r} migration section into it")
+        cfg = llama_paper.make(args.variant, "llama-paper-1b")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 128 if args.variant == "smoke" else 512
+        migration = _bench_migration(model, params, max_len,
+                                     smoke=args.smoke)
+        if "skipped" in migration:
+            # never clobber committed measurements with a skip stub
+            raise SystemExit(f"--migration-only: {migration['skipped']}")
+        res["migration"] = migration
+        res["criteria"] = {k: v for k, v in res["criteria"].items()
+                           if not k.startswith("migration_")}
+        res["criteria"].update(_migration_criteria(res["migration"]))
     elif args.impacts_only:
         with open(args.out) as f:
             res = json.load(f)
@@ -1386,6 +1536,7 @@ def main():
                     smoke=args.smoke)
         if "skipped" in res["sharded"] or "skipped" in res["hetero"] \
                 or "skipped" in res["resilience"] \
+                or "skipped" in res["migration"] \
                 or "skipped" in res["impacts"]:
             # pass 1 of the two-pass flow runs without forced host devices:
             # keep existing MEASURED 4-device sections (and their criteria)
@@ -1400,6 +1551,7 @@ def main():
             for section, crit in (("sharded", _sharded_criteria),
                                   ("hetero", _hetero_criteria),
                                   ("resilience", _resilience_criteria),
+                                  ("migration", _migration_criteria),
                                   ("impacts", _impacts_criteria)):
                 if "skipped" not in res[section]:
                     continue

@@ -12,8 +12,9 @@ from admission, which is exactly what queueing delay corrupts).
 Three pieces:
 
   * trace builders — ``poisson_trace`` (steady background arrivals),
-    ``bursty_trace`` (clustered spikes), and ``diurnal_trace`` (arrival
-    rate phase-locked to a region's CI trace), all returning arrival
+    ``bursty_trace`` (clustered spikes), ``diurnal_trace`` (arrival
+    rate phase-locked to a region's CI trace), and ``measured_trace``
+    (replay of a real request log from CSV), all returning arrival
     seconds, all deterministic under a seeded rng;
   * ``mixed_requests`` — turns a trace into request SPECS (plain dicts,
     not ``Request`` objects: the engine mutates requests in place on
@@ -97,6 +98,117 @@ def diurnal_trace(rate_per_s: float, n: int, rng, *, region: str = "CISO",
         if rng.uniform() < lam / peak:
             out.append(t)
     return out
+
+
+def measured_trace(path, n: Optional[int] = None,
+                   scale: float = 1.0) -> List[float]:
+    """Arrival seconds replayed from a MEASURED trace CSV — the same
+    interface as the synthetic builders (a sorted list of arrival
+    seconds), so any bench or test swaps a real workload in for
+    ``poisson``/``bursty``/``diurnal`` without code changes.
+
+    The CSV needs one arrival-time column — ``arrival_s`` (seconds) or
+    ``timestamp`` (absolute seconds or ISO-8601, e.g. production access
+    logs) — header names case-insensitive, extra columns ignored.
+    Arrivals are normalized to start at 0 and sorted (logs are rarely
+    clean); ``scale`` stretches/compresses replay time (0.5 = twice as
+    fast — benches compress hours into seconds); ``n`` truncates to the
+    first n arrivals."""
+    rows = _read_trace_csv(path)
+    t = sorted(r["arrival_s"] for r in rows)
+    if not t:
+        raise ValueError(f"measured trace {path!r} has no arrivals")
+    t0 = t[0]
+    out = [(x - t0) * scale for x in t]
+    return out[:n] if n is not None else out
+
+
+def measured_requests(path, rng, *, max_new_tokens: int = 8,
+                      priority: int = 0,
+                      deadline_s: Optional[float] = None, rid0: int = 0,
+                      vocab: int = 256, scale: float = 1.0,
+                      n: Optional[int] = None) -> List[Spec]:
+    """Request specs replayed from a measured trace CSV: arrivals from
+    the timestamp column, per-request prompt/output lengths from
+    ``prompt_len``/``input_tokens`` and ``output_tokens``/
+    ``max_new_tokens`` columns when present (token CONTENT is synthetic
+    — logs record lengths, not text — drawn from ``rng`` so replays are
+    deterministic under a seed). Missing length columns fall back to
+    ``mixed_requests`` defaults; same Spec-dict contract (fresh
+    ``Request`` objects per serve pass)."""
+    rows = _read_trace_csv(path)
+    rows.sort(key=lambda r: r["arrival_s"])
+    if n is not None:
+        rows = rows[:n]
+    if not rows:
+        raise ValueError(f"measured trace {path!r} has no arrivals")
+    t0 = rows[0]["arrival_s"]
+    out: List[Spec] = []
+    for i, r in enumerate(rows):
+        lo, hi = 6, 16
+        plen = int(r.get("prompt_len") or rng.integers(lo, hi + 1))
+        mnew = int(r.get("output_tokens") or max_new_tokens)
+        out.append(dict(
+            arrival_s=float((r["arrival_s"] - t0) * scale),
+            rid=rid0 + i,
+            prompt=[int(x) for x in rng.integers(1, vocab,
+                                                 max(plen, 1))],
+            max_new_tokens=max(mnew, 1), priority=priority,
+            deadline_s=deadline_s))
+    return out
+
+
+_ARRIVAL_COLS = ("arrival_s", "timestamp", "arrival", "time_s")
+_PROMPT_COLS = ("prompt_len", "input_tokens", "prompt_tokens")
+_OUTPUT_COLS = ("output_tokens", "max_new_tokens", "decode_tokens")
+
+
+def _read_trace_csv(path) -> List[Dict]:
+    """Parse a measured-trace CSV into per-row dicts with ``arrival_s``
+    (float seconds) and optional ``prompt_len``/``output_tokens``.
+    Headers match case-insensitively against the known aliases; ISO-8601
+    timestamps are converted to epoch seconds."""
+    import csv
+    import datetime
+
+    def pick(fields: Dict[str, str], names) -> Optional[str]:
+        for name in names:
+            if name in fields:
+                return fields[name]
+        return None
+
+    def to_seconds(raw: str) -> float:
+        try:
+            return float(raw)
+        except ValueError:
+            return datetime.datetime.fromisoformat(
+                raw.replace("Z", "+00:00")).timestamp()
+
+    rows: List[Dict] = []
+    with open(path, newline="") as fh:
+        reader = csv.DictReader(fh)
+        if reader.fieldnames is None:
+            raise ValueError(f"measured trace {path!r} has no header row")
+        fields = {name.strip().lower(): name
+                  for name in reader.fieldnames if name}
+        at_col = pick(fields, _ARRIVAL_COLS)
+        if at_col is None:
+            raise ValueError(
+                f"measured trace {path!r} needs an arrival column "
+                f"(one of {_ARRIVAL_COLS}); got {reader.fieldnames}")
+        p_col = pick(fields, _PROMPT_COLS)
+        o_col = pick(fields, _OUTPUT_COLS)
+        for row in reader:
+            raw = (row.get(at_col) or "").strip()
+            if not raw:
+                continue
+            rec: Dict = {"arrival_s": to_seconds(raw)}
+            if p_col and (row.get(p_col) or "").strip():
+                rec["prompt_len"] = int(float(row[p_col]))
+            if o_col and (row.get(o_col) or "").strip():
+                rec["output_tokens"] = int(float(row[o_col]))
+            rows.append(rec)
+    return rows
 
 
 def mixed_requests(arrivals: Sequence[float], rng, *,

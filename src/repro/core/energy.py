@@ -167,6 +167,20 @@ def decode_counts(w: LLMWorkload, batch: int, context: float) -> StepCounts:
                       kv_bytes=kv_read)
 
 
+def migrate_counts(w: LLMWorkload, kv_tokens: float) -> StepCounts:
+    """One KV-page migration hop: ``kv_tokens`` tokens of cache leave one
+    pool and land in another. Pure data movement — zero FLOPs (so
+    ``step_power`` prices it at idle draw), the KV bytes crossing HBM on
+    each side, and the same bytes on the interconnect (``collective_bytes``
+    routes through the slice's ``ici_bw`` when set). ``tokens`` carries the
+    migrated token count for per-token accounting in the ``migrate`` phase;
+    ``compute_tokens`` stays 0 so utilization-ramp heuristics ignore it."""
+    b = max(kv_tokens, 0.0) * w.kv_bytes_per_token
+    return StepCounts(flops=0.0, hbm_bytes=b, working_set_bytes=b,
+                      tokens=float(max(kv_tokens, 0.0)),
+                      collective_bytes=b, compute_tokens=0.0, kv_bytes=b)
+
+
 # ---------------------------------------------------------------------------
 # Time / power / energy model
 # ---------------------------------------------------------------------------

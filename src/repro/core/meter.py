@@ -8,13 +8,17 @@ device profile — giving the paper's per-token, per-phase breakdowns
 (Figures 2–6) live, per request class, in production.
 
 Phase names are open-ended (``phases`` is a defaultdict); the serving
-engines use three: ``"prefill"`` and ``"decode"`` for ordinary work, and
-``"recompute"`` for the resume prefill of a PREEMPTED request. Keeping
-recompute out of the prefill bucket makes the prefill/decode J-per-token
-figures — and every non-preempted request's attributed energy — invariant
-to the preemption policy, while the recompute phase totals the true
-energy price of preemption (the engine also surfaces it per request as
-``Response.recompute_j`` and fleet-wide as ``preempted_recompute_j``).
+engines use four: ``"prefill"`` and ``"decode"`` for ordinary work,
+``"recompute"`` for the resume prefill of a PREEMPTED request, and
+``"migrate"`` for live KV-page copies between shards (drain, reachable
+evacuation, power-cap shedding). Keeping recompute and migrate out of
+the prefill/decode buckets makes the per-phase J-per-token figures — and
+every undisturbed request's attributed energy — invariant to the
+preemption and migration policies, while each phase totals the true
+energy price of its mechanism (the engine also surfaces them per request
+as ``Response.recompute_j`` and fleet-wide as ``preempted_recompute_j``
+/ ``migrate_j``). A migrate record is charged on BOTH endpoints of the
+copy — each shard's meter prices its own side at its own profile/CI.
 
 Since PR 9 every record is priced across the FOUR criteria of the impact
 ledger (gCO2eq, water L, primary-energy MJ, ADPe mg Sb-eq) via

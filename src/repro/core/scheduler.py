@@ -30,7 +30,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.carbon import (DEFAULT_LIFETIME_YEARS, amortized_embodied_g,
                                operational_carbon_g, total_carbon)
 from repro.core.energy import (EnergyReport, LLMWorkload, decode_report,
-                               prefill_report, prompt_report)
+                               migrate_counts, prefill_report, prompt_report,
+                               step_energy)
 from repro.core.hardware import HardwareProfile
 from repro.core.intensity import Region, ci_at_hour, get_region
 
@@ -136,6 +137,23 @@ def marginal_request_g(sl: FleetSlice, w: LLMWorkload, prefill_tokens: float,
                                              sl.lifetime_years)
             * max(min(resv_frac, 1.0), 0.0))
     return op_g + em_g, t_est
+
+
+def migration_cost_g(sl: FleetSlice, w: LLMWorkload, kv_tokens: float,
+                     ci: Optional[float] = None) -> Tuple[float, float]:
+    """gCO2 of landing ``kv_tokens`` of migrated KV cache on slice ``sl``
+    — the destination tie-break of live page migration.
+
+    Operational only: a page copy is a one-shot transfer, not a service
+    window, so it rents no embodied share (the migrating request's rent
+    moves with its reservation and is already priced by
+    :func:`marginal_request_g` at admission). Priced at the CURRENT
+    carbon intensity ``ci`` (default: the region's flat mean).
+
+    Returns ``(carbon_g, copy_time_s)``."""
+    ci_val = sl.region.ci_g_per_kwh if ci is None else ci
+    rep = step_energy(sl.profile, migrate_counts(w, kv_tokens))
+    return operational_carbon_g(rep.energy_j, ci_val), rep.t_total
 
 
 def carbon_optimal_batch(sl: FleetSlice, w: LLMWorkload, phase: str,

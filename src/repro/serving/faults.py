@@ -30,6 +30,14 @@ Each site is placed BEFORE the corresponding device mutation, modelling a
 launch failure (OOM, preempted device, lost worker): work that did not
 happen must be retried, work that already happened is never double-done.
 
+Beyond failures, campaigns can schedule ADMIN events (``ADMIN_SITES``):
+``"drain"`` gracefully drains a shard (live KV-page migration to the
+survivors, then a clean hand-off to the shard-down machinery) and
+``"power_cap"`` imposes a brownout cap (the shard sheds low-priority
+slots by migration until its modeled draw fits). Both name a ``shard``
+like ``shard_down`` and are absorbed by ``admin_fires`` — declarations,
+not retries.
+
 ``HealthMonitor`` is the fleet's watchdog: the sharded engine reports
 which shards each faulted/successful launch touched, and a shard whose
 CONSECUTIVE faulted-launch count exceeds ``max_retries`` is declared
@@ -58,6 +66,11 @@ from typing import List, Optional, Sequence, Tuple
 SITES = ("page_alloc", "prefill_chunk", "decode_scan", "shard_down")
 # the retryable launch sites (everything but whole-shard loss)
 LAUNCH_SITES = SITES[:3]
+# admin events: not failures, but scheduled operator actions (graceful
+# drain, brownout power cap) that random survivability campaigns can
+# exercise alongside real faults. Opt-in (``FaultPlan.random(admin=True)``)
+# so existing seeded campaigns keep their draw sequence bit-identical.
+ADMIN_SITES = ("drain", "power_cap")
 
 
 class InjectedFault(RuntimeError):
@@ -80,37 +93,57 @@ class FaultPlan:
     at_quantum: int
     count: int = 1
     absolute: bool = False
-    # shard_down plans name the shard to kill; launch-site plans must not
+    # shard_down/drain/power_cap plans name a shard; launch-site plans
+    # must not
     shard: Optional[int] = None
+    # power_cap plans may name the cap in watts (None = the engine picks
+    # a default between idle and TDP); meaningless for every other site
+    watts: Optional[float] = None
 
     def __post_init__(self):
-        if self.site not in SITES:
+        if self.site not in SITES and self.site not in ADMIN_SITES:
             raise ValueError(
-                f"unknown fault site {self.site!r}; one of {SITES}")
+                f"unknown fault site {self.site!r}; "
+                f"one of {SITES + ADMIN_SITES}")
         if self.at_quantum < 0 or self.count < 1:
             raise ValueError("at_quantum must be >= 0 and count >= 1")
-        if self.site == "shard_down":
+        if self.site in ("shard_down",) + ADMIN_SITES:
             if self.shard is None or self.shard < 0:
-                raise ValueError("shard_down plans need shard >= 0")
+                raise ValueError(f"{self.site} plans need shard >= 0")
         elif self.shard is not None:
             raise ValueError(
-                f"shard targets only apply to shard_down, not {self.site!r}")
+                f"shard targets only apply to shard_down/admin sites, "
+                f"not {self.site!r}")
+        if self.watts is not None:
+            if self.site != "power_cap":
+                raise ValueError(
+                    f"watts only applies to power_cap, not {self.site!r}")
+            if self.watts <= 0:
+                raise ValueError("watts must be > 0")
 
     @classmethod
     def random(cls, seed: int, n: int = 3,
                sites: Optional[Sequence[str]] = None,
                max_quantum: int = 16, max_count: int = 1,
-               shards: Optional[int] = None) -> List["FaultPlan"]:
+               shards: Optional[int] = None,
+               admin: bool = False) -> List["FaultPlan"]:
         """A reproducible randomized fault campaign: ``n`` plans drawn
         from ``sites`` (default: the launch sites, plus ``shard_down``
-        when a fleet size ``shards`` is given) at quanta in
-        ``[0, max_quantum]`` with counts in ``[1, max_count]``. The same
-        ``seed`` yields the same campaign on every platform (stdlib
-        ``random.Random``), so a CI failure names a replayable schedule."""
+        when a fleet size ``shards`` is given, plus the admin sites
+        ``drain``/``power_cap`` when additionally ``admin=True``) at
+        quanta in ``[0, max_quantum]`` with counts in ``[1, max_count]``.
+        The same ``seed`` yields the same campaign on every platform
+        (stdlib ``random.Random``), so a CI failure names a replayable
+        schedule — and ``admin`` defaults off so pre-existing seeded
+        campaigns keep their exact draw sequence."""
         if sites is None:
             sites = LAUNCH_SITES + (("shard_down",) if shards else ())
-        if any(s == "shard_down" for s in sites) and not shards:
-            raise ValueError("shard_down campaigns need shards >= 1")
+            if admin and shards:
+                sites = sites + ADMIN_SITES
+        sharded_sites = ("shard_down",) + ADMIN_SITES
+        if any(s in sharded_sites for s in sites) and not shards:
+            raise ValueError(
+                "shard_down/drain/power_cap campaigns need shards >= 1")
         rng = _random.Random(seed)
         plans = []
         for _ in range(n):
@@ -118,9 +151,9 @@ class FaultPlan:
             plans.append(cls(
                 site,
                 at_quantum=rng.randrange(max_quantum + 1),
-                count=1 if site == "shard_down"
+                count=1 if site in sharded_sites
                 else rng.randint(1, max_count),
-                shard=rng.randrange(shards) if site == "shard_down"
+                shard=rng.randrange(shards) if site in sharded_sites
                 else None))
         return plans
 
@@ -160,6 +193,23 @@ class FaultInjector:
                 self.fired.append(("shard_down", quantum))
                 out.append(p.shard)
         return sorted(set(out))
+
+    def admin_fires(self, quantum: int, run_start: int = 0
+                    ) -> List[FaultPlan]:
+        """Admin plans (``drain`` / ``power_cap``) firing this quantum.
+        Like ``shard_down_fires``, a declaration rather than a retryable
+        launch failure — the engine absorbs each returned plan (skipping
+        shards that are already dead, draining, or the last live one) and
+        keeps stepping. Each fired plan logs as ``(site, quantum)``."""
+        out = []
+        for p in self.plans:
+            if p.site not in ADMIN_SITES:
+                continue
+            q0 = p.at_quantum if p.absolute else run_start + p.at_quantum
+            if q0 <= quantum < q0 + p.count:
+                self.fired.append((p.site, quantum))
+                out.append(p)
+        return out
 
 
 class HealthMonitor:

@@ -605,6 +605,91 @@ def cow_chunk_pages(pool: Dict, slots: jax.Array, start_tok: jax.Array,
                        lambda a: alloc, pool)
 
 
+def export_slot(pool: Dict, slot: jax.Array, src_pg: jax.Array) -> Dict:
+    """Dense, pool-independent payload of one slot's cache state — the
+    SEND half of a cross-pool page migration.
+
+    ``src_pg``: (M,) int32, the slot's physical pages in logical order,
+    -1 padded (its block-table row). Every KV leaf contributes the page
+    rows at those physical ids (``k_rows``/``v_rows``: ([R,] H, M, ps,
+    hd) — padded entries gather the trash page, whose contents are never
+    read back), plus the slot's cursors (``pos_ids``/``length``/``t``).
+    The payload mirrors the cache tree's structure, so ``migrate_pages``
+    can walk both in lockstep. An out-of-range ``slot`` (the fleet
+    sentinel ``B``) clamps — callers mask the result before use."""
+    def leafgroup(stacked, p):
+        pg = jnp.where(src_pg < 0, p["k_pages"].shape[-3] - 1, src_pg)
+        return {
+            "k_rows": jnp.take(p["k_pages"], pg, axis=-3),
+            "v_rows": jnp.take(p["v_pages"], pg, axis=-3),
+            "pos_ids": (p["pos_ids"][:, slot] if stacked
+                        else p["pos_ids"][slot]),
+            "length": (p["length"][:, slot] if stacked
+                       else p["length"][slot]),
+        }
+
+    def plain(stacked, p):
+        return p[:, slot] if stacked else p[slot]
+
+    return _walk_paged(leafgroup, plain, lambda a: None, pool)
+
+
+def migrate_pages(pool: Dict, slot: jax.Array, payload: Dict,
+                  n_pages: jax.Array) -> Dict:
+    """RECEIVE half of a cross-pool page migration: pop ``n_pages`` fresh
+    pages off THIS pool's free stack, rewrite ``slot``'s whole block-table
+    row to them (stale entries become -1), scatter the payload's KV rows
+    into the popped pages, and restore the slot's cursors — the migrated
+    slot is bit-identical to the source slot, on private pages.
+
+    ``payload`` is an ``export_slot`` tree (typically transferred across
+    shards by the caller). Popped pages enter the table singly referenced
+    — shared-prefix runs arrive as private COPIES; re-registering them in
+    the destination's prefix index is host-side policy (the
+    copy-then-reindex handoff). A sentinel ``slot`` (one past the batch)
+    with ``n_pages`` = 0 makes the whole call a provable no-op lane: no
+    pops, every scatter drops — the fleet program needs no per-lane
+    control flow."""
+    alloc = pool["paged"]
+    tbl, free, top, ref = (alloc["tbl"], alloc["free"], alloc["top"],
+                           alloc["ref"])
+    M = tbl.shape[1]
+    P = free.shape[0]
+    need = jnp.arange(M) < n_pages                      # (M,)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    take = top - 1 - rank
+    pages = free[jnp.clip(take, 0, P - 1)]
+    ok = need & (take >= 0)                             # guard underflow
+    tbl = tbl.at[slot].set(jnp.where(ok, pages, -1), mode="drop")
+    alloc = {"tbl": tbl, "free": free,
+             "top": top - ok.astype(jnp.int32).sum(),
+             "ref": _set_ref(ref, pages, ok)}
+
+    def scatter_rows(pages_leaf, rows):
+        # popped physical page per logical page; not-ok -> P+1, dropped
+        dst = jnp.where(ok, pages, pages_leaf.shape[-3])
+        if pages_leaf.ndim == 4:
+            return pages_leaf.at[:, dst].set(rows.astype(pages_leaf.dtype),
+                                             mode="drop")
+        return pages_leaf.at[:, :, dst].set(rows.astype(pages_leaf.dtype),
+                                            mode="drop")
+
+    def rows_at(d, value, stacked):
+        if stacked:
+            return d.at[:, slot].set(value.astype(d.dtype), mode="drop")
+        return d.at[slot].set(value.astype(d.dtype), mode="drop")
+
+    def leafgroup(stacked, p, pl):
+        return {"k_pages": scatter_rows(p["k_pages"], pl["k_rows"]),
+                "v_pages": scatter_rows(p["v_pages"], pl["v_rows"]),
+                "pos_ids": rows_at(p["pos_ids"], pl["pos_ids"], stacked),
+                "length": rows_at(p["length"], pl["length"], stacked)}
+
+    return _walk_paged(leafgroup,
+                       lambda stacked, p, pl: rows_at(p, pl, stacked),
+                       lambda a, b: alloc, pool, payload)
+
+
 def gather_slot_view(pool: Dict, slots: jax.Array) -> Dict:
     """Batch-n view of the paged cache tree for a chunked-prefill step:
     per-slot leaves (``pos_ids``/``length``/``t``) are gathered to rows

@@ -108,3 +108,23 @@ def pinned_run(keys: List[bytes], index: Dict[bytes, int],
             break
         run.append(p)
     return run
+
+
+def evacuation_mode(reachable: bool, emitted: int, dest: bool) -> str:
+    """Per-request evacuation strategy when a shard is leaving the fleet.
+
+    ``"migrate"`` — the shard is still reachable (admin drain, power cap,
+    explicit ``fail_shard``) and a survivor has room: page-copy the
+    slot's KV to the destination, zero recompute J.  ``"fold"`` — no
+    migration path (shard unreachable, or no survivor has a free slot +
+    pages) but the slot has emitted tokens worth keeping: fold and
+    requeue, recompute-on-resume.  ``"restart"`` — nothing emitted yet
+    (mid-prefill) and no migration path: reset to position 0 and requeue;
+    folding would be indistinguishable from a restart anyway.
+
+    Watchdog-declared deaths pass ``reachable=False`` — a shard that
+    stopped answering cannot serve a page copy, so the PR-8 fold path
+    stays the fallback, selected here per-request rather than globally."""
+    if reachable and dest:
+        return "migrate"
+    return "fold" if emitted > 0 else "restart"

@@ -57,11 +57,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.energy import decode_counts, step_energy
+from repro.core.energy import decode_counts, migrate_counts, step_energy
 from repro.core.hardware import HardwareProfile, get_profile
 from repro.core.intensity import Region, ci_at_hour, get_region
 from repro.core.meter import CarbonMeter, FleetMeterView, SharedClock
-from repro.core.scheduler import FleetSlice, marginal_request_g
+from repro.core.scheduler import (FleetSlice, marginal_request_g,
+                                  migration_cost_g)
 from repro.launch.mesh import make_serving_mesh
 from repro.models import Model
 from repro.models.costing import workload_of
@@ -225,6 +226,66 @@ def _map_prefix_fleet(mesh, caches, slot, pages, n_shared, start_tok):
         caches, slot, pages, n_shared, start_tok)
 
 
+def _migrate_fleet(mesh, caches, cur_tokens, state, is_src, is_dst,
+                   b_src, b_dst, src_pg, n_pages):
+    """Cross-shard KV-page migration as ONE SPMD program: the source lane
+    exports its slot's mapped pages + decode rows, a masked ``psum`` over
+    the data axis carries the payload to every lane (compiles once for
+    any (src, dst) pair — a static ``ppermute`` perm would recompile per
+    pair), the destination lane pops fresh pages and lands it, and the
+    source lane releases + disarms. Every OTHER lane's sentinel inputs
+    (slot id ``B``, ``n_pages`` 0, flags False) make both halves provable
+    no-ops: gathers clamp into masked-out rows, scatters drop, the
+    release mask is all-False — the lane's pool and state come back
+    bit-identical (dead lanes included, preserving the frozen-pool
+    contract). Returns the migrated slot's NEW block-table row per lane
+    (real on the destination lane; the host indexes it out)."""
+    def body(caches, cur, state, is_src, is_dst, b_src, b_dst,
+             src_pg, n_pages):
+        caches = dict(_lane(caches))
+        cur = _lane(cur)
+        state = _lane(state)
+        src, dst = is_src[0], is_dst[0]
+        bs, bd = b_src[0], b_dst[0]
+        B = cur.shape[0]
+        bsc = jnp.clip(bs, 0, B - 1)
+        payload = paged.export_slot(caches, bs, src_pg[0])
+        rows = {"cur": cur[bsc], "active": state["active"][bsc],
+                "budget": state["budget"][bsc], "eos": state["eos"][bsc]}
+
+        def xfer(x):
+            if x.dtype == jnp.bool_:
+                masked = jnp.where(src, x.astype(jnp.int32), 0)
+                return jax.lax.psum(masked, "data") != 0
+            return jax.lax.psum(jnp.where(src, x, jnp.zeros_like(x)),
+                                "data")
+
+        payload = jax.tree_util.tree_map(xfer, payload)
+        rows = jax.tree_util.tree_map(xfer, rows)
+        # source half: hand the pages back (shared-prefix pages survive
+        # under their other holders' refs) and stop the slot's sampling
+        # BEFORE the next fused chunk can emit from it
+        caches["paged"] = paged.release_slots(caches["paged"],
+                                              jnp.arange(B) == bs)
+        state = sampling.disarm_slots(state, bs[None])
+        # destination half: fresh pages, rewritten row, landed payload
+        caches = paged.migrate_pages(caches, bd, payload,
+                                     jnp.where(dst, n_pages[0], 0))
+        cur = cur.at[bd].set(rows["cur"], mode="drop")
+        state = {"active": state["active"].at[bd].set(rows["active"],
+                                                      mode="drop"),
+                 "budget": state["budget"].at[bd].set(rows["budget"],
+                                                      mode="drop"),
+                 "eos": state["eos"].at[bd].set(rows["eos"], mode="drop")}
+        row = caches["paged"]["tbl"][jnp.clip(bd, 0, B - 1)]
+        return (_unlane(caches), _unlane(cur), _unlane(state), row[None])
+
+    return shard_map(body, mesh=mesh, in_specs=(_SHARD,) * 9,
+                     out_specs=_SHARD, check_vma=False)(
+        caches, cur_tokens, state, is_src, is_dst, b_src, b_dst,
+        src_pg, n_pages)
+
+
 _FUSED_FLEET = jax.jit(_fused_steps_fleet, static_argnums=(0, 1),
                        static_argnames=("n_steps", "temperature",
                                         "page_size"))
@@ -240,6 +301,7 @@ _DECREF_FLEET = jax.jit(_decref_fleet, static_argnums=(0,))
 _DISARM_FLEET = jax.jit(_disarm_fleet, static_argnums=(0,))
 _QUARANTINE_FLEET = jax.jit(_quarantine_fleet, static_argnums=(0,))
 _SCRUB_FLEET = jax.jit(_scrub_fleet, static_argnums=(0,))
+_MIGRATE_FLEET = jax.jit(_migrate_fleet, static_argnums=(0,))
 
 
 class ShardedServingEngine:
@@ -382,6 +444,18 @@ class ShardedServingEngine:
         self.shard_down_events = 0
         self.shard_evacuated = 0       # requests moved off dead shards
         self.shard_rejoins = 0
+        # ---- live KV-page migration (PR 10): graceful drain, reachable
+        # evacuation, and brownout power caps all ride _migrate_slot().
+        # Draining shards take no new placements; their in-flight slots
+        # page-copy to the survivors between quanta (zero recompute J),
+        # then the empty shard hands off to fail_shard/rejoin.
+        self._draining: set = set()
+        self._drain_deadline: Dict[int, Optional[float]] = {}
+        self._power_cap: List[Optional[float]] = [None] * S
+        self.migrations = 0            # completed slot migrations
+        self.migrated_pages = 0        # pages copied across shards
+        self.drain_events = 0
+        self.power_cap_events = 0
         # per-tenant rate limiting (submit() is borrowed, so the fleet
         # carries the same bucket state as the single-device engine)
         self._tenant_buckets: Dict[str, List[float]] = {}
@@ -516,6 +590,21 @@ class ShardedServingEngine:
                                   rep.energy_j)
         self._q_time[shard] += rep.t_total
         return rep
+
+    def _meter_migrate(self, src: int, dst: int, kv_tokens: float) -> None:
+        """Charge a page copy to the ``migrate`` phase on BOTH endpoints
+        — each shard prices its own side of the transfer at its own
+        profile (docs/METHODOLOGY.md: migrate is its own phase, so
+        prefill/decode J per token stay invariant to migration policy).
+        The copy runs on both shards concurrently, so each side's modeled
+        time joins its own quantum total (the clock advances by the
+        fleet max)."""
+        counts = migrate_counts(self.workload, kv_tokens)
+        for s in (src, dst):
+            rep = step_energy(self.shard_profile[s], counts)
+            self.meters[s].record("migrate", rep.tokens, rep.t_total,
+                                  rep.energy_j)
+            self._q_time[s] += rep.t_total
 
     # ------------------------------------------------------- prefix sharing
     def _match_prefix(self, req: Request, s: int) -> Tuple[int, List[int]]:
@@ -693,6 +782,349 @@ class ShardedServingEngine:
         self._slot_prio[s][slot] = 0
         self._slot_deadline[s][slot] = None
 
+    # ------------------------------------------------- live KV-page migration
+    # The recompute-free counterpart of evacuation: a slot's mapped pages
+    # are COPIED into fresh pages of a survivor's pool by one fleet
+    # program (_MIGRATE_FLEET), its host mirrors move with it, and decode
+    # resumes on the destination from the same context — token-for-token
+    # with the undisturbed run, zero recompute J. Shared-prefix runs
+    # migrate as private copies, then re-register in the destination's
+    # index (copy-then-reindex): the source's index entries survive under
+    # their remaining holders or fall out with the last ref, exactly as
+    # an ordinary release. Three consumers: drain() (graceful shutdown),
+    # reachable evacuation (fail_shard upgrade), power_cap() (brownout).
+
+    def _fetch_tbl(self) -> np.ndarray:
+        # writable copy: shed sweeps mark migrated rows cleared in place
+        return np.array(jax.device_get(self.caches["paged"]["tbl"]))
+
+    def _resv_for_move(self, s: int, b: int) -> int:
+        """Worst-case reservation the DESTINATION must hold for slot
+        (s, b): the request's full prompt+budget page count, with NO
+        sharing discount — migrated pages land as private copies, so the
+        destination pool carries them all."""
+        req = self._slot_req[s][b]
+        return paged.pages_needed(
+            len(req.prompt) + max(req.max_new_tokens - 1, 0),
+            self.cfg.page_size)
+
+    def _pick_migration_dest(self, s: int, resv_d: int) -> Optional[int]:
+        """Best survivor to receive a slot from shard ``s``: live, not
+        draining, a free slot, and room for the full private reservation.
+        Baseline key mirrors placement (most free pages, lowest id);
+        carbon routing breaks free-page ties by the cheaper copy
+        (``migration_cost_g`` at the destination's profile × current
+        CI — operational only, a copy rents no embodied share)."""
+        carbon = self.cfg.routing == "carbon"
+        kv_tokens = float(resv_d * self.cfg.page_size)
+        best = None
+        for d in self.health.live:
+            if d == s or d in self._draining:
+                continue
+            if not self.free_slots(d) or self.free_pages[d] < resv_d:
+                continue
+            key: Tuple = (self.free_pages[d], -d)
+            if carbon:
+                region = self.shard_region[d]
+                ci = (ci_at_hour(region, self._clock_hours() % 24.0)
+                      if self.cfg.use_diurnal_ci else region.ci_g_per_kwh)
+                g, _ = migration_cost_g(self._slices[d], self.workload,
+                                        kv_tokens, ci=ci)
+                key = (self.free_pages[d], -g, -d)
+            if best is None or key > best[0]:
+                best = (key, d)
+        return None if best is None else best[1]
+
+    def _migrate_slot(self, s: int, b: int, d: int,
+                      src_row: np.ndarray) -> None:
+        """Move slot (s, b) to shard ``d``: one fleet program copies the
+        pages + decode state and releases the source, then the host
+        mirrors transfer — source credited exactly like a release
+        (sharing-aware), destination claims a slot + the full private
+        reservation. Armed slots re-register their prompt pages in the
+        destination's prefix index from the NEW block-table row; mid-
+        prefill slots re-register at prefill completion as usual."""
+        req = self._slot_req[s][b]
+        rid = self.slot_rid[s][b]
+        pages = [int(p) for p in src_row if p >= 0]
+        n = len(pages)
+        slot_d = self.free_slots(d)[0]
+        resv_d = self._resv_for_move(s, b)
+        budget, eos = self.slot_budget[s][b], self.slot_eos[s][b]
+        ctx, armed = self._slot_ctx[s][b], self._slot_armed[s][b]
+        slo, prio = self._slo[s][b], self._slot_prio[s][b]
+        ddl = self._slot_deadline[s][b]
+        is_src = np.zeros((self.S,), bool)
+        is_dst = np.zeros((self.S,), bool)
+        is_src[s], is_dst[d] = True, True
+        b_src = np.full((self.S,), self.B, np.int32)
+        b_dst = np.full((self.S,), self.B, np.int32)
+        b_src[s], b_dst[d] = b, slot_d
+        pg = np.full((self.S, self.max_pages_slot), -1, np.int32)
+        pg[s] = src_row
+        npg = np.zeros((self.S,), np.int32)
+        npg[d] = n
+        (self.caches, self.cur_tokens, self.state, rows) = _MIGRATE_FLEET(
+            self.mesh, self.caches, self.cur_tokens, self.state,
+            jnp.asarray(is_src), jnp.asarray(is_dst), jnp.asarray(b_src),
+            jnp.asarray(b_dst), jnp.asarray(pg), jnp.asarray(npg))
+        dst_row = np.asarray(jax.device_get(rows))[d]
+        # source credit: the device release already ran in-program; the
+        # mirror flows are the same popper-charges-once / last-holder-
+        # credits-once accounting as _release_slots
+        ret = self._slot_pages[s][b]
+        if self.sharing:
+            for p in self._slot_own_idx[s].pop(b, []):
+                self._page_ref[s][p] -= 1
+                if self._page_ref[s][p] <= 0:
+                    self._drop_index_page(s, p)
+                else:
+                    ret -= 1           # survives under someone else's map
+            for p in self._slot_shared_in[s].pop(b, []):
+                self._page_ref[s][p] -= 1
+                if self._page_ref[s][p] <= 0:
+                    self._drop_index_page(s, p)
+                    ret += 1           # last holder frees the original
+        self.free_pages[s] += ret
+        self._slot_pages[s][b] = 0
+        self._clear_slot(s, b)
+        # destination claim: same mirror writes as admission, but the
+        # slot arrives mid-flight (ctx, budget, armed state preserved)
+        self.free_pages[d] -= resv_d
+        self.peak_pages_reserved[d] = max(
+            self.peak_pages_reserved[d],
+            self.num_pages - self.free_pages[d])
+        self.slot_rid[d][slot_d] = rid
+        self.slot_budget[d][slot_d] = budget
+        self.slot_eos[d][slot_d] = eos
+        self._slot_ctx[d][slot_d] = ctx
+        self._slot_armed[d][slot_d] = armed
+        self._slo[d][slot_d] = slo
+        self._slot_pages[d][slot_d] = resv_d
+        self._slot_req[d][slot_d] = req
+        self._slot_prio[d][slot_d] = prio
+        self._slot_deadline[d][slot_d] = ddl
+        self._req_shard[rid] = d
+        if self.sharing:
+            # copy-then-reindex: the landed pages are private (ref 1);
+            # an armed slot's completed prompt re-registers them in the
+            # DESTINATION's index first-writer-wins, so later arrivals
+            # adopt from the survivor. Mid-prefill slots register at
+            # prefill completion exactly like a fresh admission.
+            self._slot_shared_in[d][slot_d] = []
+            self._slot_own_idx[d][slot_d] = []
+            if armed:
+                self._register_prefix(req, d, slot_d, dst_row)
+        if not armed:
+            self._prefilling[s].remove((req, b))
+            self._prefilling[d].append((req, slot_d))
+        self._meter_migrate(s, d, float(n * self.cfg.page_size))
+        self.migrations += 1
+        self.migrated_pages += n
+
+    # ------------------------------------------------------- graceful drain
+    def drain(self, s: int, deadline_s: Optional[float] = None) -> int:
+        """Gracefully drain shard ``s``: stop placing new work on it,
+        page-copy its armed and mid-prefill slots to the survivors
+        between quanta (token-for-token with the no-drain run, zero
+        recompute J), then hand the empty shard to the fail_shard/rejoin
+        machinery. ``deadline_s`` bounds the wait for destination
+        capacity: past it the remainder force-evacuates (migrate what
+        fits, fold the rest). Returns the number of slots migrated by the
+        immediate first sweep."""
+        if not 0 <= s < self.S:
+            raise ValueError(f"shard {s} out of range for {self.S} shards")
+        if self.health.is_dead(s):
+            raise ValueError(f"shard {s} is dead")
+        if s in self._draining:
+            return 0
+        if not [d for d in self.health.live
+                if d != s and d not in self._draining]:
+            raise FaultError(
+                f"shard {s} is the last drainable shard — nowhere to "
+                "migrate; fleet state is untouched")
+        self._draining.add(s)
+        self._drain_deadline[s] = (
+            None if deadline_s is None
+            else time.perf_counter() + deadline_s)
+        self.drain_events += 1
+        return self._drain_quantum(s)
+
+    def _finish_drain(self, s: int) -> None:
+        """The drained shard is empty: hand it to the existing shard-down
+        machinery (declaration, degraded metering, audit). If the fleet
+        degraded to one live shard mid-drain, the drain ABORTS instead —
+        the shard stays live and placeable, loudly."""
+        self._draining.discard(s)
+        self._drain_deadline.pop(s, None)
+        if len(self.health.live) <= 1:
+            return                     # nowhere to hand off; stay live
+        self.fail_shard(s)             # empty: evacuation is a no-op
+
+    def _drain_quantum(self, s: int) -> int:
+        """One drain sweep of shard ``s``: migrate every occupied slot a
+        survivor can take right now; slots that don't fit stay armed and
+        KEEP DECODING on ``s`` (graceful means no stalled work) until
+        capacity frees. Finishes the drain when the shard empties."""
+        moved = 0
+        occupied = [b for b in range(self.B) if self.slot_rid[s][b] >= 0]
+        tbl: Optional[np.ndarray] = None
+        for b in occupied:
+            d = self._pick_migration_dest(s, self._resv_for_move(s, b))
+            if d is None:
+                continue               # wait for capacity, keep decoding
+            if tbl is None:
+                # one fetch serves the sweep: migrating slot b only
+                # CLEARS row b on the source (other rows untouched)
+                tbl = self._fetch_tbl()
+            self._migrate_slot(s, b, d, tbl[s][b])
+            moved += 1
+        if all(r < 0 for r in self.slot_rid[s]) and not self._prefilling[s]:
+            self._finish_drain(s)
+        return moved
+
+    def _drain_sweep(self) -> int:
+        """Per-quantum drain progress for every draining shard; expired
+        drain deadlines force-evacuate the remainder through fail_shard
+        (reachable: migrate what fits, fold the rest)."""
+        moved = 0
+        now = time.perf_counter()
+        for s in sorted(self._draining):
+            if self.health.is_dead(s):
+                self._draining.discard(s)
+                self._drain_deadline.pop(s, None)
+                continue
+            ddl = self._drain_deadline.get(s)
+            if ddl is not None and now > ddl:
+                self._draining.discard(s)
+                self._drain_deadline.pop(s, None)
+                if len(self.health.live) > 1:
+                    self.fail_shard(s)
+                continue
+            moved += self._drain_quantum(s)
+        return moved
+
+    # ------------------------------------------------------ brownout power cap
+    def power_cap(self, s: int, watts: Optional[float]) -> int:
+        """Impose (or, with ``watts=None``, lift) a brownout power cap on
+        shard ``s``: the shard keeps serving but sheds its lowest-
+        priority slots — by page migration when a survivor has room, by
+        the preemption fold otherwise — until its modeled draw fits under
+        the cap, and placement refuses work that would push it back over.
+        The meters re-denominate by construction: shed work's tokens and
+        joules are recorded wherever the work actually runs, so the
+        capped shard's metered draw tracks its real (reduced) load.
+        Returns the number of slots shed immediately."""
+        if not 0 <= s < self.S:
+            raise ValueError(f"shard {s} out of range for {self.S} shards")
+        if watts is None:
+            self._power_cap[s] = None
+            return 0
+        idle = self.shard_profile[s].idle_w
+        if watts < idle:
+            raise ValueError(
+                f"cap {watts:.1f} W is below shard {s}'s idle draw "
+                f"{idle:.1f} W — an idle device already violates it")
+        self._power_cap[s] = float(watts)
+        self.power_cap_events += 1
+        return self._shed_to_cap(s)
+
+    def _modeled_draw(self, s: int) -> float:
+        """Shard ``s``'s modeled electrical draw at its CURRENT load:
+        the max of its decode-step and prefill-chunk power (the quantum
+        interleaves both; power is a peak, not an average), idle draw
+        when empty — same ``step_power`` model the meters price."""
+        draw = self.shard_profile[s].idle_w
+        armed = [b for b in range(self.B) if self._slot_armed[s][b]]
+        if armed:
+            ctx = float(np.mean([self._slot_ctx[s][b] for b in armed]))
+            rep = step_energy(self.shard_profile[s],
+                              decode_counts(self.workload, len(armed),
+                                            max(ctx, 1.0)))
+            draw = max(draw, rep.power_w)
+        if self._prefilling[s]:
+            counts = _prefill_phase_counts(self.workload, 1,
+                                           self.cfg.prefill_chunk)
+            draw = max(draw, step_energy(self.shard_profile[s],
+                                         counts).power_w)
+        return draw
+
+    def _prospective_draw(self, s: int, req: Request) -> float:
+        """Draw of shard ``s`` if ``req`` were placed on it: one more
+        armed slot at the blended context, and its prefill chunk — the
+        placement gate a capped shard applies before accepting work."""
+        armed = [b for b in range(self.B) if self._slot_armed[s][b]]
+        ctxs = [self._slot_ctx[s][b] for b in armed]
+        ctx = max(float(np.mean(ctxs + [float(len(req.prompt))])), 1.0)
+        rep = step_energy(self.shard_profile[s],
+                          decode_counts(self.workload, len(armed) + 1,
+                                        ctx))
+        counts = _prefill_phase_counts(
+            self.workload, 1,
+            min(len(req.prompt), self.cfg.prefill_chunk))
+        pf = step_energy(self.shard_profile[s], counts)
+        return max(rep.power_w, pf.power_w, self.shard_profile[s].idle_w)
+
+    def _shed_to_cap(self, s: int) -> int:
+        """Shed slots off capped shard ``s`` lowest-priority-first until
+        its modeled draw fits: migrate when a survivor has room, fold
+        (ordinary preemption eviction) armed slots otherwise. Stops —
+        loudly visible in stats as a still-over-cap shard — when only
+        unmovable mid-prefill work remains and no survivor can take it
+        (folding a slot that has emitted nothing is just a restart, which
+        the next admission pass may well place back here)."""
+        cap = self._power_cap[s]
+        shed = 0
+        tbl: Optional[np.ndarray] = None
+        while cap is not None and self._modeled_draw(s) > cap:
+            occupied = [b for b in range(self.B)
+                        if self.slot_rid[s][b] >= 0]
+            if not occupied:
+                break                  # idle draw alone: nothing to shed
+            victims = sorted(
+                occupied,
+                key=lambda b: (self._slot_prio[s][b],
+                               len(self.responses[
+                                   self.slot_rid[s][b]].tokens)))
+            moved = False
+            for b in victims:
+                d = self._pick_migration_dest(s, self._resv_for_move(s, b))
+                if d is not None:
+                    if tbl is None:
+                        tbl = self._fetch_tbl()
+                    self._migrate_slot(s, b, d, tbl[s][b])
+                    tbl[s][b] = -1     # row cleared by the migration
+                    shed += 1
+                    moved = True
+                    break
+                if self._slot_armed[s][b]:
+                    self._evict_slot(s, b)
+                    shed += 1
+                    moved = True
+                    break
+            if not moved:
+                break
+        return shed
+
+    def _absorb_admin(self, plan) -> None:
+        """Absorb a scheduled admin event from a fault campaign: drains
+        and power caps are declarations the engine applies mid-run,
+        skipping shards where the action is moot (dead, already draining,
+        or the last drainable one) — a random campaign must be
+        survivable by construction, like injected shard loss."""
+        s = plan.shard
+        if self.health.is_dead(s) or s in self._draining:
+            return
+        if plan.site == "drain":
+            if [d for d in self.health.live
+                    if d != s and d not in self._draining]:
+                self.drain(s)
+            return
+        prof = self.shard_profile[s]
+        watts = (plan.watts if plan.watts is not None
+                 else prof.idle_w + 0.5 * (prof.tdp_w - prof.idle_w))
+        self.power_cap(s, max(watts, prof.idle_w))
+
     # -------------------------------------------------- shard-loss resilience
     # The fleet's fault domain is a whole shard, not just a launch site:
     # one lost device strands every armed slot, reservation, pinned page,
@@ -745,7 +1177,9 @@ class ShardedServingEngine:
                 # and keep serving on the survivors
                 self._backoff.pop(site, None)
                 for s in suspect:
-                    self.fail_shard(s)
+                    # a watchdog-declared shard stopped answering — it
+                    # cannot serve a page copy, so evacuation folds
+                    self.fail_shard(s, reachable=False)
                 return
             raise FaultError(
                 f"site {site!r} failed {fails} consecutive launches "
@@ -759,12 +1193,19 @@ class ShardedServingEngine:
         self.health.record_ok(self._site_shards(site))
         self._backoff.pop(site, None)
 
-    def fail_shard(self, s: int) -> int:
+    def fail_shard(self, s: int, reachable: bool = True) -> int:
         """Declare shard ``s`` dead and evacuate its in-flight work onto
         the survivors; returns the number of evacuated requests. Queued
         and deferred work is untouched (it owns nothing shard-local).
-        Raises FaultError if ``s`` is the last live shard — a fleet with
-        nowhere to evacuate fails loudly with state consistent."""
+        ``reachable`` says whether the shard can still serve a page copy:
+        an EXPLICIT declaration (operator action, drain hand-off) leaves
+        the device answering, so in-flight slots page-migrate with zero
+        recompute J where a survivor has room; watchdog declarations and
+        injected shard_down pass ``reachable=False`` — a shard that
+        stopped answering gets the PR-8 fold path. The choice is made
+        per-request (``preempt.evacuation_mode``). Raises FaultError if
+        ``s`` is the last live shard — a fleet with nowhere to evacuate
+        fails loudly with state consistent."""
         if not 0 <= s < self.S:
             raise ValueError(f"shard {s} out of range for {self.S} shards")
         if self.health.is_dead(s):
@@ -774,20 +1215,39 @@ class ShardedServingEngine:
                 f"shard {s} is the last live shard — nowhere to "
                 "evacuate; queue and responses are intact")
         self.health.declare_down(s, self._quantum)
+        self._draining.discard(s)      # a dying shard's drain is moot
+        self._drain_deadline.pop(s, None)
+        self._power_cap[s] = None
         self.shard_down_events += 1
-        n = self._evacuate_shard(s)
+        n = self._evacuate_shard(s, reachable)
         # degraded metering: the dead device keeps depreciating, so its
         # embodied rent re-denominates onto the live devices' work
         self.meter.set_live(self.health.live)
         self.audit()
         return n
 
-    def _evacuate_shard(self, s: int) -> int:
+    def _evacuate_shard(self, s: int, reachable: bool = True) -> int:
         """Move every in-flight request off shard ``s`` and invalidate
         its host mirrors ATOMICALLY (one host-side pass, no quantum runs
-        in between). No release/decref program ever targets the dead
-        pool: its pages are gone, so the only device op is disarming the
-        lane's slot STATE so the fused scan runs it all-idle."""
+        in between). When the shard is REACHABLE, slots a survivor can
+        hold page-migrate first (zero recompute); the remainder — and
+        everything, when unreachable — takes the fold/restart path. After
+        the migrate pass no release/decref program ever targets the dead
+        pool again: the lane rides subsequent SPMD programs all-idle."""
+        migrated = 0
+        if reachable:
+            tbl: Optional[np.ndarray] = None
+            for b in [b for b in range(self.B)
+                      if self.slot_rid[s][b] >= 0]:
+                emitted = len(self.responses[self.slot_rid[s][b]].tokens)
+                d = self._pick_migration_dest(s, self._resv_for_move(s, b))
+                if preempt.evacuation_mode(reachable, emitted,
+                                           d is not None) != "migrate":
+                    continue
+                if tbl is None:
+                    tbl = self._fetch_tbl()
+                self._migrate_slot(s, b, d, tbl[s][b])
+                migrated += 1
         armed = [b for b in range(self.B) if self._slot_armed[s][b]]
         if armed:
             slots = np.full((self.S, len(armed)), self.B, np.int32)
@@ -849,8 +1309,8 @@ class ShardedServingEngine:
             self._page_ref[s].clear()
             self._slot_shared_in[s].clear()
             self._slot_own_idx[s].clear()
-        self.shard_evacuated += len(requeue)
-        return len(requeue)
+        self.shard_evacuated += len(requeue) + migrated
+        return len(requeue) + migrated
 
     def rejoin(self, s: int) -> None:
         """Re-enter a recovered shard: one fleet program scrubs ITS pool
@@ -937,6 +1397,18 @@ class ShardedServingEngine:
                     f"audit: shard {s} reservation mirror promises "
                     f"{self.free_pages[s]} free pages but the device "
                     f"free stack holds {int(top[s])}")
+        # fleet-wide page conservation (PR 10): Σ top + Σ referenced ==
+        # S·P, counted from REFCOUNTS so frozen dead pools (quarantine
+        # clears only tbl) and scrubbed pools satisfy it too — a
+        # migration that leaked a page on either endpoint, or freed one
+        # twice, breaks the sum even when each shard's local books
+        # happen to balance
+        fleet = int(top.sum()) + int((ref > 0).sum())
+        if fleet != self.S * n_pg:
+            raise RuntimeError(
+                f"audit: fleet-wide page conservation broken: "
+                f"sum(top) + sum(ref>0) = {fleet} != "
+                f"{self.S} * {n_pg} = {self.S * n_pg}")
 
     # ------------------------------------------------------------- deadlines
     def _sweep_deadlines(self) -> None:
@@ -1026,10 +1498,15 @@ class ShardedServingEngine:
         carbon = self.cfg.routing == "carbon"
         best = None
         for s in range(self.S):
-            if self.health.is_dead(s):
-                continue               # degraded fleet: dead shards are
-            if not self.free_slots(s):  # simply not placement-eligible
+            if self.health.is_dead(s) or s in self._draining:
+                continue               # degraded fleet: dead or draining
+            if not self.free_slots(s):  # shards take no new placements
                 continue
+            if (self._power_cap[s] is not None
+                    and self._prospective_draw(s, req)
+                    > self._power_cap[s]):
+                continue               # capped shard: refuse work that
+                                       # would push its draw back over
             if self.sharing:
                 n_pg, phys = self._match_prefix(req, s)
                 first_tok = min(n_pg * ps, L - 1)
@@ -1393,17 +1870,30 @@ class ShardedServingEngine:
         times too fast)."""
         self._quantum += 1
         ev0 = self.shard_down_events
+        mig0 = self.migrations
         if self.faults is not None:
             # injected shard loss fires at the quantum boundary, BEFORE
             # any launch — the engine absorbs it (evacuate + degrade),
-            # it never surfaces as an exception
+            # it never surfaces as an exception. Injection models a
+            # crashed device: NOT reachable, evacuation folds.
             for s in self.faults.shard_down_fires(self._quantum,
                                                   self._run_q0):
                 if not self.health.is_dead(s):
-                    self.fail_shard(s)
+                    self.fail_shard(s, reachable=False)
+            # scheduled admin events (drain / power_cap campaigns)
+            for plan in self.faults.admin_fires(self._quantum,
+                                                self._run_q0):
+                self._absorb_admin(plan)
         released = self._release_deferred() if self.deferred else 0
         if self._has_deadlines:
             self._sweep_deadlines()
+        if self._draining:
+            self._drain_sweep()
+        for s in self.health.live:
+            # brownout re-enforcement: load that grew back over a live
+            # cap (e.g. a slot's context deepened) sheds again
+            if self._power_cap[s] is not None:
+                self._shed_to_cap(s)
         admitted = self._admit()
         chunks = self._prefill_quantum()
         decoded = self._decode_chunk(max_steps) if self.decoding else False
@@ -1416,7 +1906,8 @@ class ShardedServingEngine:
         # pass), and the evacuees it re-queued must reach the next
         # admission pass — not be misread as an unplaceable head
         return bool(released or admitted or chunks or decoded
-                    or self.shard_down_events != ev0)
+                    or self.shard_down_events != ev0
+                    or self.migrations != mig0)
 
     def run(self, max_steps: int = 10_000) -> List[Response]:
         """Drive until the queue drains and every shard's slots finish.
@@ -1536,6 +2027,20 @@ class ShardedServingEngine:
             "shard_evacuated": self.shard_evacuated,
             "shard_rejoins": self.shard_rejoins,
         })
+        # live KV-page migration: drain/brownout counters + the migrate
+        # phase's energy (its own meter phase, so prefill/decode J per
+        # token stay invariant — docs/METHODOLOGY.md)
+        mg = self.meter.phase("migrate")
+        out.update({
+            "migrations": self.migrations,
+            "migrated_pages": self.migrated_pages,
+            "drain_events": self.drain_events,
+            "migrate_j": mg.energy_j,
+            "power_cap_events": self.power_cap_events,
+        })
+        for s in range(self.S):
+            if self._power_cap[s] is not None:
+                out[f"shard{s}_power_cap_w"] = self._power_cap[s]
         # front door (same keys as the single-device engine)
         out.update({
             "queue_depth": len(self.queue),

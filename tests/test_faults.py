@@ -250,6 +250,47 @@ def test_fault_plan_shard_validation():
     assert p.shard == 2
 
 
+def test_fault_plan_admin_validation():
+    """Admin plans (drain / power_cap) validate like shard_down — they
+    name a shard — and ``watts`` is power_cap-only and positive."""
+    with pytest.raises(ValueError, match="shard >= 0"):
+        FaultPlan("drain", at_quantum=1)
+    with pytest.raises(ValueError, match="shard >= 0"):
+        FaultPlan("power_cap", at_quantum=1)
+    with pytest.raises(ValueError, match="watts only applies"):
+        FaultPlan("drain", at_quantum=1, shard=0, watts=150.0)
+    with pytest.raises(ValueError, match="watts must be > 0"):
+        FaultPlan("power_cap", at_quantum=1, shard=0, watts=0.0)
+    p = FaultPlan("power_cap", at_quantum=1, shard=1, watts=120.0)
+    assert p.shard == 1 and p.watts == 120.0
+    assert FaultPlan("drain", at_quantum=0, shard=0).watts is None
+
+
+def test_injector_admin_fires_schedule():
+    """Admin plans fire through the non-raising admin hook, log to
+    .fired, and never enter the raising launch-site path. The default
+    random draw (admin off) keeps the pre-admin site universe."""
+    inj = FaultInjector([
+        FaultPlan("drain", at_quantum=2, shard=1),
+        FaultPlan("power_cap", at_quantum=3, shard=0, watts=100.0),
+        FaultPlan("decode_scan", at_quantum=2),
+    ])
+    assert inj.admin_fires(1) == []
+    fired = inj.admin_fires(2)
+    assert [p.site for p in fired] == ["drain"]
+    assert [p.site for p in inj.admin_fires(3)] == ["power_cap"]
+    assert ("drain", 2) in inj.fired and ("power_cap", 3) in inj.fired
+    inj.check("page_alloc", 2, 0)       # admin sites never raise here
+    from repro.serving.faults import ADMIN_SITES
+    assert all(p.site not in ADMIN_SITES
+               for p in FaultPlan.random(42, n=20, shards=4))
+    with pytest.raises(ValueError, match="shards"):
+        FaultPlan.random(1, sites=("drain",))
+    # admin without a fleet size is a no-op on the draw, not an error
+    assert all(p.site not in ADMIN_SITES
+               for p in FaultPlan.random(1, n=6, admin=True))
+
+
 def test_fault_plan_random_reproducible_and_valid():
     """Same seed, same campaign — and every drawn plan passes the
     constructor's own validation (shard_down plans carry a shard in

@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from benchmarks.load_gen import (bursty_trace, diurnal_trace,
+                                 measured_requests, measured_trace,
                                  mixed_requests, poisson_trace)
 from repro.core.intensity import get_region
 
@@ -125,3 +126,59 @@ def test_diurnal_trace_validates_inputs():
         diurnal_trace(1.0, 5, rng, depth=1.5)
     with pytest.raises(KeyError):
         diurnal_trace(1.0, 5, rng, region="NOWHERE")
+
+
+# ----------------------------------------------------- measured replay
+
+
+def _write_csv(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_measured_trace_normalizes_sorts_and_scales(tmp_path):
+    path = _write_csv(tmp_path, "trace.csv",
+                      "timestamp,prompt_len\n"
+                      "100.5,7\n100.0,9\n102.0,5\n")
+    t = measured_trace(path)
+    assert t == [0.0, 0.5, 2.0]          # normalized to 0, sorted
+    assert measured_trace(path, scale=0.5) == [0.0, 0.25, 1.0]
+    assert measured_trace(path, n=2) == [0.0, 0.5]
+
+
+def test_measured_trace_iso_timestamps(tmp_path):
+    path = _write_csv(tmp_path, "iso.csv",
+                      "timestamp\n"
+                      "2026-08-09T00:00:00Z\n"
+                      "2026-08-09T00:00:01.500Z\n")
+    t = measured_trace(path)
+    assert t == [0.0, 1.5]
+
+
+def test_measured_requests_lengths_from_csv(tmp_path):
+    path = _write_csv(tmp_path, "lens.csv",
+                      "arrival_s,input_tokens,output_tokens\n"
+                      "0.0,12,3\n0.25,4,20\n")
+    sa = measured_requests(path, np.random.default_rng(5), rid0=100)
+    sb = measured_requests(path, np.random.default_rng(5), rid0=100)
+    assert sa == sb                      # deterministic under the seed
+    assert [len(s["prompt"]) for s in sa] == [12, 4]
+    assert [s["max_new_tokens"] for s in sa] == [3, 20]
+    assert [s["rid"] for s in sa] == [100, 101]
+    assert [s["arrival_s"] for s in sa] == [0.0, 0.25]
+
+
+def test_measured_requests_missing_length_columns_fall_back(tmp_path):
+    path = _write_csv(tmp_path, "bare.csv", "arrival_s\n0.0\n1.0\n")
+    specs = measured_requests(path, np.random.default_rng(5),
+                              max_new_tokens=6)
+    assert all(6 <= len(s["prompt"]) <= 16 for s in specs)
+    assert all(s["max_new_tokens"] == 6 for s in specs)
+
+
+def test_measured_trace_validates_inputs(tmp_path):
+    with pytest.raises(ValueError):
+        measured_trace(_write_csv(tmp_path, "no_col.csv", "foo,bar\n1,2\n"))
+    with pytest.raises(ValueError):
+        measured_trace(_write_csv(tmp_path, "empty.csv", "arrival_s\n"))

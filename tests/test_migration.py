@@ -1,0 +1,476 @@
+"""Live KV-page migration: drain, reachable evacuation, brownout caps.
+
+The contract (serving/sharded.py, PR 10): a slot's mapped KV pages can
+MOVE between shards without recomputation — the fleet program exports
+the slot's pages + cursors from the source lane, hops them over the mesh,
+pops free pages on the destination, and rewrites both block tables in one
+launch. Greedy decode depends only on context, so a migrated request is
+token-for-token identical to the undisturbed run while spending ZERO
+recompute J (the copy itself is metered to the separate ``migrate``
+phase on both endpoints). Three consumers ride the primitive:
+
+  * ``drain(s)``       — graceful: stop placement, migrate slots to the
+                         survivors between quanta (work keeps decoding
+                         until it moves), hand the empty shard to the
+                         shard-down machinery.
+  * ``fail_shard(s)``  — explicit declarations default to
+                         ``reachable=True`` and upgrade evacuation to
+                         page copies; watchdog/injected declarations
+                         keep the PR-8 fold (``reachable=False``).
+  * ``power_cap(s,w)`` — brownout: shed lowest-priority slots by
+                         migration (fold as fallback) until the modeled
+                         draw fits the cap; placement refuses work that
+                         would push the shard back over.
+
+``audit()`` additionally proves fleet-wide page conservation every
+quantum (CheckedFleet): Σ free + Σ uniquely-referenced == S * pool.
+
+Needs 4 forced host devices: run via ``make migrate`` (or the CI
+migration step); under plain tier-1 every test here SKIPS via the
+conftest guard.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.models.config import repeat_pattern
+from repro.serving import (EngineConfig, FaultError, FaultInjector,
+                           FaultPlan, Request, ShardedServingEngine)
+from repro.serving.faults import ADMIN_SITES, SITES
+
+PS = 4
+CH = 8
+S = 2
+
+RNG = np.random.default_rng(31)
+
+
+@pytest.fixture(autouse=True)
+def _fleet_devices(host_devices):
+    host_devices(4)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = ModelConfig(
+        name="tiny-migrate", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=2, d_ff=128, vocab=256, dtype="float32",
+        block_pattern=repeat_pattern(("dense",), 2), vocab_pad_multiple=8)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+class CheckedFleet(ShardedServingEngine):
+    """Audit after every quantum — per-shard allocator invariants plus
+    the PR-10 fleet-wide page-conservation check, at test cadence."""
+
+    def step(self, max_steps=10_000):
+        ran = super().step(max_steps)
+        self.audit()
+        return ran
+
+
+def make_fleet(m, params, checked=True, shards=S, **kw):
+    args = dict(max_batch=2, max_len=64, sync_every=4, paged=True,
+                page_size=PS, prefill_chunk=CH, shards=shards,
+                preemption=True, prefix_sharing=True)
+    args.update(kw)
+    cls = CheckedFleet if checked else ShardedServingEngine
+    return cls(m, params, EngineConfig(**args))
+
+
+def _reqs(rids, lens, max_new=12, **kw):
+    return [dict(rid=rid, prompt=list(RNG.integers(0, 256, int(n))),
+                 max_new_tokens=max_new, **kw)
+            for rid, n in zip(rids, lens)]
+
+
+def run_fleet(eng, reqs):
+    for r in reqs:
+        eng.submit(Request(**r))
+    return {r.rid: r for r in eng.run()}
+
+
+def assert_matches_oracle(got, want, rids=None):
+    for rid in (want if rids is None else rids):
+        assert got[rid].tokens == want[rid].tokens, f"request {rid} diverged"
+        assert got[rid].finished == want[rid].finished
+        assert got[rid].finish_reason == want[rid].finish_reason
+
+
+LENS = (5, 9, 14, 7, 11, 6)
+
+
+# --------------------------------------------------------- graceful drain
+
+
+def test_drain_parity_and_zero_recompute(parts):
+    """The acceptance bit: a drained run is token-for-token identical to
+    the no-drain oracle, the migrated work spends ZERO recompute J, the
+    copy energy lands in the separate migrate phase, and the emptied
+    shard hands off to the shard-down machinery."""
+    _, m, params = parts
+    specs = _reqs(range(len(LENS)), LENS, max_new=24)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+
+    eng = make_fleet(m, params)
+    for r in specs:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    eng.drain(0)
+    got = {r.rid: r for r in eng.run()}
+
+    assert_matches_oracle(got, want)
+    assert eng.migrations >= 1 and eng.migrated_pages >= 1
+    assert eng.meter.phase("recompute").energy_j == 0.0
+    assert all(r.recompute_j == 0.0 for r in got.values())
+    st = eng.stats()
+    assert st["drain_events"] == 1
+    assert st["migrations"] == eng.migrations
+    assert st["migrate_j"] > 0.0
+    # the emptied shard went through fail_shard: dead until rejoin
+    assert eng.health.is_dead(0) and st["shard_down_events"] == 1
+    eng.audit()
+
+
+def test_drain_migrate_energy_on_both_endpoints(parts):
+    """A page copy is charged to the migrate phase of BOTH endpoint
+    meters — never to prefill/decode — so per-phase J/token stays a
+    property of the work, not of where it ran."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    for r in _reqs(range(2), (9, 13), max_new=24):
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    eng.drain(0)
+    eng.run()
+    assert eng.migrations >= 1
+    src, dst = eng.meters[0].phase("migrate"), eng.meters[1].phase("migrate")
+    assert src.energy_j > 0.0 and dst.energy_j > 0.0
+    assert eng.meter.phase("migrate").energy_j == pytest.approx(
+        src.energy_j + dst.energy_j)
+
+
+def test_drain_then_rejoin_serves_again(parts):
+    """The full lifecycle: drain empties the shard into the survivors,
+    rejoin brings it back with a virgin pool, and placement uses it again
+    the next run."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    got = run_fleet(eng, _reqs(range(4), (6, 9, 12, 7), max_new=16))
+    assert all(r.finished for r in got.values())
+    for r in _reqs(range(10, 12), (8, 11), max_new=20):
+        eng.submit(Request(**r))
+    for _ in range(3):
+        eng.step()
+    eng.drain(0)
+    got2 = {r.rid: r for r in eng.run()}
+    assert all(r.finished for r in got2.values())
+    assert eng.health.is_dead(0)
+    eng.rejoin(0)
+    before = eng.stats()["shard0_requests"]
+    got3 = run_fleet(eng, _reqs(range(100, 106), LENS))
+    assert all(r.finished for r in got3.values())
+    assert eng.stats()["shard0_requests"] > before
+    eng.audit()
+
+
+def test_drain_with_shared_prefix_reindexes_on_survivor(parts):
+    """Copy-then-reindex handoff: a migrated armed slot re-registers its
+    completed prompt in the DESTINATION's prefix index, so a later
+    arrival with the same prompt adopts resident pages from the survivor
+    — and still decodes token-identical to an unshared run."""
+    _, m, params = parts
+    prompt = list(RNG.integers(0, 256, 16))
+    spec0 = dict(rid=0, prompt=list(prompt), max_new_tokens=30)
+    spec1 = dict(rid=1, prompt=list(prompt), max_new_tokens=30)
+    want = run_fleet(make_fleet(m, params), [dict(spec0)])
+
+    eng = make_fleet(m, params)
+    eng.submit(Request(**spec0))
+    for _ in range(4):
+        eng.step()                      # prompt resident + armed
+    src = eng._req_shard[0]
+    eng.drain(src)
+    assert eng.migrations >= 1          # free survivor: migrates at once
+    eng.submit(Request(**spec1))
+    got = {r.rid: r for r in eng.run()}
+    st = eng.stats()
+    assert st["prefix_hit_tokens"] > 0, "post-drain arrival never adopted"
+    assert got[0].tokens == want[0].tokens
+    assert got[1].tokens == want[0].tokens   # same prompt, greedy decode
+    assert eng.meter.phase("recompute").energy_j == 0.0
+    eng.audit()
+
+
+def test_drain_waits_for_capacity_without_stalling(parts):
+    """When no survivor has room the draining shard's slots keep
+    DECODING in place (graceful means no stalled work) and migrate as
+    capacity frees — the run still matches the no-drain oracle."""
+    _, m, params = parts
+    # 4 long requests fill both shards (B=2 each): no free dest slot
+    specs = _reqs(range(4), (6, 9, 12, 7), max_new=28)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+    eng = make_fleet(m, params)
+    for r in specs:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    moved = eng.drain(1)
+    assert moved == 0                   # both survivor slots occupied
+    assert 1 in eng._draining
+    assert eng.drain(1) == 0            # idempotent while draining
+    got = {r.rid: r for r in eng.run()}
+    assert_matches_oracle(got, want)
+    assert 1 not in eng._draining       # drain eventually completed
+    eng.audit()
+
+
+def test_drain_deadline_forces_evacuation(parts):
+    """An expired drain deadline stops waiting for capacity: the
+    remainder force-evacuates through fail_shard (migrate what fits,
+    fold the rest) and every page is reclaimed on both sides."""
+    _, m, params = parts
+    specs = _reqs(range(4), (6, 9, 12, 7), max_new=28)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+    eng = make_fleet(m, params)
+    for r in specs:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    eng.drain(1, deadline_s=0.0)        # expires at the next sweep
+    got = {r.rid: r for r in eng.run()}
+    assert_matches_oracle(got, want)
+    assert eng.health.is_dead(1)        # deadline converted to shard-down
+    assert eng.free_pages[1] == eng.num_pages
+    # the folded remainder is the only recompute in the run
+    assert eng.meter.phase("recompute").energy_j > 0.0
+    eng.audit()
+
+
+def test_request_deadline_expiring_mid_drain_reclaims_pages(parts):
+    """A request whose own deadline expires while its shard drains is
+    cancelled like any other — pages reclaimed wherever they live, the
+    drain completes, and the fleet-conservation audit holds throughout
+    (CheckedFleet runs it every quantum)."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    for r in _reqs(range(2), (9, 13), max_new=30):
+        eng.submit(Request(**r))
+    for _ in range(3):
+        eng.step()
+    eng.drain(0)
+    eng.submit(Request(**_reqs([9], [8], max_new=30,
+                               deadline_s=1e-6)[0]))
+    got = {r.rid: r for r in eng.run()}
+    assert got[9].finish_reason == "deadline"
+    assert got[0].finished and got[1].finished
+    # everything terminal: every non-quarantined page is free again
+    live_free = sum(eng.free_pages[s] for s in eng.health.live)
+    assert live_free == len(eng.health.live) * eng.num_pages
+    eng.audit()
+
+
+def test_deferred_work_never_targets_draining_shard(parts):
+    """Parked deferred work owns nothing shard-local; when it releases
+    mid-drain it must land on shards that are not draining (and not
+    dead) — the draining shard's placement gate closes at drain()."""
+    _, m, params = parts
+    eng = make_fleet(m, params, defer_below_priority=1, use_diurnal_ci=True)
+    urgent = _reqs((0, 1, 2, 3), (6, 9, 7, 11), max_new=24, priority=1)
+    parked = _reqs((10, 11), (7, 5), max_new=6)
+    for r in urgent:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    eng.drain(1)
+    before = eng.stats()["shard1_requests"]
+    got = run_fleet(eng, parked)
+    assert eng.deferred_released == eng.deferred_total == len(parked)
+    assert all(r.finished for r in got.values())
+    # no placement ever targeted the draining (then dead) shard
+    assert eng.stats()["shard1_requests"] == before
+    assert all(eng._req_shard[rid] == 0 for rid in (10, 11))
+    eng.audit()
+
+
+def test_drain_validates(parts):
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.drain(S)
+    eng.fail_shard(0)
+    with pytest.raises(ValueError, match="dead"):
+        eng.drain(0)
+    with pytest.raises(FaultError, match="drainable"):
+        eng.drain(1)                    # last live shard can't drain
+    eng.rejoin(0)
+    assert eng.drain(1) == 0            # empty shard drains immediately
+    assert eng.health.is_dead(1)        # ...straight into shard-down
+    with pytest.raises(ValueError, match="dead"):
+        eng.drain(1)
+    eng.audit()
+
+
+# ------------------------------------------------- evacuation mode upgrade
+
+
+def test_explicit_failover_migrates_watchdog_folds(parts):
+    """The per-request evacuation choice: an EXPLICIT fail_shard leaves
+    the device reachable so in-flight slots page-migrate (zero recompute
+    J); an injected shard_down models a dead device and keeps the PR-8
+    fold — both token-identical to the undisturbed fleet."""
+    _, m, params = parts
+    specs = _reqs(range(4), (6, 13, 9, 16), max_new=20)
+    want = run_fleet(make_fleet(m, params, shards=3),
+                     [dict(r) for r in specs])
+
+    eng = make_fleet(m, params, shards=3)
+    for r in specs:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    eng.fail_shard(0)                   # reachable=True by default
+    got = {r.rid: r for r in eng.run()}
+    assert_matches_oracle(got, want)
+    assert eng.migrations >= 1
+    assert eng.meter.phase("recompute").energy_j == 0.0
+
+    eng2 = make_fleet(m, params, shards=3)
+    eng2.faults = FaultInjector([FaultPlan("shard_down", at_quantum=4,
+                                           shard=0)])
+    got2 = run_fleet(eng2, [dict(r) for r in specs])
+    assert_matches_oracle(got2, want)
+    assert eng2.migrations == 0         # unreachable: fold path only
+    assert eng2.meter.phase("recompute").energy_j > 0.0
+
+
+# ------------------------------------------------------ brownout power cap
+
+
+def test_power_cap_sheds_by_migration_and_gates_placement(parts):
+    """A brownout cap sheds the capped shard's slots onto the survivor
+    by page migration, surfaces in stats while active, refuses placement
+    that would exceed it, and lifts cleanly with watts=None."""
+    _, m, params = parts
+    specs = _reqs(range(2), (9, 13), max_new=24)
+    want = run_fleet(make_fleet(m, params), [dict(r) for r in specs])
+
+    eng = make_fleet(m, params)
+    for r in specs:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    # both shards hold one slot each; cap shard 0 to barely above idle
+    cap = eng.shard_profile[0].idle_w + 1e-6
+    shed = eng.power_cap(0, cap)
+    assert shed >= 1 and eng.migrations >= 1
+    assert eng._modeled_draw(0) <= cap
+    st = eng.stats()
+    assert st["power_cap_events"] == 1
+    assert st["shard0_power_cap_w"] == pytest.approx(cap)
+    got = {r.rid: r for r in eng.run()}
+    assert_matches_oracle(got, want)
+    # the capped shard took no work it couldn't afford
+    assert eng._modeled_draw(0) <= cap
+    eng.power_cap(0, None)
+    assert "shard0_power_cap_w" not in eng.stats()
+    eng.audit()
+
+
+def test_power_cap_sheds_lowest_priority_first(parts):
+    """Victim order is (priority, emitted): when the cap forces a choice
+    the low-priority slot moves and the high-priority one stays."""
+    _, m, params = parts
+    eng = make_fleet(m, params, shards=3, max_batch=2)
+    lo = _reqs([0], [9], max_new=24, priority=0)
+    hi = _reqs([1], [11], max_new=24, priority=2)
+    for r in lo + hi:
+        eng.submit(Request(**r))
+    for _ in range(4):
+        eng.step()
+    s_lo = eng._req_shard[0]
+    if eng._req_shard[1] != s_lo:       # co-locate by capping separately
+        s_lo = eng._req_shard[0]
+    # cap tight enough that exactly one slot must leave s_lo
+    mid = eng._modeled_draw(s_lo)
+    eng.power_cap(s_lo, max(eng.shard_profile[s_lo].idle_w + 1e-6,
+                            mid * 0.5))
+    if eng._req_shard[1] == s_lo and eng._req_shard[0] != s_lo:
+        pytest.fail("high-priority slot shed before the low-priority one")
+    got = {r.rid: r for r in eng.run()}
+    assert all(r.finished for r in got.values())
+    eng.audit()
+
+
+def test_power_cap_validates(parts):
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.power_cap(S, 100.0)
+    with pytest.raises(ValueError, match="idle"):
+        eng.power_cap(0, eng.shard_profile[0].idle_w - 1.0)
+    assert eng.power_cap(0, None) == 0  # lifting a cap never set is fine
+    eng.audit()
+
+
+# ------------------------------------------------------- random campaigns
+
+
+def test_random_admin_campaign_survivable(parts):
+    """Admin events compose with real faults: a seeded campaign drawing
+    from launch faults + shard_down + drain + power_cap is reproducible
+    and every request still reaches a terminal state with the audit
+    green each quantum."""
+    plans = FaultPlan.random(41, n=8, shards=S, admin=True,
+                             max_quantum=10)
+    assert plans == FaultPlan.random(41, n=8, shards=S, admin=True,
+                                     max_quantum=10)
+    assert any(p.site in ADMIN_SITES for p in plans), \
+        "seed 41 should draw at least one admin event"
+    # the default draw (admin off) keeps its pre-PR site universe
+    assert all(p.site in SITES
+               for p in FaultPlan.random(17, n=6, shards=S))
+
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    eng.faults = FaultInjector(plans)
+    got = run_fleet(eng, _reqs(range(6), LENS, max_new=16))
+    assert all(r.finished or r.finish_reason == "cancelled"
+               for r in got.values())
+    fired_admin = [f for f in eng.faults.fired if f[0] in ADMIN_SITES]
+    assert len(fired_admin) >= 1
+    eng.audit()
+
+
+# ------------------------------------------------------------------- audit
+
+
+def test_fleet_conservation_audit_catches_leak(parts):
+    """The PR-10 fleet check is a real check, and it covers what the
+    per-shard books cannot: a page leaked from a QUARANTINED dead pool
+    (whose local invariants are frozen, not re-checked) still breaks
+    Σ free + Σ referenced == S * pool fleet-wide and audit() raises."""
+    _, m, params = parts
+    eng = make_fleet(m, params)
+    got = run_fleet(eng, _reqs(range(2), (6, 9)))
+    assert all(r.finished for r in got.values())
+    eng.fail_shard(0)                   # frozen books skip local checks
+    eng.audit()
+    alloc = eng.caches["paged"]
+    top0 = alloc["top"][0]
+    alloc["top"] = alloc["top"].at[0].add(-1)     # leak one dead page
+    with pytest.raises(RuntimeError, match="fleet-wide page conservation"):
+        eng.audit()
+    alloc["top"] = alloc["top"].at[0].set(top0)
+    eng.audit()
+    # a live-shard leak is caught too (by the tighter refcount check)
+    alloc["ref"] = alloc["ref"].at[1, 0].add(1)
+    with pytest.raises(RuntimeError, match="audit"):
+        eng.audit()
+    alloc["ref"] = alloc["ref"].at[1, 0].add(-1)
+    eng.audit()
